@@ -1,0 +1,35 @@
+"""§5.4 reproduction: geometry-compute Region fusion — memory-op reduction
+on representative long-tail op chains (the paper reports ~3% end-to-end;
+the direct quantity is reads+writes eliminated per chain)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import geometry as g
+
+
+def main() -> None:
+    chains = {
+        "transpose_slice": ([g.region_transpose((64, 64), (1, 0)),
+                             g.region_slice((64, 64), (8, 0), (16, 64))],
+                            [64 * 64, 16 * 64]),
+        "slice_transpose_slice": ([g.region_slice((64, 64), (4, 4), (32, 32)),
+                                   g.region_transpose((32, 32), (1, 0)),
+                                   g.region_slice((32, 32), (0, 8), (32, 8))],
+                                  [32 * 32, 32 * 32, 32 * 8]),
+        "double_transpose": ([g.region_transpose((128, 64), (1, 0)),
+                              g.region_transpose((64, 128), (1, 0))],
+                             [128 * 64] * 2),
+    }
+    for name, (chain, numels) in chains.items():
+        plan = g.fuse_chain(chain, numels)
+        unfused = sum(2 * r.numel for step in chain for r in step)
+        emit(f"geometry_{name}", 0.0,
+             f"stages={plan.num_stages};memops_fused={plan.memory_ops};"
+             f"memops_unfused={unfused};"
+             f"reduction={unfused / plan.memory_ops:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

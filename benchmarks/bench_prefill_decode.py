@@ -1,0 +1,82 @@
+"""Figure 5 reproduction: prefill/decode speed across quantization paths.
+
+The paper compares engines (MNN-LLM vs llama.cpp/MLC-LLM/fastllm) on a
+phone; here the comparison is between this framework's own compute paths
+on the same reduced model — the quantization/layout levers the paper's
+speedups come from:
+
+  bf16      — unquantized baseline ("no engine optimization")
+  W8A16     — int8 weights, float compute (paper's GPU path)
+  W4A16     — int4 weights, float compute (paper's GPU path)
+  W8A8      — int8 weights + int8 activations (paper's CPU path)
+  W4A8      — int4 weights + int8 activations (paper's CPU path)
+
+Derived column: decode-phase HBM-bytes ratio vs bf16 (the memory-bound
+decode speedup predictor — on TPU/phone alike, decode t/s ~ 1/bytes).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.configs import registry
+from repro.core.quantization import QuantConfig
+from repro.models import transformer as T
+
+PROMPT = 64
+DECODE = 16
+
+
+def weight_bytes(cfg) -> int:
+    params = T.abstract_params(cfg, quantized=cfg.quant.weight_bits < 16,
+                               include_embedding=False)
+    total = 0
+    for leaf in jax.tree.leaves(
+            params, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)):
+        if isinstance(leaf, jax.ShapeDtypeStruct):
+            total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+    return total
+
+
+def run(arch: str = "qwen2-7b") -> None:
+    base = registry.reduced(registry.get(arch))
+    paths = {
+        "bf16": QuantConfig(weight_bits=16, act_bits=16, lm_head_bits=16),
+        "W8A16": QuantConfig(weight_bits=8, act_bits=16),
+        "W4A16": QuantConfig(weight_bits=4, act_bits=16),
+        "W8A8": QuantConfig(weight_bits=8, act_bits=8),
+        "W4A8": QuantConfig(weight_bits=4, act_bits=8),
+    }
+    key = jax.random.PRNGKey(0)
+    bf16_bytes = None
+    for name, qc in paths.items():
+        cfg = dataclasses.replace(base, quant=qc)
+        params = T.init_params(cfg, key=key, quantized=qc.weight_bits < 16,
+                               include_embedding=False)
+        emb = jax.random.normal(key, (1, PROMPT, cfg.d_model), jnp.bfloat16)
+        prefill = jax.jit(lambda p, e, _cfg=cfg: T.prefill(
+            p, _cfg, e, max_seq=PROMPT + DECODE))
+        t_prefill = time_fn(prefill, params, emb)
+        _, cache = prefill(params, emb)
+        demb = jax.random.normal(key, (1, 1, cfg.d_model), jnp.bfloat16)
+        decode = jax.jit(lambda p, e, c, _cfg=cfg: T.decode_step(p, _cfg, e, c))
+        t_decode = time_fn(decode, params, demb, cache)
+        wb = weight_bytes(cfg)
+        if name == "bf16":
+            bf16_bytes = wb
+        emit(f"fig5_prefill_{name}", t_prefill / PROMPT * 1e6,
+             f"tok/s={PROMPT / t_prefill:.1f}")
+        emit(f"fig5_decode_{name}", t_decode * 1e6,
+             f"tok/s={1 / t_decode:.1f};bytes_ratio={wb / bf16_bytes:.3f}")
+
+
+def main() -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""§4.2 accuracy: combined-quantization error by scheme.
+
+Asymmetric (Eq. 1) vs symmetric, int8-lm_head prioritization, and KV
+int8-K/fp8-V error — measured as logit fidelity of a reduced model vs the
+float reference (the quantity the paper trades against memory/speed)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import registry
+from repro.core import kv_cache as kvc
+from repro.core import quantization as q
+from repro.models import transformer as T
+
+
+def weight_error() -> None:
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (512, 512)) * 0.05 + 0.01   # asymmetric dist
+    for bits in (4, 8):
+        asym = q.quantize(w, bits)
+        err_a = float(jnp.abs(q.dequantize(asym, jnp.float32) - w).mean())
+        # symmetric baseline: zero fixed at mid-range
+        cmax = 7 if bits == 4 else 127
+        s = jnp.abs(w).max(axis=0) / cmax
+        sym = jnp.clip(jnp.round(w / s), -cmax - 1, cmax) * s
+        err_s = float(jnp.abs(sym - w).mean())
+        emit(f"quant_weight_err_int{bits}", 0.0,
+             f"asymmetric={err_a:.5f};symmetric={err_s:.5f};"
+             f"asym_better={err_s / err_a:.2f}x")
+
+
+def kv_error() -> None:
+    key = jax.random.PRNGKey(1)
+    k = jax.random.normal(key, (1, 128, 4, 64)) * 2
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 128, 4, 64))
+    kq, ks, kz = kvc.quantize_keys(k)
+    kd = kvc.dequantize_keys(kq, ks, kz, jnp.float32)
+    emit("quant_kv_key_int8", 0.0,
+         f"mean_abs_err={float(jnp.abs(kd - k).mean()):.5f}")
+    v8 = q.from_fp8(q.to_fp8(v), jnp.float32)
+    emit("quant_kv_value_fp8", 0.0,
+         f"mean_abs_err={float(jnp.abs(v8 - v).mean()):.5f}")
+
+
+def end_to_end_logits() -> None:
+    base = registry.reduced(registry.get("llama3-8b"))
+    key = jax.random.PRNGKey(3)
+    fparams = T.init_params(base, key=key)
+    emb = jax.random.normal(key, (1, 16, base.d_model), jnp.bfloat16) * 0.1
+    ref, _ = T.prefill(fparams, base, emb, max_seq=16)
+    ref = np.asarray(ref, np.float32)
+    for wb, lm in [(8, 8), (4, 8), (4, 4)]:
+        cfg = dataclasses.replace(base, quant=dataclasses.replace(
+            base.quant, weight_bits=wb, lm_head_bits=lm, act_bits=16))
+        qparams = T.init_params(cfg, key=key, quantized=True,
+                                include_embedding=True)
+        out, _ = T.prefill(qparams, cfg, emb, max_seq=16)
+        out = np.asarray(out, np.float32)
+        corr = np.corrcoef(ref.ravel(), out.ravel())[0, 1]
+        top1 = float(ref[0].argmax() == out[0].argmax())
+        emit(f"quant_e2e_W{wb}_lmhead{lm}", 0.0,
+             f"logit_corr={corr:.4f};top1_match={top1:.0f}")
+
+
+def main() -> None:
+    weight_error()
+    kv_error()
+    end_to_end_logits()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Table 2 reproduction: register-solver tile sizes per CPU ISA, plus the
+TPU BlockSpec analogue and its predicted HBM-traffic win."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import tiling
+
+
+def main() -> None:
+    for isa in tiling.PAPER_ISAS:
+        ep, hp, lp = tiling.solve_cpu_tiles(isa)
+        want = tiling.PAPER_TABLE2[isa.name]
+        match = "MATCH" if (ep, hp, lp) == want else f"want={want}"
+        access = tiling.memory_access_count(1024, 1024, 1024, ep, hp)
+        naive = tiling.memory_access_count(1024, 1024, 1024, 1, 1)
+        emit(f"table2_{isa.name}", 0.0,
+             f"e_p={ep};h_p={hp};l_p={lp};{match};"
+             f"access_reduction={naive / access:.1f}x")
+    # TPU analogue for representative matmuls (prefill GEMM, decode GEMV)
+    for (m, n, k, b) in [(4096, 4096, 4096, 1.0), (32768, 13696, 4096, 1.0),
+                         (1, 8192, 8192, 0.5), (128, 49152, 8192, 0.5)]:
+        bm, bn, bk = tiling.solve_tpu_blocks(m, n, k, in_bytes=b)
+        traffic = tiling.hbm_traffic(m, n, k, bm, bn, bk, b)
+        naive = tiling.hbm_traffic(m, n, k, min(8, m), 128, 128, b)
+        emit(f"tpu_blocks_{m}x{n}x{k}", 0.0,
+             f"bm={bm};bn={bn};bk={bk};traffic_MB={traffic / 1e6:.1f};"
+             f"vs_naive={naive / traffic:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Each emits ``name,us_per_call,derived`` CSV rows:
+  bench_prefill_decode   — Fig. 5 (quantization-path speed comparison)
+  bench_kv_flash         — Fig. 2 (DRAM / Flash / prefetch / exceeding)
+  bench_tile_sizes       — Table 2 (register solver) + TPU BlockSpec solver
+  bench_lora_order       — Table 3 (LoRA computation order)
+  bench_load_balance     — Fig. 4 (balanced vs uniform workload)
+  bench_param_breakdown  — Table 1 (+ §4.1 Flash-embedding arithmetic)
+  bench_quant_accuracy   — §4.2 (quantization error by scheme)
+  bench_geometry         — §5.4 (Region fusion memory-op reduction)
+"""
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.bench_param_breakdown",
+    "benchmarks.bench_tile_sizes",
+    "benchmarks.bench_geometry",
+    "benchmarks.bench_lora_order",
+    "benchmarks.bench_load_balance",
+    "benchmarks.bench_quant_accuracy",
+    "benchmarks.bench_kv_flash",
+    "benchmarks.bench_prefill_decode",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = []
+    for mod in MODULES:
+        try:
+            importlib.import_module(mod).main()
+        except Exception:
+            failed.append(mod)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

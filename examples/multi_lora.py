@@ -1,0 +1,62 @@
+"""Multi-LoRA serving (paper §5.5, C7): online-load two adapters on a
+shared base model, batched per-request adapter selection, and the
+associativity-reordered bypass.
+
+    PYTHONPATH=src python examples/multi_lora.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lora
+
+D_IN, D_OUT, RANK = 256, 256, 8
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    # shared base weight + registry of online-loaded adapters
+    w_base = jax.random.normal(key, (D_IN, D_OUT)) * 0.05
+    reg = lora.LoraRegistry(D_IN, D_OUT, max_rank=RANK, max_adapters=4)
+    rng = np.random.default_rng(0)
+    for name in ("summarize", "translate"):
+        a = rng.normal(size=(D_IN, RANK)).astype(np.float32) * 0.05
+        b = rng.normal(size=(RANK, D_OUT)).astype(np.float32) * 0.05
+        slot = reg.load(name, a, b)
+        print(f"loaded adapter {name!r} -> slot {slot} "
+              f"({a.nbytes + b.nbytes} bytes; base stays shared)")
+    print(f"registry resident: {reg.resident_bytes / 1e6:.2f} MB "
+          f"for {len(reg._names)} adapters")
+
+    # one batch, three requests, three different adapters (incl. none)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 4, D_IN))
+    ids = jnp.asarray([reg.slot("summarize"), reg.slot("translate"),
+                       reg.slot(None)])
+    a_all, b_all = reg.device_tables()
+
+    @jax.jit
+    def forward(x, a_all, b_all, ids):
+        base = x @ w_base
+        # the paper's reordering: A.(B.x), never materializing A@B
+        return base + lora.lora_apply_batched(x, a_all, b_all, ids)
+
+    y = forward(x, a_all, b_all, ids)
+    base_only = x @ w_base
+    deltas = [float(jnp.abs(y[i] - base_only[i]).max()) for i in range(3)]
+    print(f"per-request bypass magnitudes: {deltas[0]:.4f} (summarize), "
+          f"{deltas[1]:.4f} (translate), {deltas[2]:.4f} (no adapter)")
+    assert deltas[2] < 1e-6 < deltas[0]
+
+    # Table 3: why the reorder matters
+    costs = lora.table3_costs(h=3584, r=8)
+    print(f"Table 3 @ h=3584, r=8: naive memory "
+          f"{costs['naive']['memory']:.2e} vs optimized "
+          f"{costs['optimized']['memory']:.2e} "
+          f"({costs['optimized']['memory'] / costs['naive']['memory'] * 100:.2f}%)")
+
+
+if __name__ == "__main__":
+    main()

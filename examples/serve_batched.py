@@ -1,0 +1,55 @@
+"""End-to-end serving driver: balanced batched requests on a quantized
+engine across 4 simulated replica groups (paper C2+C1+C4 together).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.serving import engine as E
+from repro.serving import sampling as SM
+from repro.serving.scheduler import (Request, balance_requests, makespan,
+                                     uniform_requests)
+
+
+def main() -> None:
+    cfg = registry.reduced(registry.get("gemma3-27b"))
+    eng = E.build_engine(cfg, key=jax.random.PRNGKey(1), max_seq=192)
+    rng = np.random.default_rng(7)
+    requests = [Request(uid=i,
+                        prompt_tokens=list(rng.integers(
+                            1, cfg.vocab_size, int(rng.integers(4, 64)))),
+                        max_new_tokens=int(rng.integers(4, 12)))
+                for i in range(12)]
+
+    # C4: length-aware balanced assignment across replica groups
+    n_groups = 4
+    buckets = balance_requests(requests, n_groups)
+    uni = uniform_requests(requests, n_groups)
+    print(f"[C4] makespan balanced={makespan(buckets):.0f} "
+          f"uniform={makespan(uni):.0f} "
+          f"(speedup {makespan(uni) / makespan(buckets):.2f}x)")
+
+    sp = SM.SamplingParams(temperature=0.7, top_k=50, max_new_tokens=12)
+    done = []
+    for gi, bucket in enumerate(buckets):
+        if not bucket:
+            continue
+        out = eng.generate(bucket, sp)
+        done += out
+        print(f"[group {gi}] served {len(out)} requests "
+              f"({sum(len(r.generated) for r in out)} tokens)")
+    s = eng.stats
+    print(f"total: prefill {s.prefill_tokens} tok @ {s.prefill_tps:.0f}/s, "
+          f"decode {s.decode_tokens} tok @ {s.decode_tps:.0f}/s")
+    print(f"gemma3 sliding-window KV: local layers hold only "
+          f"window tokens; embedding served from Flash "
+          f"({s.flash_bytes / 1024:.0f} KiB read)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro — MNN-LLM (DOI 10.1145/3700410.3702126) as a multi-pod JAX/TPU
+training + inference framework.  See README.md / DESIGN.md."""

@@ -1,0 +1,247 @@
+"""Static HLO-text analysis: shapes, FLOPs, bytes, collectives, loop trips.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE regardless
+of trip count (verified empirically), and reports no collective traffic at
+all.  This module parses the optimized HLO text instead:
+
+  * per-op result shapes/bytes (top-N largest tensors — memory debugging),
+  * dot/convolution FLOPs from shapes, multiplied by enclosing while-loop
+    trip counts (scan-over-layers / chunk scans are counted correctly),
+  * collective bytes: operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute, trip-multiplied.
+
+Trip counts come from the canonical scan pattern: the while condition
+compares the induction variable against a constant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# result type is either a scalar/array type or a (possibly /*index=N*/-
+# commented) flat tuple — tuples never nest parens in HLO result types
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\(")
+_CALLEE_RE = re.compile(r"(?:to_apply|body|condition|calls)=%?([\w\.\-]+)")
+# computation header: "%name (params...) -> result {" — params may contain
+# nested tuple parens, so anchor on '->' and the trailing '{'
+_HEADER_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*->.*\{\s*$")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+    @property
+    def result_bytes(self) -> int:
+        return _shape_bytes(self.type_str)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: Dict[str, Instr]
+    order: List[str]
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for line in text.splitlines():
+        header = _HEADER_RE.match(line)
+        if header and "=" not in line.split("(")[0]:
+            current = Computation(header.group(1), {}, [])
+            comps[current.name] = current
+            continue
+        m = _INSTR_RE.match(line)
+        if m and current is not None:
+            name, type_str, op = m.groups()
+            current.instrs[name] = Instr(name, type_str, op, line.strip())
+            current.order.append(name)
+    return comps
+
+
+# ---------------------------------------------------------------------------
+# Trip counts
+# ---------------------------------------------------------------------------
+
+def _while_trip_count(line: str, comps: Dict[str, Computation]) -> int:
+    """Find the while condition computation; the trip count is the integer
+    constant feeding its compare (which may be wrapped in a kLoop fusion:
+    ``ROOT %wrapped_compare = pred[] fusion(%gte, %constant.N)``)."""
+    m = re.search(r"condition=%?([\w\.\-]+)", line)
+    if not m or m.group(1) not in comps:
+        return 1
+    cond = comps[m.group(1)]
+    const_vals = {}
+    for name, ins in cond.instrs.items():
+        cm = re.search(r"constant\((-?\d+)\)", ins.line)
+        if cm:
+            const_vals[name] = int(cm.group(1))
+    for ins in cond.instrs.values():
+        if ins.op in ("compare", "fusion"):
+            ops = re.findall(r"%([\w\.\-]+)", ins.line.split("(", 1)[1])
+            cands = [const_vals[o] for o in ops
+                     if o in const_vals and const_vals[o] > 1]
+            if cands:
+                return max(cands)
+    if const_vals:
+        cands = [v for v in const_vals.values() if v > 1]
+        if cands:
+            return max(cands)
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# FLOPs
+# ---------------------------------------------------------------------------
+
+def _dot_flops(ins: Instr, comp: Computation) -> int:
+    """2 * prod(result dims) * contracted size."""
+    shapes = _shape_dims(ins.type_str)
+    if not shapes:
+        return 0
+    _, rdims = shapes[0]
+    out_elems = 1
+    for d in rdims:
+        out_elems *= d
+    # contracted size: parse lhs operand shape and contracting dims
+    opnd = re.search(r"\(([^)]*)\)", ins.line.split("=", 1)[1])
+    lhs_contract = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    if not opnd:
+        return 0
+    first_operand = opnd.group(1).split(",")[0].strip()
+    om = re.match(r"%?([\w\.\-]+)", first_operand)
+    lhs_shape = None
+    if om and om.group(1) in comp.instrs:
+        lhs_shape = _shape_dims(comp.instrs[om.group(1)].type_str)
+    # fallback: operand may carry inline type like "f32[8,16] %foo"
+    tm = _SHAPE_RE.search(first_operand)
+    if tm:
+        lhs_shape = _shape_dims(first_operand)
+    k = 1
+    if lhs_shape and lhs_contract:
+        dt, dims = lhs_shape[0]
+        for ci in lhs_contract.group(1).split(","):
+            if ci != "" and int(ci) < len(dims):
+                k *= dims[int(ci)]
+    return 2 * out_elems * k
+
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+@dataclasses.dataclass
+class HLOStats:
+    flops: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    dot_bytes: float = 0.0          # operand+result bytes of dots (HBM proxy)
+    all_bytes: float = 0.0          # result bytes of every op (upper bound)
+    largest: List[Tuple[int, str, str]] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def analyze(text: str, entry: Optional[str] = None, top_n: int = 25) -> HLOStats:
+    comps = parse_hlo(text)
+    stats = HLOStats()
+    # entry computation: the one named ...main... or the first ENTRY
+    entry_name = entry
+    if entry_name is None:
+        for name in comps:
+            if "main" in name:
+                entry_name = name
+                break
+        else:
+            entry_name = next(iter(comps))
+    largest: List[Tuple[int, str, str]] = []
+
+    def visit(comp_name: str, mult: float, seen_fusion: bool):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        for name in comp.order:
+            ins = comp.instrs[name]
+            rb = ins.result_bytes
+            if rb > 0 and mult >= 1:
+                largest.append((rb, f"{comp_name}/{name}", ins.op))
+            stats.all_bytes += mult * rb
+            if ins.op == "dot" or ins.op == "convolution":
+                f = _dot_flops(ins, comp)
+                stats.flops += mult * f
+                stats.dot_bytes += mult * rb
+            if ins.op in COLLECTIVES or any(ins.op.startswith(c + "-") for c in COLLECTIVES):
+                base = next(c for c in COLLECTIVES
+                            if ins.op == c or ins.op.startswith(c))
+                # operand bytes: sum operand shapes (from named operands)
+                ob = _operand_bytes(ins, comp)
+                stats.collective_bytes[base] += mult * (ob or rb)
+            if ins.op == "while":
+                trips = _while_trip_count(ins.line, comps)
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                if bm:
+                    visit(bm.group(1), mult * trips, seen_fusion)
+            elif ins.op in ("fusion", "call", "custom-call", "conditional"):
+                for callee in re.findall(
+                        r"(?:calls|to_apply|branch_computations=\{)[=%]?([\w\.\-, %]+)",
+                        ins.line):
+                    for cname in re.split(r"[,\s%]+", callee):
+                        if cname in comps:
+                            visit(cname, mult, True)
+
+    visit(entry_name, 1.0, False)
+    largest.sort(reverse=True)
+    stats.largest = largest[:top_n]
+    return stats
+
+
+def _operand_bytes(ins: Instr, comp: Computation) -> int:
+    inner = ins.line.split("(", 1)[1]
+    inner = inner.split(")", 1)[0]
+    total = 0
+    for part in inner.split(","):
+        om = re.match(r"\s*%?([\w\.\-]+)", part)
+        if om and om.group(1) in comp.instrs:
+            total += comp.instrs[om.group(1)].result_bytes
+        else:
+            tm = _SHAPE_RE.search(part)
+            if tm:
+                total += _shape_bytes(part)
+    return total

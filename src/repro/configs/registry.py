@@ -1,0 +1,75 @@
+"""Architecture registry: ``--arch <id>`` lookup + reduced smoke variants."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import ATTN, LayerPattern, ModelConfig
+from repro.configs import (dbrx_132b, gemma3_27b, glm4_9b, grok_1_314b,
+                           jamba_1_5_large_398b, llama3_8b,
+                           moonshot_v1_16b_a3b, qwen1_5_110b, qwen2_1_5b,
+                           qwen2_7b, qwen2_vl_2b, rwkv6_7b,
+                           seamless_m4t_large_v2)
+
+ASSIGNED = {
+    "seamless-m4t-large-v2": seamless_m4t_large_v2.CONFIG,
+    "moonshot-v1-16b-a3b": moonshot_v1_16b_a3b.CONFIG,
+    "glm4-9b": glm4_9b.CONFIG,
+    "rwkv6-7b": rwkv6_7b.CONFIG,
+    "dbrx-132b": dbrx_132b.CONFIG,
+    "grok-1-314b": grok_1_314b.CONFIG,
+    "qwen1.5-110b": qwen1_5_110b.CONFIG,
+    "jamba-1.5-large-398b": jamba_1_5_large_398b.CONFIG,
+    "gemma3-27b": gemma3_27b.CONFIG,
+    "qwen2-vl-2b": qwen2_vl_2b.CONFIG,
+}
+
+PAPER_MODELS = {
+    "qwen2-7b": qwen2_7b.CONFIG,
+    "qwen2-1.5b": qwen2_1_5b.CONFIG,
+    "llama3-8b": llama3_8b.CONFIG,
+}
+
+ARCHS: Dict[str, ModelConfig] = {**ASSIGNED, **PAPER_MODELS}
+
+
+def get(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """A tiny same-family variant for CPU smoke tests:
+    <=2 layers (preserving the heterogeneous period structure), d_model<=256,
+    <=4 experts, small vocab."""
+    d_model = 128 if cfg.period[0].kind == "rwkv" else 256
+    head_dim = 64
+    num_heads = max(2, d_model // head_dim)
+    num_kv = min(cfg.num_kv_heads, num_heads)
+    if num_heads % num_kv:
+        num_kv = 1
+    period = cfg.period
+    if cfg.name.startswith("gemma3"):
+        period = (LayerPattern("attn", window=16), ATTN)   # one local + one global
+    if cfg.name.startswith("jamba"):
+        period = (LayerPattern("attn"), LayerPattern("mamba", moe=True))
+    num_layers = min(len(period), 2) if len(period) > 1 else 2
+    sections = (8, 12, 12) if cfg.rope_kind == "mrope" else cfg.mrope_sections
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-reduced",
+        num_layers=num_layers,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        d_model=d_model,
+        num_heads=num_heads,
+        num_kv_heads=num_kv,
+        head_dim=head_dim,
+        d_ff=512,
+        vocab_size=512,
+        num_experts=min(cfg.num_experts, 4),
+        experts_per_tok=min(cfg.experts_per_tok, 2),
+        period=period,
+        mrope_sections=sections,
+        rwkv_head_dim=64,
+    )

@@ -1,0 +1,13 @@
+"""Core library: the paper's contributions as composable JAX modules.
+
+C1 quantization.py / kv_cache.py — combined quantization (W4A8/W8A8/W4A16,
+    asymmetric Eq. 1; int8 keys + fp8 values).
+C2 hybrid_storage.py — DRAM-Flash tiering (embedding-on-Flash, KV spill +
+    prefetch).
+C3 tiling.py — hardware-driven data reorder / tile selection.
+C4 (serving/scheduler.py + models/moe.py) — workload balancing.
+C5 precision.py — mixed float precision.
+C6 geometry.py — geometry compute (Region IR + fusion).
+C7 lora.py — multi-LoRA runtime with associativity reordering.
+"""
+from repro.core import geometry, hybrid_storage, kv_cache, lora, precision, quantization, tiling  # noqa: F401

@@ -1,0 +1,263 @@
+"""DRAM-Flash hybrid storage (paper §4.1, Figures 1-2, C2).
+
+TPU adaptation: "DRAM" = device/process memory, "Flash" = a disk-backed
+``numpy.memmap`` with a configurable simulated bandwidth (so the paper's
+UFS-4.0-vs-LPDDR5X crossover math reproduces quantitatively on any disk).
+
+Three pieces:
+
+* ``FlashStore``      — a directory of memmap'd tensors with throttled reads.
+* ``EmbeddingStore``  — the embedding table on Flash. Each decode step
+  gathers one row per sequence (~7 KB for Qwen2-7B in bf16): the paper's
+  headline 15% DRAM saving for ~1.4e-4 latency overhead.
+* ``KVSpillManager``  — KV cache beyond a DRAM threshold spills to Flash;
+  a background prefetch thread loads layer i+1's spilled blocks while
+  layer i computes (the paper overlaps with "the MLP phase of the current
+  layer and the qkv projection of the next layer"). While
+  read_time(spilled) <= compute_time the spill is free (Fig. 2c); beyond
+  that each extra 1K tokens adds ~1 ms (Fig. 2d).
+
+Everything here is host-side runtime machinery (it feeds jitted steps);
+nothing below is traced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import queue
+import threading
+import time
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class FlashSpec:
+    """Simulated Flash characteristics (defaults ~ UFS 4.0 mid-range)."""
+    bandwidth_bytes_per_s: float = 1e9      # paper assumes ~1 GB/s continuous
+    latency_s: float = 15e-6                # paper: ~15us slower than LPDDR5X
+    simulate: bool = True                   # throttle reads to the above
+
+
+class FlashStore:
+    """Directory of memmap'd arrays with bandwidth-throttled reads."""
+
+    def __init__(self, root: str, spec: FlashSpec | None = None):
+        self.root = root
+        self.spec = spec or FlashSpec()
+        os.makedirs(root, exist_ok=True)
+        self._maps: Dict[str, np.memmap] = {}
+        self._meta: Dict[str, tuple] = {}
+        self.bytes_read = 0
+        self.read_time_s = 0.0
+
+    # -- write side (model "conversion"/export time) -----------------------
+    def put(self, name: str, array: np.ndarray) -> None:
+        path = os.path.join(self.root, name + ".bin")
+        mm = np.memmap(path, dtype=array.dtype, mode="w+", shape=array.shape)
+        mm[...] = array
+        mm.flush()
+        self._maps[name] = mm
+        self._meta[name] = (array.shape, array.dtype)
+
+    def open(self, name: str, shape, dtype) -> None:
+        path = os.path.join(self.root, name + ".bin")
+        self._maps[name] = np.memmap(path, dtype=dtype, mode="r", shape=tuple(shape))
+        self._meta[name] = (tuple(shape), np.dtype(dtype))
+
+    # -- read side ----------------------------------------------------------
+    def _throttle(self, nbytes: int) -> None:
+        if not self.spec.simulate:
+            return
+        t = self.spec.latency_s + nbytes / self.spec.bandwidth_bytes_per_s
+        time.sleep(t)
+        self.read_time_s += t
+
+    def read_rows(self, name: str, rows: np.ndarray) -> np.ndarray:
+        """Gather rows[i] along axis 0 (the embedding access pattern)."""
+        mm = self._maps[name]
+        out = np.asarray(mm[rows])
+        nbytes = out.nbytes
+        self.bytes_read += nbytes
+        self._throttle(nbytes)
+        return out
+
+    def read_slice(self, name: str, start: int, stop: int) -> np.ndarray:
+        mm = self._maps[name]
+        out = np.asarray(mm[start:stop])
+        self.bytes_read += out.nbytes
+        self._throttle(out.nbytes)
+        return out
+
+    def nbytes(self, name: str) -> int:
+        shape, dtype = self._meta[name]
+        return int(np.prod(shape)) * np.dtype(dtype).itemsize
+
+
+class EmbeddingStore:
+    """Embedding table on Flash (paper: bf16, never occupies DRAM).
+
+    ``lookup(token_ids)`` returns host float rows ready for device_put; the
+    serving engine feeds them to ``prefill_step``/``serve_step`` which take
+    embeddings (not ids) as input — the faithful consequence of C2.
+    """
+
+    def __init__(self, flash: FlashStore, name: str = "embedding"):
+        self.flash = flash
+        self.name = name
+
+    @classmethod
+    def create(cls, flash: FlashStore, table: np.ndarray,
+               name: str = "embedding") -> "EmbeddingStore":
+        flash.put(name, table)
+        return cls(flash, name)
+
+    def lookup(self, token_ids: np.ndarray) -> np.ndarray:
+        flat = np.asarray(token_ids).reshape(-1)
+        rows = self.flash.read_rows(self.name, flat)
+        return rows.reshape(*np.shape(token_ids), rows.shape[-1])
+
+    @property
+    def dram_bytes_saved(self) -> int:
+        return self.flash.nbytes(self.name)
+
+
+# ---------------------------------------------------------------------------
+# KV spill + prefetch
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SpillBlock:
+    layer: int
+    start: int            # token offset of this block
+    length: int
+
+
+class KVSpillManager:
+    """Spill the oldest KV blocks of each layer to Flash; prefetch ahead.
+
+    The decode loop calls, per layer:
+
+        mgr.prefetch_async(layer + 1)        # overlaps with compute
+        hist = mgr.gather(layer)             # spilled K/V for this layer
+        ... attention over [hist ++ dram part] ...
+        mgr.maybe_spill(layer, k_block, v_block)
+
+    Blocks are ``block_tokens`` long; once the DRAM-resident region exceeds
+    ``dram_budget_tokens``, the oldest block is written to Flash.
+    """
+
+    def __init__(self, flash: FlashStore, num_layers: int, kv_heads: int,
+                 head_dim: int, *, dram_budget_tokens: int,
+                 block_tokens: int = 128,
+                 k_dtype=np.int8, v_dtype=np.uint8):
+        self.flash = flash
+        self.num_layers = num_layers
+        self.kv_heads = kv_heads
+        self.head_dim = head_dim
+        self.dram_budget_tokens = dram_budget_tokens
+        self.block_tokens = block_tokens
+        self.k_dtype = k_dtype
+        self.v_dtype = v_dtype   # fp8 carried as uint8 bits on host
+        self.blocks: Dict[int, list[SpillBlock]] = {i: [] for i in range(num_layers)}
+        self._cache: Dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        self._q: "queue.Queue[Optional[int]]" = queue.Queue()
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._inflight: set[int] = set()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+        self.prefetch_hits = 0
+        self.prefetch_misses = 0
+
+    # -- spill ----------------------------------------------------------------
+    def spill(self, layer: int, k_block: np.ndarray, v_block: np.ndarray,
+              start: int) -> None:
+        """Write one KV block (shape [B, block, H, D]) to Flash."""
+        blk = SpillBlock(layer=layer, start=start, length=k_block.shape[1])
+        name = f"kv_l{layer}_s{start}"
+        self.flash.put(name + "_k", np.ascontiguousarray(k_block, dtype=self.k_dtype))
+        self.flash.put(name + "_v", v_block.view(self.v_dtype)
+                       if v_block.dtype != self.v_dtype else v_block)
+        with self._lock:
+            self.blocks[layer].append(blk)
+            self._cache.pop(layer, None)   # stale
+
+    def spilled_tokens(self, layer: int) -> int:
+        return sum(b.length for b in self.blocks[layer])
+
+    # -- prefetch ---------------------------------------------------------------
+    def _load(self, layer: int) -> tuple[np.ndarray, np.ndarray]:
+        ks, vs = [], []
+        for b in self.blocks[layer]:
+            name = f"kv_l{layer}_s{b.start}"
+            k = np.asarray(self.flash._maps[name + "_k"])
+            self.flash.bytes_read += k.nbytes
+            self.flash._throttle(k.nbytes)
+            ks.append(k)
+            v = np.asarray(self.flash._maps[name + "_v"])
+            self.flash.bytes_read += v.nbytes
+            self.flash._throttle(v.nbytes)
+            vs.append(v)
+        if not ks:
+            return (np.zeros((0,), self.k_dtype), np.zeros((0,), self.v_dtype))
+        return np.concatenate(ks, axis=1), np.concatenate(vs, axis=1)
+
+    def _worker(self) -> None:
+        while True:
+            layer = self._q.get()
+            if layer is None:
+                return
+            data = self._load(layer)
+            with self._cv:
+                self._cache[layer] = data
+                self._inflight.discard(layer)
+                self._cv.notify_all()
+
+    def prefetch_async(self, layer: int) -> None:
+        layer = layer % self.num_layers
+        with self._lock:
+            if layer in self._cache or layer in self._inflight:
+                return
+            if not self.blocks[layer]:
+                return
+            self._inflight.add(layer)
+        self._q.put(layer)
+
+    def gather(self, layer: int) -> tuple[np.ndarray, np.ndarray]:
+        """Spilled K/V for ``layer`` (blocking if the prefetch is in flight;
+        synchronous load on a miss)."""
+        with self._cv:
+            while layer in self._inflight:
+                self._cv.wait()
+            if layer in self._cache:
+                self.prefetch_hits += 1
+                return self._cache.pop(layer)
+        self.prefetch_misses += 1
+        return self._load(layer)
+
+    def close(self) -> None:
+        self._q.put(None)
+        self._thread.join(timeout=5)
+
+
+def plan_embedding_placement(param_sizes: Dict[str, int],
+                             dram_budget_bytes: int) -> Dict[str, str]:
+    """Paper's placement policy: utilization-ordered. Embedding has per-step
+    utilization 1/vocab => Flash first; Layer + lm_head (full utilization
+    every step) stay in DRAM while they fit."""
+    placement: Dict[str, str] = {}
+    # utilization: layers == lm_head (read fully every step) >> embedding
+    # (1/vocab per step).  Fill DRAM high-utilization-first.
+    def utilization(name: str) -> int:
+        return 0 if "embedding" in name else 1
+    used = 0
+    for name in sorted(param_sizes, key=utilization, reverse=True):
+        sz = param_sizes[name]
+        if used + sz <= dram_budget_bytes:
+            placement[name] = "dram"
+            used += sz
+        else:
+            placement[name] = "flash"
+    return placement

@@ -1,0 +1,189 @@
+"""Quantized KV cache (paper §4.2, Fig. 3).
+
+Keys: the Q.K^T reduction dim is head_dim (fixed), so new keys can be
+asymmetric-int8 quantized per (token, head) and stored directly — appending
+never disturbs old scales.
+
+Values: the attn.V reduction dim is seqlen (grows), so int quant would need
+history requantization when the distribution shifts; the paper instead uses
+fp8 so new values are "quantized directly without impacting the existing
+ones".  We use fp8 e4m3 (scale-free cast).
+
+Layout: [batch, max_seq, kv_heads, head_dim] — written once in the final
+(attention-friendly, paper §5.1 last para: "stored directly in the
+rearranged data layout, ensuring no need to rearrange the historical KV").
+
+Sliding-window layers use a ring buffer of size ``window`` (gemma3 local
+layers): position ``p`` lands in slot ``p % window``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as q
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LayerKVCache:
+    """One layer's quantized KV cache.
+
+    k_q:    int8   [B, S, H_kv, D]  (key_bits=8)
+            int8   [B, S, H_kv, D//2]  two nibbles per byte (key_bits=4)
+    k_scale:fp32   [B, S, H_kv]      per (token, head) asymmetric scale
+    k_zero: fp32   [B, S, H_kv]
+    v:      fp8    [B, S, H_kv, D]
+    length: int32  [] tokens currently valid (ring-aware logical length)
+    window: static, 0 => full cache, else ring size == S
+    key_bits: static, 4 or 8 (paper Fig. 3: int4/int8 keys)
+    """
+    k_q: Array
+    k_scale: Array
+    k_zero: Array
+    v: Array
+    length: Array
+    window: int = 0
+    key_bits: int = 8
+
+    def tree_flatten(self):
+        return ((self.k_q, self.k_scale, self.k_zero, self.v, self.length),
+                (self.window, self.key_bits))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        k_q, k_scale, k_zero, v, length = children
+        return cls(k_q, k_scale, k_zero, v, length,
+                   window=aux[0], key_bits=aux[1] if len(aux) > 1 else 8)
+
+    @property
+    def max_seq(self) -> int:
+        return self.k_q.shape[1]
+
+
+def init_layer_cache(batch: int, max_seq: int, kv_heads: int, head_dim: int,
+                     *, window: int = 0, key_bits: int = 8,
+                     value_fp8: bool = True) -> LayerKVCache:
+    """Zero-initialized quantized cache (int8 carrier; int4 keys pack two
+    nibbles per byte along head_dim)."""
+    size = min(window, max_seq) if window else max_seq
+    vdt = q.FP8_DTYPE if value_fp8 else jnp.bfloat16
+    kd = head_dim // 2 if key_bits == 4 else head_dim
+    return LayerKVCache(
+        k_q=jnp.zeros((batch, size, kv_heads, kd), jnp.int8),
+        k_scale=jnp.ones((batch, size, kv_heads), jnp.float32),
+        k_zero=jnp.zeros((batch, size, kv_heads), jnp.float32),
+        v=jnp.zeros((batch, size, kv_heads, head_dim), vdt),
+        length=jnp.zeros((), jnp.int32),
+        window=window, key_bits=key_bits)
+
+
+def abstract_layer_cache(batch: int, max_seq: int, kv_heads: int, head_dim: int,
+                         *, window: int = 0, key_bits: int = 8,
+                         value_fp8: bool = True) -> LayerKVCache:
+    size = min(window, max_seq) if window else max_seq
+    sds = jax.ShapeDtypeStruct
+    vdt = q.FP8_DTYPE if value_fp8 else jnp.bfloat16
+    kd = head_dim // 2 if key_bits == 4 else head_dim
+    return LayerKVCache(
+        k_q=sds((batch, size, kv_heads, kd), jnp.int8),
+        k_scale=sds((batch, size, kv_heads), jnp.float32),
+        k_zero=sds((batch, size, kv_heads), jnp.float32),
+        v=sds((batch, size, kv_heads, head_dim), vdt),
+        length=sds((), jnp.int32),
+        window=window, key_bits=key_bits)
+
+
+def quantize_keys(k: Array, bits: int = 8) -> tuple[Array, Array, Array]:
+    """Asymmetric int4/int8 per-(token, head) over head_dim (the fixed
+    reduction dim, Fig. 3).  int4 packs two nibbles per int8 byte."""
+    kmin = k.min(axis=-1).astype(jnp.float32)
+    kmax = k.max(axis=-1).astype(jnp.float32)
+    levels = 15.0 if bits == 4 else 255.0
+    lo = 0.0 if bits == 4 else -128.0
+    hi = 15.0 if bits == 4 else 127.0
+    scale = (kmax - kmin) / levels
+    scale = jnp.where(scale == 0, 1.0, scale)
+    zero = lo - kmin / scale
+    kq = jnp.round(k.astype(jnp.float32) / scale[..., None] + zero[..., None])
+    kq = jnp.clip(kq, lo, hi).astype(jnp.int8)
+    if bits == 4:
+        kq = q.pack_int4(kq)
+    return kq, scale, zero
+
+
+def dequantize_keys(kq: Array, scale: Array, zero: Array,
+                    dtype=jnp.bfloat16, bits: int = 8) -> Array:
+    if bits == 4:
+        kq = q.unpack_int4(kq)
+    return ((kq.astype(jnp.float32) - zero[..., None]) * scale[..., None]).astype(dtype)
+
+
+def append(cache: LayerKVCache, k_new: Array, v_new: Array,
+           pos: Array) -> LayerKVCache:
+    """Append ``t`` new tokens' K/V at positions [pos, pos+t).
+
+    Quantizes on the way in. Ring-buffer aware for windowed layers. ``pos``
+    is a scalar int32 (same for all batch rows; the serving engine aligns
+    requests to slot-synchronous decode).
+    """
+    b, t, h, d = k_new.shape
+    kq, ks, kz = quantize_keys(k_new, bits=cache.key_bits)
+    v_cast = v_new.astype(cache.v.dtype) if cache.v.dtype != jnp.float8_e4m3fn \
+        else q.to_fp8(v_new)
+    size = cache.max_seq
+    if cache.window:
+        # ring buffer: slot = position mod window. For t tokens this is a
+        # scatter; decode (t==1) is the hot path and stays a dynamic slice.
+        if t == 1:
+            slot = jnp.mod(pos, size)
+            k_q = jax.lax.dynamic_update_slice(cache.k_q, kq, (0, slot, 0, 0))
+            k_s = jax.lax.dynamic_update_slice(cache.k_scale, ks, (0, slot, 0))
+            k_z = jax.lax.dynamic_update_slice(cache.k_zero, kz, (0, slot, 0))
+            v = jax.lax.dynamic_update_slice(cache.v, v_cast, (0, slot, 0, 0))
+        else:
+            slots = jnp.mod(pos + jnp.arange(t), size)
+            k_q = cache.k_q.at[:, slots].set(kq)
+            k_s = cache.k_scale.at[:, slots].set(ks)
+            k_z = cache.k_zero.at[:, slots].set(kz)
+            v = cache.v.at[:, slots].set(v_cast)
+    else:
+        k_q = jax.lax.dynamic_update_slice(cache.k_q, kq, (0, pos, 0, 0))
+        k_s = jax.lax.dynamic_update_slice(cache.k_scale, ks, (0, pos, 0))
+        k_z = jax.lax.dynamic_update_slice(cache.k_zero, kz, (0, pos, 0))
+        v = jax.lax.dynamic_update_slice(cache.v, v_cast, (0, pos, 0, 0))
+    return LayerKVCache(k_q=k_q, k_scale=k_s, k_zero=k_z, v=v,
+                        length=pos + t, window=cache.window,
+                        key_bits=cache.key_bits)
+
+
+def valid_mask(cache: LayerKVCache, pos: Array) -> Array:
+    """[S] bool — which cache slots hold live tokens given current pos
+    (number of tokens written so far is pos; ring slots wrap)."""
+    size = cache.max_seq
+    idx = jnp.arange(size)
+    if cache.window:
+        n_valid = jnp.minimum(pos, size)
+        # slots [0, n_valid) valid until wrap; after wrap all valid
+        return idx < jnp.maximum(n_valid, jnp.where(pos >= size, size, 0))
+    return idx < pos
+
+
+def slot_positions(cache: LayerKVCache, pos: Array) -> Array:
+    """[S] int32 — the absolute token position stored in each slot (for
+    relative-position masks/RoPE bookkeeping); invalid slots get -1."""
+    size = cache.max_seq
+    idx = jnp.arange(size)
+    if cache.window:
+        # slot s holds position p where p ≡ s (mod size) and p is the
+        # largest such p < pos.
+        k = (pos - 1 - idx) // size
+        p = idx + k * size
+        p = jnp.where((p >= 0) & (p < pos), p, -1)
+        return p
+    return jnp.where(idx < pos, idx, -1)

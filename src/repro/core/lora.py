@@ -1,0 +1,123 @@
+"""Multi-LoRA runtime (paper §5.5, C7).
+
+A base model plus K online-loaded adapters sharing base weights.  The
+bypass computation is ordered by matmul associativity:
+
+    naive:     y = (A_l @ B_l) @ x        cost  r*h^2 + h^3   (Table 3 left)
+    optimized: y = A_l @ (B_l @ x)        cost  2*r*h^2       (Table 3 right)
+
+(with A_l: [h, r], B_l: [r, h], x: [h, h] in the paper's Table-3 setting;
+for token activations x: [..., h] the same reordering applies and the win
+is the h x h intermediate never materializing.)
+
+``lora_apply`` is the jit-side op; ``LoraRegistry`` is the host-side adapter
+store supporting online load/unload and per-request adapter selection
+(batched multi-LoRA: gather adapter weights by request id, one einsum).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class LoraWeights:
+    """One adapter for one Linear: delta W = a @ b, a: [in, r], b: [r, out]."""
+    a: Array
+    b: Array
+
+    @property
+    def rank(self) -> int:
+        return self.a.shape[-1]
+
+
+def lora_apply(x: Array, a: Array, b: Array, *, optimized: bool = True,
+               scale: float = 1.0) -> Array:
+    """Bypass output for activations x: [..., in].
+
+    optimized=True  -> x @ a then @ b: never forms the [in, out] delta.
+    optimized=False -> the paper's naive order (materializes a @ b);
+    kept for the Table-3 benchmark.
+    """
+    if optimized:
+        return (x @ a) @ b * scale
+    delta = a @ b                      # [in, out]  (the expensive order)
+    return x @ delta * scale
+
+
+def lora_apply_batched(x: Array, a_all: Array, b_all: Array,
+                       adapter_ids: Array, *, scale: float = 1.0) -> Array:
+    """Per-request adapters in one batch.
+
+    x: [B, T, in]; a_all: [K, in, r]; b_all: [K, r, out];
+    adapter_ids: [B] int32 into K (0 may be an identity/zero adapter).
+    """
+    a = a_all[adapter_ids]             # [B, in, r]
+    b = b_all[adapter_ids]             # [B, r, out]
+    xa = jnp.einsum("bti,bir->btr", x, a)
+    return jnp.einsum("btr,bro->bto", xa, b) * scale
+
+
+def table3_costs(h: int, r: int) -> Dict[str, Dict[str, float]]:
+    """The paper's Table 3 computation/memory model (x is [h, h])."""
+    return {
+        "naive":     {"compute": r * h * h + h ** 3,
+                      "memory": 2 * (r * h * h + h * h + h ** 3)},
+        "optimized": {"compute": 2 * r * h * h,
+                      "memory": 4 * r * h * h + h * h + r * h},
+    }
+
+
+class LoraRegistry:
+    """Host-side store of online-loaded adapters (paper: LoRA weights are
+    small, so keeping several resident costs little memory)."""
+
+    def __init__(self, in_dim: int, out_dim: int, max_rank: int,
+                 max_adapters: int = 8):
+        self.in_dim, self.out_dim = in_dim, out_dim
+        self.max_rank = max_rank
+        self.max_adapters = max_adapters
+        # slot 0 is the identity (zero) adapter
+        self._a = np.zeros((max_adapters, in_dim, max_rank), np.float32)
+        self._b = np.zeros((max_adapters, max_rank, out_dim), np.float32)
+        self._names: Dict[str, int] = {}
+        self._free = list(range(1, max_adapters))
+
+    def load(self, name: str, a: np.ndarray, b: np.ndarray) -> int:
+        """Online-load an adapter; pads rank up to max_rank. Returns slot."""
+        if name in self._names:
+            slot = self._names[name]
+        else:
+            if not self._free:
+                raise RuntimeError("adapter slots exhausted")
+            slot = self._free.pop(0)
+            self._names[name] = slot
+        r = a.shape[-1]
+        assert r <= self.max_rank, (r, self.max_rank)
+        self._a[slot] = 0.0
+        self._b[slot] = 0.0
+        self._a[slot, :, :r] = a
+        self._b[slot, :r, :] = b
+        return slot
+
+    def unload(self, name: str) -> None:
+        slot = self._names.pop(name)
+        self._a[slot] = 0.0
+        self._b[slot] = 0.0
+        self._free.insert(0, slot)
+
+    def slot(self, name: Optional[str]) -> int:
+        return 0 if name is None else self._names[name]
+
+    def device_tables(self) -> tuple[Array, Array]:
+        return jnp.asarray(self._a), jnp.asarray(self._b)
+
+    @property
+    def resident_bytes(self) -> int:
+        return self._a.nbytes + self._b.nbytes

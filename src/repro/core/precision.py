@@ -1,0 +1,67 @@
+"""Mixed float precision policy (paper §5.3, C5).
+
+Policy (kept faithfully, fp16 -> bf16 on TPU):
+  * matmuls in the low-precision compute dtype with **fp32 accumulation**
+    (``preferred_element_type``),
+  * softmax always fp32,
+  * the 1/sqrt(d_k) attention scale applied to the **query before** Q.K^T
+    (shrinks the accumulation range so a half-precision Q.K^T cannot
+    overflow — the paper's fix for fp16's 65504 ceiling),
+  * residual stream / norms in fp32-or-bf16 per policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    compute_dtype: jnp.dtype = jnp.bfloat16     # fp16 on mobile, bf16 on TPU
+    accum_dtype: jnp.dtype = jnp.float32
+    softmax_dtype: jnp.dtype = jnp.float32      # paper: softmax is precision
+                                                # sensitive -> always fp32
+    prescale_query: bool = True                 # divide q by sqrt(d_k) first
+
+    def cast_in(self, x: Array) -> Array:
+        return x.astype(self.compute_dtype)
+
+
+DEFAULT_POLICY = PrecisionPolicy()
+# An unsafe policy used by tests/benchmarks to demonstrate the overflow the
+# paper's prescaling avoids (fp16 + post-scaling).
+UNSAFE_FP16_POLICY = PrecisionPolicy(compute_dtype=jnp.float16,
+                                     accum_dtype=jnp.float16,
+                                     softmax_dtype=jnp.float16,
+                                     prescale_query=False)
+
+
+def matmul(a: Array, b: Array, policy: PrecisionPolicy = DEFAULT_POLICY) -> Array:
+    return jnp.matmul(a.astype(policy.compute_dtype),
+                      b.astype(policy.compute_dtype),
+                      preferred_element_type=policy.accum_dtype)
+
+
+def softmax(x: Array, axis: int = -1,
+            policy: PrecisionPolicy = DEFAULT_POLICY) -> Array:
+    y = jax.nn.softmax(x.astype(policy.softmax_dtype), axis=axis)
+    return y
+
+
+def attention_scores(q: Array, k: Array, d_k: int,
+                     policy: PrecisionPolicy = DEFAULT_POLICY) -> Array:
+    """Q.K^T with the paper's pre-scaling. q: [..., T, D], k: [..., S, D]."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d_k, jnp.float32))
+    if policy.prescale_query:
+        q = (q.astype(policy.accum_dtype) * scale).astype(policy.compute_dtype)
+        s = jnp.einsum("...td,...sd->...ts", q, k.astype(policy.compute_dtype),
+                       preferred_element_type=policy.accum_dtype)
+        return s
+    s = jnp.einsum("...td,...sd->...ts", q.astype(policy.compute_dtype),
+                   k.astype(policy.compute_dtype),
+                   preferred_element_type=policy.accum_dtype)
+    return s * scale.astype(s.dtype)

@@ -1,0 +1,123 @@
+"""Pallas prefill flash attention (causal / sliding-window, GQA).
+
+The prefill-phase hot loop (paper §2.1: prefill is compute-bound): blockwise
+Q.K^T with online softmax entirely in VMEM — the [T, S] score matrix never
+touches HBM.  Mixed precision per C5: the query arrives pre-scaled, the
+softmax state (m, l, acc) is fp32 scratch.
+
+Grid (B, Hkv, nQ, nK), K innermost; the causal mask lets fully-masked
+K blocks short-circuit (pl.when) — the TPU analogue of skipping upper
+triangle tiles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, n_k: int, bq: int, bk: int, seq_len: int, window: int,
+            causal: bool):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # visible iff any (qpos >= kpos) in the tile and window reach
+    needed = (not causal) or (k_start <= q_start + bq - 1)
+
+    @pl.when(needed)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)                  # [bq, G, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)               # [bk, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        G = q.shape[1]
+        s = jax.lax.dot_general(
+            q.reshape(bq * G, -1), k,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)              # [bq*G, bk]
+        qpos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, G, bk), 0).reshape(bq * G, bk)
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (bq * G, bk), 1)
+        mask = kpos < seq_len
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                                  # [bq*G, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)              # [bq*G, D]
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        G = q_ref.shape[3]
+        D = acc_ref.shape[-1]
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.reshape(bq, G, D).astype(o_ref.dtype)
+
+
+def flash_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                            causal: bool = True, window: int = 0,
+                            bq: int = 256, bk: int = 256,
+                            interpret: bool = True) -> jax.Array:
+    """q: [B, T, H, D] PRE-SCALED (C5); k/v: [B, S, Hkv, D].
+    Returns [B, T, H, D] fp32."""
+    B, T, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    bq = min(bq, T)
+    bk = min(bk, S)
+    padq = (-T) % bq
+    padk = (-S) % bk
+    if padq:
+        q = jnp.pad(q, ((0, 0), (0, padq), (0, 0), (0, 0)))
+    if padk:
+        k = jnp.pad(k, ((0, 0), (0, padk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, padk), (0, 0), (0, 0)))
+    Tp, Sp = q.shape[1], k.shape[1]
+    nq, nk = Tp // bq, Sp // bk
+    qg = q.reshape(B, Tp, Hkv, G, D).transpose(0, 2, 1, 3, 4)  # [B,Hkv,T,G,D]
+
+    kernel = functools.partial(_kernel, n_k=nk, bq=bq, bk=bk, seq_len=S,
+                               window=window, causal=causal)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, G, D), lambda b, h, i, j: (b, h, i, 0, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j: (b, j, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j: (b, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, G, D),
+                               lambda b, h, i, j: (b, h, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, nq * bq, G, D), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bq * G, 1), jnp.float32),
+            pltpu.VMEM((bq * G, 1), jnp.float32),
+            pltpu.VMEM((bq * G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v)
+    out = out.transpose(0, 2, 1, 3, 4).reshape(B, Tp, H, D)
+    return out[:, :T]

@@ -1,0 +1,100 @@
+"""Pallas decode attention with fused KV dequantization (paper C1 + C5).
+
+One query token per sequence attends over the quantized cache:
+int8 keys (per-token/head asymmetric scales) and fp8 values are dequantized
+*inside* the kernel — HBM traffic is the quantized bytes, which is the whole
+point of the paper's KV quantization in the memory-bound decode phase.
+
+Mixed precision per the paper: the query arrives pre-scaled by 1/sqrt(D);
+softmax runs in fp32 (online, flash-decoding style over S blocks).
+
+Grid (B, Hkv, nS) with S innermost; online-softmax state (m, l, acc) lives
+in VMEM scratch across the S steps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, kq_ref, ks_ref, kz_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, n_s: int, bs: int):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                # [G, D] f32 (pre-scaled)
+    kq = kq_ref[0, :, 0]                           # [bs, D] int8
+    ks = ks_ref[0, :, 0]                           # [bs]
+    kz = kz_ref[0, :, 0]
+    v = v_ref[0, :, 0].astype(jnp.float32)         # [bs, D]
+    k = (kq.astype(jnp.float32) - kz[:, None]) * ks[:, None]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # [G, bs]
+    pos = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = pos < len_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # [G, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                         # [G, bs]
+    corr = jnp.exp(m_prev - m_new)                 # [G, 1]
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)  # [G, D]
+
+    @pl.when(s_idx == n_s - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def quant_decode_attention(q: jax.Array, k_q: jax.Array, k_scale: jax.Array,
+                           k_zero: jax.Array, v: jax.Array,
+                           length: jax.Array, *, block_s: int = 512,
+                           interpret: bool = True) -> jax.Array:
+    """q: f32 [B, H, D] pre-scaled; k_q int8 [B, S, Hkv, D];
+    k_scale/k_zero f32 [B, S, Hkv]; v fp8/bf16 [B, S, Hkv, D];
+    length: int32 [1] valid prefix.  Returns f32 [B, H, D]."""
+    B, H, D = q.shape
+    S, Hkv = k_q.shape[1], k_q.shape[2]
+    G = H // Hkv
+    bs = min(block_s, S)
+    assert S % bs == 0, (S, bs)
+    n_s = S // bs
+    qg = q.reshape(B, Hkv, G, D)
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32).reshape(-1)[:1], (1,))
+
+    kernel = functools.partial(_kernel, n_s=n_s, bs=bs)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, n_s),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),           # length scalar
+            pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, bs, 1), lambda b, h, s: (b, s, h)),
+            pl.BlockSpec((1, bs, 1), lambda b, h, s: (b, s, h)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, s: (b, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),    # running max
+            pltpu.VMEM((G, 1), jnp.float32),    # running denom
+            pltpu.VMEM((G, D), jnp.float32),    # running numerator
+        ],
+        interpret=interpret,
+    )(length, qg, k_q, k_scale, k_zero, v)
+    return out.reshape(B, H, D)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def w4a8_matmul_ref(xq: Array, sx: Array, wq: Array, w_scale: Array,
+                    w_zero: Array) -> Array:
+    """W4A8 integer matmul oracle.
+
+    xq: int8 [M, K] (symmetric per-row quantized activations, scale sx [M,1])
+    wq: int8 [K, N] UNPACKED int4 values in [0, 15]
+    w_scale/w_zero: fp32 [N] per-output-channel asymmetric params
+    y = sx * w_scale * (xq @ wq - w_zero * rowsum(xq))
+    """
+    acc = jax.lax.dot_general(xq, wq, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    rowsum = jnp.sum(xq.astype(jnp.int32), axis=-1, keepdims=True)
+    y = w_scale[None, :] * (acc.astype(jnp.float32)
+                            - w_zero[None, :] * rowsum.astype(jnp.float32))
+    return (y * sx).astype(jnp.float32)
+
+
+def w8a8_matmul_ref(xq: Array, sx: Array, wq: Array, w_scale: Array,
+                    w_zero: Array) -> Array:
+    """Same contract with int8 weights in [-128, 127]."""
+    return w4a8_matmul_ref(xq, sx, wq, w_scale, w_zero)
+
+
+def quant_decode_attention_ref(q: Array, k_q: Array, k_scale: Array,
+                               k_zero: Array, v_fp8: Array,
+                               length: Array) -> Array:
+    """Decode attention oracle with fused dequant.
+
+    q: fp32 [B, H, D] (already pre-scaled by 1/sqrt(D) — paper C5)
+    k_q: int8 [B, S, Hkv, D]; k_scale/k_zero: fp32 [B, S, Hkv]
+    v_fp8: fp8/bf16 [B, S, Hkv, D]
+    length: int32 — valid prefix of the cache.
+    Returns fp32 [B, H, D].
+    """
+    B, H, D = q.shape
+    S, Hkv = k_q.shape[1], k_q.shape[2]
+    G = H // Hkv
+    k = (k_q.astype(jnp.float32) - k_zero[..., None]) * k_scale[..., None]
+    v = v_fp8.astype(jnp.float32)
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k)
+    mask = jnp.arange(S)[None, None, None, :] < length
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v)
+    return o.reshape(B, H, D)
+
+
+def rmsnorm_ref(x: Array, weight: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * weight[None, :]).astype(x.dtype)

@@ -1,0 +1,161 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape), lower + compile the right step
+function (train_step / prefill / serve_step) against the production mesh
+(16x16 single-pod, and 2x16x16 multi-pod), then dump:
+  * memory_analysis()  — proves the case fits per-chip HBM,
+  * cost_analysis()    — XLA's flop/byte counts (reference),
+  * the optimized HLO  — parsed by repro.analysis.roofline (which corrects
+    for while-loop trip counts and sums collective operand bytes).
+
+Artifacts land in benchmarks/artifacts/dryrun/<case>.json (+ .hlo.txt).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape prefill_32k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod] [--skip-done]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs import registry
+from repro.launch import mesh as M
+from repro.launch import specs as SP
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "benchmarks", "artifacts", "dryrun")
+
+
+def case_id(arch: str, shape: str, multi_pod: bool) -> str:
+    return f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}"
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = ARTIFACTS, save_hlo: bool = True) -> dict:
+    cfg = registry.get(arch)
+    shape = INPUT_SHAPES[shape_name]
+    cid = case_id(arch, shape_name, multi_pod)
+    reason = SP.skip_reason(cfg, shape)
+    if reason:
+        rec = {"case": cid, "status": "SKIP", "reason": reason}
+        _save(out_dir, cid, rec)
+        return rec
+    t0 = time.time()
+    mesh = M.make_production_mesh(multi_pod=multi_pod)
+    case = SP.build_case(cfg, shape)
+    in_sh = tuple(M.tree_shardings(mesh, s, multi_pod) for s in case.in_specs)
+    out_sh = M.tree_shardings(mesh, case.out_specs, multi_pod)
+    with mesh:
+        jitted = jax.jit(case.step_fn, in_shardings=in_sh,
+                         out_shardings=out_sh)
+        lowered = jitted.lower(*case.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    n_chips = 512 if multi_pod else 256
+    mem_rec = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+    }
+    cost_rec = {k: cost.get(k) for k in
+                ("flops", "bytes accessed", "transcendentals")} if cost else {}
+    rec = {
+        "case": cid, "status": "OK",
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_rec,
+        "cost_analysis": cost_rec,
+    }
+    hlo_path = None
+    if save_hlo:
+        hlo_path = os.path.join(out_dir, cid + ".hlo.txt")
+        os.makedirs(out_dir, exist_ok=True)
+        with open(hlo_path, "w") as f:
+            f.write(compiled.as_text())
+        rec["hlo_path"] = hlo_path
+    _save(out_dir, cid, rec)
+    return rec
+
+
+def _save(out_dir: str, cid: str, rec: dict) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, cid + ".json"), "w") as f:
+        json.dump(rec, f, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--no-hlo", action="store_true")
+    ap.add_argument("--out", default=ARTIFACTS)
+    args = ap.parse_args()
+
+    archs = list(registry.ASSIGNED) if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multipod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cid = case_id(arch, shape, mp)
+                path = os.path.join(args.out, cid + ".json")
+                if args.skip_done and os.path.exists(path):
+                    with open(path) as f:
+                        prev = json.load(f)
+                    if prev.get("status") in ("OK", "SKIP"):
+                        print(f"[skip-done] {cid}: {prev['status']}", flush=True)
+                        results.append(prev)
+                        continue
+                print(f"[dryrun] {cid} ...", flush=True)
+                try:
+                    rec = run_case(arch, shape, mp, out_dir=args.out,
+                                   save_hlo=not args.no_hlo)
+                except Exception as e:
+                    rec = {"case": cid, "status": "FAIL",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()}
+                    _save(args.out, cid, rec)
+                status = rec["status"]
+                extra = ""
+                if status == "OK":
+                    extra = (f" lower={rec['lower_s']}s compile={rec['compile_s']}s"
+                             f" temp={_gb(rec['memory_analysis']['temp_bytes'])}"
+                             f" args={_gb(rec['memory_analysis']['argument_bytes'])}")
+                elif status == "FAIL":
+                    extra = " " + rec["error"][:200]
+                print(f"[dryrun] {cid}: {status}{extra}", flush=True)
+                results.append(rec)
+    ok = sum(r["status"] == "OK" for r in results)
+    sk = sum(r["status"] == "SKIP" for r in results)
+    fl = sum(r["status"] == "FAIL" for r in results)
+    print(f"\n== dry-run summary: {ok} OK, {sk} SKIP, {fl} FAIL / {len(results)}")
+    if fl:
+        raise SystemExit(1)
+
+
+def _gb(x):
+    return f"{x / 2**30:.2f}GiB" if isinstance(x, (int, float)) else "?"
+
+
+if __name__ == "__main__":
+    main()

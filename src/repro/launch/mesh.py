@@ -1,0 +1,61 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module constants) so importing never touches jax
+device state.  The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+BEFORE any jax import (see dryrun.py) — tests/benches see 1 device.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2x16x16 = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh():
+    """Whatever the host actually has (tests/examples: 1 CPU device)."""
+    n = jax.device_count()
+    return jax.make_mesh((1, n), ("data", "model"), axis_types=_auto(2))
+
+
+def adapt_spec(spec: P, multi_pod: bool) -> P:
+    """Fold the 'pod' axis into every 'data' usage on the multi-pod mesh:
+    'data' -> ('pod', 'data')."""
+    if not multi_pod:
+        return spec
+    def fold(entry):
+        if entry == "data":
+            return ("pod", "data")
+        if isinstance(entry, tuple):
+            return tuple(("pod" if e == "data" else e) for e in entry) + \
+                (("data",) if "data" in entry else ())
+        return entry
+    out = []
+    for entry in spec:
+        if entry == "data":
+            out.append(("pod", "data"))
+        elif isinstance(entry, tuple) and "data" in entry:
+            out.append(tuple(e for e in entry if e != "data") + ("pod", "data"))
+        else:
+            out.append(entry)
+    return P(*out)
+
+
+def tree_shardings(mesh, spec_tree, multi_pod: bool = False):
+    """PartitionSpec tree -> NamedSharding tree."""
+    def to_sharding(s):
+        s = s if isinstance(s, P) else P()
+        return NamedSharding(mesh, adapt_spec(s, multi_pod))
+    return jax.tree.map(to_sharding, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,66 @@
+"""Serving driver: batched requests against a quantized engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
+      --requests 8 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.serving import engine as E
+from repro.serving import sampling as SM
+from repro.serving.scheduler import Request, balance_requests, makespan, uniform_requests
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = registry.get(args.arch)
+    if args.reduced:
+        cfg = registry.reduced(cfg)
+    print(f"[serve] arch={cfg.name} quant={cfg.quant.tag()} "
+          f"(embedding on Flash, int8-K/fp8-V KV cache)")
+    eng = E.build_engine(cfg, key=jax.random.PRNGKey(args.seed),
+                         max_seq=args.max_seq)
+    rng = np.random.default_rng(args.seed)
+    reqs = [Request(uid=i,
+                    prompt_tokens=list(rng.integers(
+                        1, cfg.vocab_size, size=int(rng.integers(4, 32)))),
+                    max_new_tokens=args.max_new)
+            for i in range(args.requests)]
+    # C4: balanced assignment report (vs uniform)
+    bal = balance_requests(reqs, 4)
+    uni = uniform_requests(reqs, 4)
+    print(f"[serve] C4 makespan: balanced={makespan(bal):.0f} "
+          f"uniform={makespan(uni):.0f}")
+    src = None
+    if cfg.is_encdec:
+        src = np.asarray(rng.normal(size=(len(reqs), 16, cfg.d_model)) * 0.02,
+                         np.float32)
+    out = eng.generate(reqs, SM.SamplingParams(
+        temperature=args.temperature, top_k=50, max_new_tokens=args.max_new),
+        src_embeds=src)
+    for r in out[:4]:
+        print(f"[serve] req {r.uid}: prompt {len(r.prompt_tokens)} toks -> "
+              f"{r.generated}")
+    s = eng.stats
+    print(f"[serve] prefill {s.prefill_tokens} toks @ {s.prefill_tps:.1f} t/s; "
+          f"decode {s.decode_tokens} toks @ {s.decode_tps:.1f} t/s; "
+          f"flash reads {s.flash_bytes / 1024:.1f} KiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,237 @@
+"""Input ShapeDtypeStructs + PartitionSpecs for every (arch x input-shape).
+
+``build_case(cfg, shape)`` returns a DryRunCase with:
+  * step_fn(params/opt/batch...) — the function to lower,
+  * args — ShapeDtypeStruct pytree,
+  * in_specs / out_specs — PartitionSpec pytrees.
+
+Step selection per shape.kind:
+  train   -> train_step (tokens or embeds per frontend)
+  prefill -> transformer.prefill (embeds input: rows come from Flash, C2)
+  decode  -> transformer.decode_step (one token, cache at seq_len)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, LayerPattern, ModelConfig
+from repro.core import kv_cache as kvc
+from repro.models import ssm as S
+from repro.models import transformer as T
+from repro.training import optimizer as O
+from repro.training import train_loop as TL
+
+SDS = jax.ShapeDtypeStruct
+MESH_DATA = 16
+MESH_MODEL = 16
+
+
+@dataclasses.dataclass
+class DryRunCase:
+    name: str
+    step_fn: Callable
+    args: tuple
+    in_specs: tuple
+    out_specs: Any
+    static: dict
+
+
+def _batch_axis(global_batch: int) -> Optional[str]:
+    return "data" if global_batch % MESH_DATA == 0 else None
+
+
+def kv_spec(cfg: ModelConfig, shape: InputShape) -> P:
+    """Spec for stacked KV tensors [count, B, S, H_kv, D]."""
+    b_ax = _batch_axis(shape.global_batch)
+    heads_ok = cfg.num_kv_heads % MESH_MODEL == 0
+    if b_ax:
+        if heads_ok:
+            return P(None, b_ax, None, "model", None)
+        return P(None, b_ax, "model", None, None)       # seq on model
+    # long_500k (batch 1): shard the sequence hard
+    if heads_ok:
+        return P(None, None, "data", "model", None)
+    return P(None, None, ("data", "model"), None, None)
+
+
+def _cache_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    b_ax = _batch_axis(shape.global_batch)
+    kspec = kv_spec(cfg, shape)
+    sz_spec = P(*kspec[:-1])
+
+    def attn_spec(window: int) -> kvc.LayerKVCache:
+        return kvc.LayerKVCache(k_q=kspec, k_scale=sz_spec, k_zero=sz_spec,
+                                v=kspec, length=P(), window=window,
+                                key_bits=cfg.quant.kv_key_bits)
+
+    def mamba_spec() -> dict:
+        return {"conv": P(None, b_ax, None, "model"),
+                "ssm": P(None, b_ax, "model", None)}
+
+    def rwkv_spec() -> dict:
+        return {"x_tm": P(None, b_ax, None),
+                "x_cm": P(None, b_ax, None),
+                "wkv": P(None, b_ax, "model", None, None)}
+
+    stacks = []
+    for patterns, count in cfg.layer_plan():
+        elems = []
+        for pat in patterns:
+            if pat.kind == "attn":
+                elems.append(attn_spec(pat.window))
+            elif pat.kind == "mamba":
+                elems.append(mamba_spec())
+            else:
+                elems.append(rwkv_spec())
+        stacks.append(tuple(elems))
+    specs: dict = {"stacks": tuple(stacks), "pos": P()}
+    if cfg.is_encdec:
+        cross = []
+        for patterns, count in cfg.layer_plan():
+            cross.append(tuple(attn_spec(0) for _ in patterns))
+        specs["cross"] = tuple(cross)
+    return specs
+
+
+def _embeds_spec(shape: InputShape) -> P:
+    return P(_batch_axis(shape.global_batch), None, None)
+
+
+def cross_src_len(shape: InputShape) -> int:
+    """Encoder-source length for enc-dec decode shapes (self cache is
+    seq_len; the encoded source is a fixed frame count)."""
+    return min(shape.seq_len, 4096)
+
+
+# ---------------------------------------------------------------------------
+# Case builders
+# ---------------------------------------------------------------------------
+
+def build_train_case(cfg: ModelConfig, shape: InputShape) -> DryRunCase:
+    B, Tk = shape.global_batch, shape.seq_len
+    opt = TL.default_opt_for(cfg)
+    aparams = T.abstract_params(cfg, quantized=False, fsdp=True)
+    pspecs = T.param_specs(cfg, quantized=False, fsdp=True)
+    astate = O.abstract_state(opt, aparams)
+    sspecs = O.state_specs(opt, pspecs, aparams)
+    b_ax = _batch_axis(B)
+    batch: dict = {"labels": SDS((B, Tk), jnp.int32)}
+    bspecs: dict = {"labels": P(b_ax, None)}
+    if cfg.frontend == "vision":
+        batch["embeds"] = SDS((B, Tk, cfg.d_model), jnp.bfloat16)
+        bspecs["embeds"] = P(b_ax, None, None)
+        batch["positions"] = SDS((B, Tk, 3), jnp.int32)
+        bspecs["positions"] = P(b_ax, None, None)
+    else:
+        batch["tokens"] = SDS((B, Tk), jnp.int32)
+        bspecs["tokens"] = P(b_ax, None)
+    if cfg.is_encdec:
+        batch["src_embeds"] = SDS((B, Tk, cfg.d_model), jnp.bfloat16)
+        bspecs["src_embeds"] = P(b_ax, None, None)
+    act_spec = P(b_ax, None, "model")
+    step = TL.make_train_step(cfg, opt, act_spec=act_spec, remat=True)
+    metric_specs = {k: P() for k in
+                    ("loss", "moe_lb", "moe_z", "total", "grad_norm")}
+    return DryRunCase(
+        name=f"{cfg.name}:{shape.name}",
+        step_fn=step,
+        args=(aparams, astate, batch),
+        in_specs=(pspecs, sspecs, bspecs),
+        out_specs=(pspecs, sspecs, metric_specs),
+        static={"opt": opt.kind})
+
+
+def _serving_params(cfg: ModelConfig):
+    total_q_bytes = cfg.param_count()["total"] * cfg.quant.weight_bits // 8
+    fsdp = total_q_bytes / MESH_MODEL > 6e9   # >6GB/chip quantized -> shard 2D
+    aparams = T.abstract_params(cfg, quantized=True, fsdp=fsdp)
+    pspecs = T.param_specs(cfg, quantized=True, fsdp=fsdp)
+    return aparams, pspecs
+
+
+def build_prefill_case(cfg: ModelConfig, shape: InputShape) -> DryRunCase:
+    B, Tk = shape.global_batch, shape.seq_len
+    aparams, pspecs = _serving_params(cfg)
+    b_ax = _batch_axis(B)
+    embeds = SDS((B, Tk, cfg.d_model), jnp.bfloat16)
+    args = [aparams, embeds]
+    in_specs = [pspecs, _embeds_spec(shape)]
+    kwargs = {}
+    if cfg.is_encdec:
+        src = SDS((B, Tk, cfg.d_model), jnp.bfloat16)
+        args.append(src)
+        in_specs.append(_embeds_spec(shape))
+    positions = None
+    if cfg.rope_kind == "mrope":
+        positions = SDS((B, Tk, 3), jnp.int32)
+        args.append(positions)
+        in_specs.append(P(b_ax, None, None))
+    cache_specs = _cache_specs(cfg, shape)
+
+    def step(params, embeds, *rest):
+        i = 0
+        src = None
+        pos = None
+        if cfg.is_encdec:
+            src = rest[i]; i += 1
+        if cfg.rope_kind == "mrope":
+            pos = rest[i]; i += 1
+        return T.prefill(params, cfg, embeds, max_seq=Tk, positions=pos,
+                         src_embeds=src)
+
+    return DryRunCase(
+        name=f"{cfg.name}:{shape.name}",
+        step_fn=step,
+        args=tuple(args),
+        in_specs=tuple(in_specs),
+        out_specs=(P(b_ax, "model"), cache_specs),
+        static={})
+
+
+def build_decode_case(cfg: ModelConfig, shape: InputShape) -> DryRunCase:
+    B, Sq = shape.global_batch, shape.seq_len
+    aparams, pspecs = _serving_params(cfg)
+    b_ax = _batch_axis(B)
+    embeds = SDS((B, 1, cfg.d_model), jnp.bfloat16)
+    cross = cross_src_len(shape) if cfg.is_encdec else 0
+    acache = T.init_cache(cfg, B, Sq, abstract=True, cross_len=cross)
+    # decode enters mid-stream: pos is a traced scalar
+    cache_specs = _cache_specs(cfg, shape)
+    args = [aparams, embeds, acache]
+    in_specs = [pspecs, _embeds_spec(shape), cache_specs]
+    if cfg.rope_kind == "mrope":
+        args.append(SDS((B, 1, 3), jnp.int32))
+        in_specs.append(P(b_ax, None, None))
+
+    def step(params, embeds, cache, *rest):
+        pos = rest[0] if rest else None
+        return T.decode_step(params, cfg, embeds, cache, positions=pos)
+
+    return DryRunCase(
+        name=f"{cfg.name}:{shape.name}",
+        step_fn=step,
+        args=tuple(args),
+        in_specs=tuple(in_specs),
+        out_specs=(P(b_ax, "model"), cache_specs),
+        static={})
+
+
+def build_case(cfg: ModelConfig, shape: InputShape) -> DryRunCase:
+    if shape.kind == "train":
+        return build_train_case(cfg, shape)
+    if shape.kind == "prefill":
+        return build_prefill_case(cfg, shape)
+    return build_decode_case(cfg, shape)
+
+
+def skip_reason(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("full-attention arch: long_500k requires sub-quadratic "
+                "attention (DESIGN.md skip list)")
+    return None

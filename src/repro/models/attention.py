@@ -1,0 +1,284 @@
+"""Attention: GQA, flash-style chunked prefill, quantized-KV decode.
+
+Mixed-precision policy (paper §5.3, C5) is applied throughout: query
+pre-scaled by 1/sqrt(d_k) BEFORE Q.K^T, softmax/accumulators fp32.
+
+Prefill never materializes the [T, S] score matrix for the full sequence:
+an outer sequential map over query chunks and an inner scan over KV chunks
+computes online softmax (flash attention in pure JAX — the dry-run lowers
+this; the Pallas decode kernel in repro/kernels/quant_attention.py is the
+TPU hot path for decode).
+
+KV is stored quantized (int8 keys + fp8 values, paper Fig. 3) in the
+attention-friendly layout [B, S, H_kv, D] — written once, never
+rearranged afterwards (paper §5.1: "no need to rearrange the historical
+KV during each computation").
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerPattern, ModelConfig
+from repro.core import kv_cache as kvc
+from repro.core import quantization as q
+from repro.core.precision import PrecisionPolicy, DEFAULT_POLICY
+from repro.models import layers as L
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def attn_params(b: L.ParamBuilder, cfg: ModelConfig, cross: bool = False) -> dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    qo, kv = cfg.num_heads * hd, cfg.num_kv_heads * hd
+    p = {"wq": b.linear(d, qo, (None, "model")),
+         "wk": b.linear(d, kv, (None, "model")),
+         "wv": b.linear(d, kv, (None, "model")),
+         "wo": b.linear(qo, d, ("model", None))}
+    if cfg.qkv_bias and not cross:
+        p["bq"] = b.bias(qo)
+        p["bk"] = b.bias(kv)
+        p["bv"] = b.bias(kv)
+    return p
+
+
+def _project_qkv(x: Array, p: dict, cfg: ModelConfig,
+                 kv_src: Optional[Array] = None,
+                 lora: Optional[dict] = None) -> Tuple[Array, Array, Array]:
+    hd = cfg.resolved_head_dim
+    src = x if kv_src is None else kv_src
+    qp = L.apply_linear(x, p["wq"], cfg.quant)
+    kp = L.apply_linear(src, p["wk"], cfg.quant)
+    vp = L.apply_linear(src, p["wv"], cfg.quant)
+    if lora is not None:
+        # multi-LoRA bypass (paper §5.5): batched per-request adapters on
+        # q/v projections, A.(B.x) order (never materializes A@B).
+        from repro.core import lora as LR
+        qp = qp + LR.lora_apply_batched(x, lora["wq_a"], lora["wq_b"],
+                                        lora["ids"]).astype(qp.dtype)
+        vp = vp + LR.lora_apply_batched(src, lora["wv_a"], lora["wv_b"],
+                                        lora["ids"]).astype(vp.dtype)
+    if "bq" in p:
+        qp = qp + p["bq"].astype(qp.dtype)
+        kp = kp + p["bk"].astype(kp.dtype)
+        vp = vp + p["bv"].astype(vp.dtype)
+    B, T = x.shape[:2]
+    S = src.shape[1]
+    return (qp.reshape(B, T, cfg.num_heads, hd),
+            kp.reshape(B, S, cfg.num_kv_heads, hd),
+            vp.reshape(B, S, cfg.num_kv_heads, hd))
+
+
+def _prescale(qh: Array, hd: int, policy: PrecisionPolicy) -> Array:
+    scale = 1.0 / float(hd) ** 0.5
+    if policy.prescale_query:
+        return (qh.astype(jnp.float32) * scale).astype(policy.compute_dtype)
+    return qh
+
+
+def _pad_to(x: Array, mult: int, axis: int) -> Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def flash_attention(qh: Array, kh: Array, vh: Array, *, causal: bool,
+                    window: int = 0, kv_valid: Optional[Array] = None,
+                    q_offset: Array | int = 0,
+                    bq: int = 512, bk: int = 1024,
+                    policy: PrecisionPolicy = DEFAULT_POLICY) -> Array:
+    """Blockwise attention with online softmax (fp32 states).
+
+    qh: [B, T, H, D] (already pre-scaled), kh/vh: [B, S, Hkv, D] float.
+    kv_valid: optional [S] bool mask of live KV slots.
+    q_offset: absolute position of query index 0 (for decode-with-history).
+    """
+    B, T, H, D = qh.shape
+    S, Hkv = kh.shape[1], kh.shape[2]
+    G = H // Hkv
+    bq = min(bq, max(T, 1))
+    bk = min(bk, max(S, 1))
+    qp = _pad_to(qh, bq, 1)
+    kp = _pad_to(kh, bk, 1)
+    vp = _pad_to(vh, bk, 1)
+    Tp, Sp = qp.shape[1], kp.shape[1]
+    nq, nk = Tp // bq, Sp // bk
+    qp = qp.reshape(B, nq, bq, Hkv, G, D)
+    kp = kp.reshape(B, nk, bk, Hkv, D)
+    vp = vp.reshape(B, nk, bk, Hkv, D)
+    base_valid = jnp.arange(Sp) < S
+    if kv_valid is not None:
+        base_valid = base_valid & _pad_to(kv_valid, bk, 0)
+
+    def one_q_block(qi):
+        # Rematerialized: without this, the backward pass saves every KV
+        # block's probability tile for every q block — the full [T, S]
+        # score matrix — defeating the blockwise formulation entirely.
+        return jax.checkpoint(_one_q_block_inner)(qi)
+
+    def _one_q_block_inner(qi):
+        qblk = qp[:, qi]                                 # [B,bq,Hkv,G,D]
+        qpos = q_offset + qi * bq + jnp.arange(bq)       # [bq]
+
+        def inner(carry, j):
+            m, l, acc = carry
+            kb = kp[:, j].astype(policy.compute_dtype)   # [B,bk,Hkv,D]
+            vb = vp[:, j].astype(policy.compute_dtype)
+            s = jnp.einsum("btkgd,bskd->bkgts",
+                           qblk.astype(policy.compute_dtype), kb,
+                           preferred_element_type=jnp.float32)
+            kpos = j * bk + jnp.arange(bk)
+            ok = jax.lax.dynamic_slice(base_valid, (j * bk,), (bk,))
+            mask = ok[None, :]
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            if window:
+                mask = mask & (qpos[:, None] - kpos[None, :] < window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m2 = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m2[..., None])
+            corr = jnp.exp(m - m2)
+            l2 = l * corr + p.sum(-1)
+            pv = jnp.einsum("bkgts,bskd->bkgtd", p.astype(policy.compute_dtype),
+                            vb, preferred_element_type=jnp.float32)
+            acc2 = acc * corr[..., None] + pv
+            return (m2, l2, acc2), None
+
+        m0 = jnp.full((B, Hkv, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, bq, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(inner, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]     # [B,Hkv,G,bq,D]
+        return jnp.transpose(out, (0, 3, 1, 2, 4))       # [B,bq,Hkv,G,D]
+
+    if nq == 1:
+        outs = one_q_block(0)[None]
+    else:
+        outs = jax.lax.map(one_q_block, jnp.arange(nq))  # [nq,B,bq,Hkv,G,D]
+    out = jnp.transpose(outs, (1, 0, 2, 3, 4, 5)).reshape(B, Tp, H, D)
+    return out[:, :T].astype(policy.compute_dtype)
+
+
+def decode_attention_ref(qh: Array, cache: kvc.LayerKVCache, pos: Array,
+                         policy: PrecisionPolicy = DEFAULT_POLICY) -> Array:
+    """One-token attention against the quantized cache (pure-JAX reference;
+    the Pallas kernel quant_attention implements the fused-dequant TPU path).
+
+    qh: [B, 1, H, D] pre-scaled. ``pos``: tokens written so far (incl. the
+    current one). Dequantizes K (int8, per-token/head scales) and V (fp8)
+    on the fly — memory traffic = quantized bytes, the decode win.
+    """
+    B, T, H, D = qh.shape
+    S, Hkv = cache.k_q.shape[1], cache.k_q.shape[2]
+    G = H // Hkv
+    k = kvc.dequantize_keys(cache.k_q, cache.k_scale, cache.k_zero,
+                            policy.compute_dtype,
+                            bits=cache.key_bits)         # [B,S,Hkv,D]
+    v = cache.v.astype(policy.compute_dtype)
+    s = jnp.einsum("btkgd,bskd->bkgts",
+                   qh.reshape(B, T, Hkv, G, D).astype(policy.compute_dtype), k,
+                   preferred_element_type=jnp.float32)   # [B,Hkv,G,1,S]
+    slot_pos = kvc.slot_positions(cache, pos)            # [S]
+    mask = slot_pos >= 0
+    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s.astype(policy.softmax_dtype), axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", p.astype(policy.compute_dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, T, H, D).astype(policy.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Layer-level entry points
+# ---------------------------------------------------------------------------
+
+def attention_train(x: Array, p: dict, cfg: ModelConfig, pat: LayerPattern,
+                    positions: Array,
+                    policy: PrecisionPolicy = DEFAULT_POLICY,
+                    lora: 'Optional[dict]' = None) -> Array:
+    """Training/plain forward (no cache)."""
+    qh, kh, vh = _project_qkv(x, p, cfg, lora=lora)
+    qh = L.positional(qh, cfg, positions)
+    kh = L.positional(kh, cfg, positions)
+    qh = _prescale(qh, cfg.resolved_head_dim, policy)
+    out = flash_attention(qh, kh, vh, causal=True, window=pat.window,
+                          policy=policy)
+    B, T = x.shape[:2]
+    out = out.reshape(B, T, -1)
+    return L.apply_linear(out, p["wo"], cfg.quant)
+
+
+def attention_prefill(x: Array, p: dict, cfg: ModelConfig, pat: LayerPattern,
+                      positions: Array, max_seq: int,
+                      policy: PrecisionPolicy = DEFAULT_POLICY,
+                      lora: 'Optional[dict]' = None
+                      ) -> Tuple[Array, kvc.LayerKVCache]:
+    """Prefill: full-sequence attention + build the quantized cache."""
+    B, T = x.shape[:2]
+    qh, kh, vh = _project_qkv(x, p, cfg, lora=lora)
+    qh = L.positional(qh, cfg, positions)
+    kh = L.positional(kh, cfg, positions)
+    cache = kvc.init_layer_cache(B, max_seq, cfg.num_kv_heads,
+                                 cfg.resolved_head_dim, window=pat.window,
+                                 key_bits=cfg.quant.kv_key_bits,
+                                 value_fp8=cfg.quant.kv_value_fp8)
+    cache = kvc.append(cache, kh, vh, jnp.zeros((), jnp.int32))
+    qh = _prescale(qh, cfg.resolved_head_dim, policy)
+    out = flash_attention(qh, kh, vh, causal=True, window=pat.window,
+                          policy=policy)
+    out = out.reshape(B, T, -1)
+    return L.apply_linear(out, p["wo"], cfg.quant), cache
+
+
+def attention_decode(x: Array, p: dict, cfg: ModelConfig, pat: LayerPattern,
+                     cache: kvc.LayerKVCache, pos: Array, positions: Array,
+                     policy: PrecisionPolicy = DEFAULT_POLICY,
+                     lora: 'Optional[dict]' = None
+                     ) -> Tuple[Array, kvc.LayerKVCache]:
+    """One decode step: append quantized K/V, attend over the cache."""
+    B, T = x.shape[:2]
+    qh, kh, vh = _project_qkv(x, p, cfg, lora=lora)
+    qh = L.positional(qh, cfg, positions)
+    kh = L.positional(kh, cfg, positions)
+    cache = kvc.append(cache, kh, vh, pos)
+    qh = _prescale(qh, cfg.resolved_head_dim, policy)
+    out = decode_attention_ref(qh, cache, pos + T, policy=policy)
+    out = out.reshape(B, T, -1)
+    return L.apply_linear(out, p["wo"], cfg.quant), cache
+
+
+def cross_attention(x: Array, p: dict, cfg: ModelConfig,
+                    cross_cache: kvc.LayerKVCache,
+                    policy: PrecisionPolicy = DEFAULT_POLICY) -> Array:
+    """Decoder cross-attention over the (quantized) encoder KV."""
+    B, T = x.shape[:2]
+    hd = cfg.resolved_head_dim
+    qp = L.apply_linear(x, p["wq"], cfg.quant)
+    qh = qp.reshape(B, T, cfg.num_heads, hd)
+    qh = _prescale(qh, hd, policy)
+    out = decode_attention_ref(qh, cross_cache, cross_cache.length,
+                               policy=policy)
+    out = out.reshape(B, T, -1)
+    return L.apply_linear(out, p["wo"], cfg.quant)
+
+
+def build_cross_cache(enc_out: Array, p: dict, cfg: ModelConfig
+                      ) -> kvc.LayerKVCache:
+    B, S = enc_out.shape[:2]
+    hd = cfg.resolved_head_dim
+    kp = L.apply_linear(enc_out, p["wk"], cfg.quant).reshape(
+        B, S, cfg.num_kv_heads, hd)
+    vp = L.apply_linear(enc_out, p["wv"], cfg.quant).reshape(
+        B, S, cfg.num_kv_heads, hd)
+    cache = kvc.init_layer_cache(B, S, cfg.num_kv_heads, hd,
+                                 key_bits=cfg.quant.kv_key_bits,
+                                 value_fp8=cfg.quant.kv_value_fp8)
+    return kvc.append(cache, kp, vp, jnp.zeros((), jnp.int32))

@@ -1,0 +1,235 @@
+"""Mixture-of-Experts FFN with sort-based dispatch + load balancing (C4
+analogue: the paper's multicore workload-balancing insight applied where it
+matters on a pod — router/expert skew).
+
+Dispatch is the sort-based capacity scheme (no [T, E, C] one-hot):
+  top-k -> flatten (token, expert) pairs -> argsort by expert -> position
+  within expert via cumsum -> gather into [E, C, d] -> grouped matmul ->
+  weighted scatter-add back.  Tokens beyond capacity drop (standard).
+
+Sharding: experts go on the "model" axis when num_experts % mesh_model == 0
+(expert parallel; moonshot 64e, dbrx 16e, jamba 16e), otherwise d_ff goes on
+"model" (tensor parallel; grok 8e).  The spec choice lives in expert_spec().
+
+For very long token batches (32k prefill) the dispatch runs in chunks via
+lax.map to bound live memory.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import quantization as q
+from repro.models import layers as L
+from repro.models.shard_util import constrain
+
+Array = jax.Array
+
+MOE_CHUNK_TOKENS = 16384   # lax.map chunk for giant prefill batches
+
+
+def expert_parallel(cfg: ModelConfig, mesh_model: int = 16) -> bool:
+    return cfg.num_experts % mesh_model == 0
+
+
+def moe_params(b: L.ParamBuilder, cfg: ModelConfig, mesh_model: int = 16) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    if expert_parallel(cfg, mesh_model):
+        # experts sharded over "model" (moonshot 64e, dbrx/jamba 16e).
+        # Under fsdp the extra "data" sharding goes on the NON-contraction
+        # dim: with "data" on the contraction dim GSPMD must all-gather the
+        # full expert weights every step (324 GiB/step at jamba long_500k
+        # decode — EXPERIMENTS.md §Perf H3); on an output dim the weights
+        # stay stationary and only the tiny decode activations move.
+        if b.fsdp:
+            up_spec = ("model", None, "data")     # data on f (output)
+            down_spec = ("model", None, "data")   # data on d_model (output)
+        else:
+            up_spec = ("model", None, None)
+            down_spec = ("model", None, None)
+    else:
+        # tensor-parallel experts: d_ff sharded (grok 8e on a 16-way axis)
+        up_spec = (None, None, "model")
+        down_spec = (None, "model", None)
+    return {
+        "router": b.param((d, e), (None, None), scale=0.02),
+        "w_gate": b.linear(d, f, up_spec, lead=(e,)),
+        "w_up": b.linear(d, f, up_spec, lead=(e,)),
+        "w_down": b.linear(f, d, down_spec, lead=(e,)),
+    }
+
+
+def _expert_matmul(xe: Array, wp: dict, qcfg: q.QuantConfig) -> Array:
+    """xe: [G, E, C, in] @ w: [E, in, out] -> [G, E, C, out]."""
+    w = wp["w"]
+    if isinstance(w, q.QuantizedTensor):
+        mm = lambda xi, wi: q.quant_matmul(xi, wi, qcfg)
+        return jax.vmap(mm, in_axes=(1, 0), out_axes=1)(xe, w)
+    # f32 inputs: XLA:CPU's DotThunk rejects batched bf16xbf16->f32 dots
+    # (TPU runs the quantized branch above anyway)
+    return jnp.einsum("geci,eio->geco", xe.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(jnp.bfloat16)
+
+
+def _dispatch_moe(xg: Array, p: dict, cfg: ModelConfig) -> Tuple[Array, Array]:
+    """Grouped dispatch over xg: [G, Tg, d] — G data-local groups.
+
+    G maps onto the "data" mesh axis (GShard-style): every group sorts,
+    ranks and gathers ONLY its own tokens, so the dispatch gathers are
+    shard-local; the only cross-chip movement is the expert all-to-all
+    implied by xe's [G(data), E(model), C, d] sharding.  Combine is
+    gather-based (inverse permutation + per-token K-sum) — a scatter here
+    makes GSPMD combine full fp32 buffers with all-reduces (hundreds of TB
+    per 32k-prefill step; EXPERIMENTS.md §Perf H1).
+
+    Returns (y: [G, Tg, d], aux[2] = (load-balance loss, router z-loss)).
+    """
+    G, Tg, d = xg.shape
+    E, K = cfg.num_experts, cfg.experts_per_tok
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # [G, Tg, E]
+    topk_p, topk_i = jax.lax.top_k(probs, K)                     # [G, Tg, K]
+    topk_p = topk_p / jnp.maximum(topk_p.sum(-1, keepdims=True), 1e-9)
+
+    C = int(max(1, round(Tg * K / E * cfg.moe_capacity_factor)))
+    C = min(C, Tg)
+    TK = Tg * K
+    flat_e = topk_i.reshape(G, TK)                               # [G, TK]
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg), K)[None], (G, TK))
+    order = jnp.argsort(flat_e, axis=-1)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    st = jnp.take_along_axis(flat_t, order, axis=-1)
+    # rank within expert, per group
+    counts = jnp.sum(jax.nn.one_hot(flat_e, E, dtype=jnp.int32), axis=1)
+    starts = jnp.cumsum(counts, axis=-1) - counts                # [G, E]
+    pos_in_e = jnp.arange(TK)[None] - jnp.take_along_axis(starts, se, axis=-1)
+    keep = pos_in_e < C
+    slot = jnp.where(keep, se * C + pos_in_e, E * C)             # [G, TK]
+    # small int32 scatter builds the gather index; rows move by gather only
+    idx = jnp.full((G, E * C + 1), Tg, jnp.int32)
+    idx = idx.at[jnp.arange(G)[:, None], slot].set(st)[:, :E * C]
+    xg_pad = jnp.concatenate([xg, jnp.zeros((G, 1, d), xg.dtype)], axis=1)
+    xe = jnp.take_along_axis(xg_pad, idx[..., None], axis=1)     # [G, E*C, d]
+    xe = xe.reshape(G, E, C, d)
+    ep = expert_parallel(cfg)
+    e_ax, f_ax = ("model", None) if ep else (None, "model")
+    xe = constrain(xe, "data", e_ax, None, None)
+    # grouped FFN: [G,E,C,in] x [E,in,f] -> [G,E,C,f]
+    g = _expert_matmul(xe, p["w_gate"], cfg.quant)
+    u = _expert_matmul(xe, p["w_up"], cfg.quant)
+    h = L.swiglu(constrain(u, "data", e_ax, None, f_ax),
+                 constrain(g, "data", e_ax, None, f_ax))
+    ye = _expert_matmul(h, p["w_down"], cfg.quant)               # [G,E,C,d]
+    ye = constrain(ye, "data", e_ax, None, None)
+    # gather-based combine: inverse-permute to token-major, sum K experts
+    inv = jnp.argsort(order, axis=-1)
+    slot_tok = jnp.take_along_axis(slot, inv, axis=-1)           # [G, TK]
+    ye16 = ye.astype(jnp.bfloat16)       # gather moves half the bytes
+    contrib = jnp.concatenate(
+        [ye16.reshape(G, E * C, d), jnp.zeros((G, 1, d), jnp.bfloat16)],
+        axis=1)
+    per_tok = jnp.take_along_axis(contrib, slot_tok[..., None], axis=1)
+    per_tok = per_tok.reshape(G, Tg, K, d).astype(jnp.float32)
+    y = jnp.einsum("gtkd,gtk->gtd", per_tok, topk_p.astype(jnp.float32))
+    y = constrain(y, "data", None, None)
+    # aux losses: load-balance (Switch) + router z-loss
+    frac_tokens = counts.astype(jnp.float32) / jnp.maximum(TK, 1)
+    frac_probs = probs.mean(axis=1)                              # [G, E]
+    lb = E * jnp.sum(frac_tokens * frac_probs, axis=-1).mean()
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return y.astype(xg.dtype), jnp.stack([lb, z])
+
+
+def _select_expert_weights(wp: dict, ids: Array):
+    """Gather per-token expert weights: [E, in, out] -> [n, in, out]."""
+    w = wp["w"]
+    if isinstance(w, q.QuantizedTensor):
+        return {"w": q.QuantizedTensor(data=w.data[ids], scale=w.scale[ids],
+                                       zero=w.zero[ids], bits=w.bits,
+                                       shape=w.shape)}
+    return {"w": w[ids]}
+
+
+def _dispatch_moe_tiny(xg: Array, p: dict, cfg: ModelConfig
+                       ) -> Tuple[Array, Array]:
+    """Selected-expert decode path for tiny token counts (tokens*K <= E):
+    gather only the K chosen experts' weights per token instead of running
+    all E at capacity — at batch-1 long-context decode this cuts the
+    step's weight reads by E/K (EXPERIMENTS.md §Perf H3 iter2)."""
+    G, Tg, d = xg.shape
+    E, K = cfg.num_experts, cfg.experts_per_tok
+    n = G * Tg
+    x_flat = xg.reshape(n, d)
+    logits = jnp.matmul(x_flat.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_p, topk_i = jax.lax.top_k(probs, K)
+    topk_p = topk_p / jnp.maximum(topk_p.sum(-1, keepdims=True), 1e-9)
+    ids = topk_i.reshape(n * K)
+    xr = jnp.repeat(x_flat, K, axis=0)[:, None, :]          # [nK, 1, d]
+
+    def one(xi, wg, wu, wd):
+        g = L.apply_linear(xi, wg, cfg.quant)
+        u = L.apply_linear(xi, wu, cfg.quant)
+        h = L.swiglu(u, g)
+        return L.apply_linear(h, wd, cfg.quant)             # [1, d]
+
+    sel = lambda key: _select_expert_weights(p[key], ids)
+    ye = jax.vmap(one)(xr, sel("w_gate"), sel("w_up"), sel("w_down"))
+    per_tok = ye.reshape(n, K, d).astype(jnp.float32)
+    y = jnp.einsum("tkd,tk->td", per_tok, topk_p.astype(jnp.float32))
+    frac = jnp.sum(jax.nn.one_hot(topk_i, E, dtype=jnp.float32),
+                   axis=(0, 1)) / jnp.maximum(n * K, 1)
+    lb = E * jnp.sum(frac * probs.mean(0))
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return y.reshape(G, Tg, d).astype(xg.dtype), jnp.stack([lb, z])
+
+
+def _num_groups(batch: int, mesh_data: int = 16) -> int:
+    import math
+    return math.gcd(batch, mesh_data)
+
+
+def apply_moe(x: Array, p: dict, cfg: ModelConfig) -> Tuple[Array, Array]:
+    """x: [B, T, d] -> (y, aux[2]).
+
+    Tokens are regrouped into G = gcd(B, 16) data-local groups (the
+    GShard-style 'G' dim, mapped onto the "data" mesh axis) and long
+    sequences are chunked along T so the [G, E, C, d] dispatch buffers stay
+    bounded at ~MOE_CHUNK_TOKENS tokens per dispatch.
+    """
+    B, T, d = x.shape
+    G = _num_groups(B)
+    bg = B // G                                      # sequences per group
+    ct = max(1, MOE_CHUNK_TOKENS // B)
+    if T > ct and T % ct == 0:
+        nc = T // ct
+        # [B,T,d] -> [nc, G, bg*ct, d]: chunk along T, group along B
+        xc = jnp.transpose(x.reshape(G, bg, nc, ct, d), (2, 0, 1, 3, 4))
+        xc = xc.reshape(nc, G, bg * ct, d)
+
+        def body(_, xi):
+            y, aux = _dispatch_moe(xi, p, cfg)
+            return None, (y, aux)
+
+        _, (ys, auxs) = jax.lax.scan(body, None, xc)
+        y = jnp.transpose(ys.reshape(nc, G, bg, ct, d), (1, 2, 0, 3, 4))
+        return y.reshape(B, T, d), auxs.mean(0)
+    from repro.models.shard_util import current_mesh
+    if (B * T * cfg.experts_per_tok <= cfg.num_experts
+            and current_mesh() is None):
+        # Selected-expert decode (reads K/E of the expert weights) is a
+        # SINGLE-HOST win only: with experts sharded over "model", a
+        # data-dependent weight gather makes GSPMD all-reduce the full
+        # table (325 GiB/step measured — §Perf H3 iter2, refuted at pod
+        # scale). The pod path keeps the grouped dispatch.
+        y, aux = _dispatch_moe_tiny(x.reshape(G, bg * T, d), p, cfg)
+        return y.reshape(B, T, d), aux
+    y, aux = _dispatch_moe(x.reshape(G, bg * T, d), p, cfg)
+    return y.reshape(B, T, d), aux

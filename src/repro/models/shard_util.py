@@ -1,0 +1,37 @@
+"""Mesh-aware sharding constraints that no-op off-mesh.
+
+Model code calls ``constrain(x, "model", "data", ...)`` freely; the
+constraint only materializes when tracing happens under a mesh that has
+those axes (the dry-run / pod path).  Host tests and the single-device
+engine trace without a mesh and skip it.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+from jax._src import mesh as _mesh_lib
+
+
+def current_mesh():
+    m = _mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def constrain(x, *spec_entries):
+    """with_sharding_constraint(x, P(*spec_entries)) when the active mesh
+    has every named axis; otherwise identity."""
+    m = current_mesh()
+    if m is None:
+        return x
+    names = set(m.axis_names)
+    def ok(e):
+        if e is None:
+            return True
+        if isinstance(e, tuple):
+            return all(n in names for n in e)
+        return e in names
+    if not all(ok(e) for e in spec_entries):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec_entries))

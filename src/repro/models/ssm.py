@@ -1,0 +1,294 @@
+"""SSM layers: Mamba (Jamba's recurrent layer) and RWKV6 "Finch".
+
+Both are attention-free: no KV cache; the recurrent state is the "cache"
+(so the paper's KV-cache quantization is inapplicable — DESIGN.md
+§Arch-applicability — but weight quantization + Flash embedding apply).
+
+Mamba: selective SSM  h_t = exp(A dt_t) h_{t-1} + dt_t B_t x_t,
+y_t = C_t h_t + D x_t.  Prefill uses chunked ``associative_scan`` (parallel,
+FLOP-countable); decode is the O(1) single-step update.
+
+RWKV6: data-dependent per-channel decay w_t = exp(-exp(w0 + lora(x_t))):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+Prefill scans over time in fp32 (numerically exact; the chunked-parallel
+form is a recorded perf iteration); decode is one state update.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Array = jax.Array
+
+MAMBA_CHUNK = 512
+RWKV_CHUNK = 256
+
+
+# ===========================================================================
+# Mamba
+# ===========================================================================
+
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_inner = cfg.mamba_expand * cfg.d_model
+    dt_rank = max(1, math.ceil(cfg.d_model / 16))
+    return d_inner, dt_rank, cfg.mamba_d_state
+
+
+def mamba_params(b: L.ParamBuilder, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_inner, dt_rank, d_state = mamba_dims(cfg)
+    return {
+        "in_proj": b.linear(d, 2 * d_inner, (None, "model")),
+        "conv_w": b.param((cfg.mamba_d_conv, d_inner), (None, "model")),
+        "conv_b": b.param((d_inner,), ("model",), scale=0.0),
+        "x_proj": b.linear(d_inner, dt_rank + 2 * d_state, ("model", None)),
+        "dt_proj": b.linear(dt_rank, d_inner, (None, "model"), scale=0.1),
+        "dt_bias": b.param((d_inner,), ("model",), scale=0.0),
+        "A_log": b.param((d_inner, d_state), ("model", None), scale=1.0,
+                         dtype=jnp.float32),
+        "D": b.param((d_inner,), ("model",), scale=1.0, dtype=jnp.float32),
+        "out_proj": b.linear(d_inner, d, ("model", None)),
+    }
+
+
+def init_mamba_state(batch: int, cfg: ModelConfig) -> dict:
+    d_inner, _, d_state = mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, d_inner), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+    }
+
+
+def abstract_mamba_state(batch: int, cfg: ModelConfig) -> dict:
+    d_inner, _, d_state = mamba_dims(cfg)
+    sds = jax.ShapeDtypeStruct
+    return {
+        "conv": sds((batch, cfg.mamba_d_conv - 1, d_inner), jnp.bfloat16),
+        "ssm": sds((batch, d_inner, d_state), jnp.float32),
+    }
+
+
+def _mamba_inner(xz: Array, p: dict, cfg: ModelConfig, conv_in: Array,
+                 ssm_in: Array) -> Tuple[Array, Array, Array]:
+    """Shared prefill/decode math over a [B, T, .] block.
+
+    conv_in: [B, d_conv-1, d_inner] left context for the causal conv.
+    ssm_in:  [B, d_inner, d_state] entry state.
+    Returns (y [B,T,d_inner], conv_out, ssm_out)."""
+    d_inner, dt_rank, d_state = mamba_dims(cfg)
+    x, z = jnp.split(xz, 2, axis=-1)                        # [B,T,d_inner]
+    B_, T = x.shape[:2]
+    # causal depthwise conv along T
+    xc = jnp.concatenate([conv_in.astype(x.dtype), x], axis=1)
+    conv_out = xc[:, -(cfg.mamba_d_conv - 1):] if cfg.mamba_d_conv > 1 else conv_in
+    w = p["conv_w"]                                          # [d_conv, d_inner]
+    xconv = sum(xc[:, i:i + T] * w[i][None, None] for i in range(cfg.mamba_d_conv))
+    xconv = jax.nn.silu((xconv + p["conv_b"][None, None]).astype(jnp.float32))
+    # input-dependent dt, B, C
+    dbc = L.apply_linear(xconv.astype(jnp.bfloat16), p["x_proj"], cfg.quant,
+                         out_dtype=jnp.float32)
+    dt, Bm, Cm = jnp.split(dbc, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = L.apply_linear(dt.astype(jnp.bfloat16), p["dt_proj"], cfg.quant,
+                        out_dtype=jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"][None, None].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])                                 # [d_inner, d_state]
+    # discretize: a_t = exp(A dt), b_t = dt * B_t * x_t
+    a = jnp.exp(dt[..., None] * A[None, None])               # [B,T,d_inner,S]
+    bx = dt[..., None] * Bm[:, :, None, :] * xconv[..., None]
+    # parallel scan over T:  h_t = a_t h_{t-1} + b_t
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+    # fold the entry state into the first step
+    bx = bx.at[:, 0].add(a[:, 0] * ssm_in)
+    aa, hh = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    ssm_out = hh[:, -1]                                      # [B,d_inner,S]
+    y = jnp.einsum("btds,bts->btd", hh, Cm,
+                   preferred_element_type=jnp.float32)
+    y = y + p["D"][None, None] * xconv
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return y.astype(jnp.bfloat16), conv_out, ssm_out
+
+
+def mamba_forward(x: Array, p: dict, cfg: ModelConfig, state: dict
+                  ) -> Tuple[Array, dict]:
+    """Full-sequence (train/prefill) forward, chunked over T."""
+    B, T, _ = x.shape
+    xz = L.apply_linear(x, p["in_proj"], cfg.quant)
+    if T > MAMBA_CHUNK and T % MAMBA_CHUNK == 0:
+        nc = T // MAMBA_CHUNK
+        xzc = xz.reshape(B, nc, MAMBA_CHUNK, -1)
+
+        # checkpointed per chunk: the associative-scan internals are
+        # recomputed in backward instead of saved for every chunk at once
+        # (a single unchunked 4k-seq mamba backward costs ~50 GiB/chip)
+        @jax.checkpoint
+        def body(carry, xt):
+            conv_c, ssm_c = carry
+            y, conv_c, ssm_c = _mamba_inner(xt, p, cfg, conv_c, ssm_c)
+            return (conv_c, ssm_c), y
+
+        (conv_c, ssm_c), ys = jax.lax.scan(
+            body, (state["conv"], state["ssm"]),
+            jnp.moveaxis(xzc, 1, 0))
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, T, -1)
+    else:
+        y, conv_c, ssm_c = _mamba_inner(xz, p, cfg, state["conv"], state["ssm"])
+    out = L.apply_linear(y, p["out_proj"], cfg.quant)
+    return out, {"conv": conv_c, "ssm": ssm_c}
+
+
+def mamba_decode(x: Array, p: dict, cfg: ModelConfig, state: dict
+                 ) -> Tuple[Array, dict]:
+    """Single-token step (same math, T==1)."""
+    return mamba_forward(x, p, cfg, state)
+
+
+# ===========================================================================
+# RWKV6 (Finch)
+# ===========================================================================
+
+def rwkv_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    dh = cfg.rwkv_head_dim
+    assert cfg.d_model % dh == 0
+    return cfg.d_model // dh, dh
+
+
+def rwkv_params(b: L.ParamBuilder, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H, dh = rwkv_dims(cfg)
+    lora = 64
+    return {
+        # token-shift mixing coefficients (r, k, v, w, g)
+        "mu": b.param((5, d), (None, None), scale=0.5),
+        # data-dependent decay (the Finch hallmark)
+        "w0": b.param((d,), (None,), scale=0.1, dtype=jnp.float32),
+        "wA": b.linear(d, lora, (None, None), bits=16),
+        "wB": b.linear(lora, d, (None, "model"), bits=16),
+        "u": b.param((H, dh), ("model", None), scale=0.1, dtype=jnp.float32),
+        "wr": b.linear(d, d, (None, "model")),
+        "wk": b.linear(d, d, (None, "model")),
+        "wv": b.linear(d, d, (None, "model")),
+        "wg": b.linear(d, d, (None, "model")),
+        "wo": b.linear(d, d, ("model", None)),
+        "ln_x": b.norm(d),
+        # channel-mix (RWKV FFN)
+        "cm_mu": b.param((2, d), (None, None), scale=0.5),
+        "cm_k": b.linear(d, cfg.d_ff, (None, "model")),
+        "cm_v": b.linear(cfg.d_ff, d, ("model", None)),
+        "cm_r": b.linear(d, d, (None, "model")),
+    }
+
+
+def init_rwkv_state(batch: int, cfg: ModelConfig) -> dict:
+    H, dh = rwkv_dims(cfg)
+    return {
+        "x_tm": jnp.zeros((batch, cfg.d_model), jnp.bfloat16),   # time-mix shift
+        "x_cm": jnp.zeros((batch, cfg.d_model), jnp.bfloat16),   # channel-mix shift
+        "wkv": jnp.zeros((batch, H, dh, dh), jnp.float32),
+    }
+
+
+def abstract_rwkv_state(batch: int, cfg: ModelConfig) -> dict:
+    H, dh = rwkv_dims(cfg)
+    sds = jax.ShapeDtypeStruct
+    return {
+        "x_tm": sds((batch, cfg.d_model), jnp.bfloat16),
+        "x_cm": sds((batch, cfg.d_model), jnp.bfloat16),
+        "wkv": sds((batch, H, dh, dh), jnp.float32),
+    }
+
+
+def _token_shift(x: Array, x_prev: Array) -> Array:
+    """[B,T,d] -> previous-token stream (first step uses carried x_prev)."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def rwkv_time_mix(x: Array, p: dict, cfg: ModelConfig, state: dict
+                  ) -> Tuple[Array, dict]:
+    B, T, d = x.shape
+    H, dh = rwkv_dims(cfg)
+    xs = _token_shift(x, state["x_tm"])
+    dx = xs - x
+    mu = p["mu"]
+    xr = x + dx * mu[0][None, None].astype(x.dtype)
+    xk = x + dx * mu[1][None, None].astype(x.dtype)
+    xv = x + dx * mu[2][None, None].astype(x.dtype)
+    xw = x + dx * mu[3][None, None].astype(x.dtype)
+    xg = x + dx * mu[4][None, None].astype(x.dtype)
+    r = L.apply_linear(xr, p["wr"], cfg.quant).reshape(B, T, H, dh)
+    k = L.apply_linear(xk, p["wk"], cfg.quant).reshape(B, T, H, dh)
+    v = L.apply_linear(xv, p["wv"], cfg.quant).reshape(B, T, H, dh)
+    g = L.apply_linear(xg, p["wg"], cfg.quant)
+    # data-dependent decay
+    wlo = L.apply_linear(jnp.tanh(
+        L.apply_linear(xw, p["wA"], cfg.quant, out_dtype=jnp.float32)
+    ).astype(jnp.bfloat16), p["wB"], cfg.quant, out_dtype=jnp.float32)
+    w = jnp.exp(-jnp.exp(p["w0"][None, None] + wlo))         # (0,1) [B,T,d]
+    w = w.reshape(B, T, H, dh)
+    u = p["u"]                                                # [H,dh]
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                              # [B,H,dh] each
+        kv = k_t[..., :, None] * v_t[..., None, :]            # [B,H,dh,dh]
+        y = jnp.einsum("bhi,bhij->bhj", r_t,
+                       S + u[None, :, :, None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    rs = jnp.moveaxis(r.astype(jnp.float32), 1, 0)
+    ks = jnp.moveaxis(k.astype(jnp.float32), 1, 0)
+    vs = jnp.moveaxis(v.astype(jnp.float32), 1, 0)
+    ws = jnp.moveaxis(w, 1, 0)
+    if T > RWKV_CHUNK and T % RWKV_CHUNK == 0:
+        # chunked + per-chunk checkpoint: the scan's backward otherwise
+        # saves the [B,H,dh,dh] state for every timestep (T x 16 MB/chip)
+        nc = T // RWKV_CHUNK
+
+        @jax.checkpoint
+        def chunk(S, inp_chunk):
+            return jax.lax.scan(step, S, inp_chunk)
+
+        chunked = tuple(x.reshape(nc, RWKV_CHUNK, *x.shape[1:])
+                        for x in (rs, ks, vs, ws))
+        S, ys = jax.lax.scan(chunk, state["wkv"], chunked)
+        ys = ys.reshape(T, B, H, dh)
+    else:
+        S, ys = jax.lax.scan(step, state["wkv"], (rs, ks, vs, ws))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, d)               # [B,T,d]
+    # per-head group norm, then gate
+    y = y.reshape(B, T, H, dh)
+    yn = (y - y.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        y.var(-1, keepdims=True) + 1e-5)
+    y = (yn.reshape(B, T, d) * p["ln_x"][None, None]).astype(jnp.bfloat16)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(y.dtype)
+    out = L.apply_linear(y, p["wo"], cfg.quant)
+    new_state = dict(state)
+    new_state["x_tm"] = x[:, -1]
+    new_state["wkv"] = S
+    return out, new_state
+
+
+def rwkv_channel_mix(x: Array, p: dict, cfg: ModelConfig, state: dict
+                     ) -> Tuple[Array, dict]:
+    xs = _token_shift(x, state["x_cm"])
+    dx = xs - x
+    mu = p["cm_mu"]
+    xk = x + dx * mu[0][None, None].astype(x.dtype)
+    xr = x + dx * mu[1][None, None].astype(x.dtype)
+    k = L.apply_linear(xk, p["cm_k"], cfg.quant, out_dtype=jnp.float32)
+    k = jnp.square(jax.nn.relu(k)).astype(jnp.bfloat16)
+    kv = L.apply_linear(k, p["cm_v"], cfg.quant)
+    r = L.apply_linear(xr, p["cm_r"], cfg.quant, out_dtype=jnp.float32)
+    out = jax.nn.sigmoid(r).astype(kv.dtype) * kv
+    new_state = dict(state)
+    new_state["x_cm"] = x[:, -1]
+    return out, new_state

@@ -1,0 +1,502 @@
+"""Model assembly: heterogeneous layer stacks with scan, caches, and the
+train / prefill / decode entry points.
+
+A config's ``layer_plan()`` yields (period_patterns, repeat) stacks; each
+stack's params are stacked on a leading axis and scanned (MaxText-style —
+keeps HLO size O(period), not O(layers)).  Heterogeneous periods (jamba's
+1-attn-7-mamba, gemma3's 5-local-1-global) are one scan whose body applies
+each pattern element in order.
+
+Caches mirror the stacks: for every attention element a LayerKVCache stacked
+[repeat, ...]; for mamba/rwkv elements a state dict stacked [repeat, ...].
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LayerPattern, ModelConfig
+from repro.core import kv_cache as kvc
+from repro.core import quantization as q
+from repro.core.precision import DEFAULT_POLICY, PrecisionPolicy
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+Array = jax.Array
+
+
+# ===========================================================================
+# Parameters
+# ===========================================================================
+
+def _pattern_params(b: L.ParamBuilder, cfg: ModelConfig, pat: LayerPattern,
+                    cross: bool = False) -> dict:
+    p: dict = {"ln1": b.norm(cfg.d_model)}
+    if pat.kind == "attn":
+        p["attn"] = A.attn_params(b, cfg)
+        p["ln2"] = b.norm(cfg.d_model)
+        p["ffn" if not pat.moe else "moe"] = (
+            M.moe_params(b, cfg) if pat.moe else L.ffn_params(b, cfg))
+        if cross:
+            p["ln_cross"] = b.norm(cfg.d_model)
+            p["cross"] = A.attn_params(b, cfg, cross=True)
+    elif pat.kind == "mamba":
+        p["mamba"] = S.mamba_params(b, cfg)
+        p["ln2"] = b.norm(cfg.d_model)
+        p["ffn" if not pat.moe else "moe"] = (
+            M.moe_params(b, cfg) if pat.moe else L.ffn_params(b, cfg))
+    elif pat.kind == "rwkv":
+        p["tm"] = S.rwkv_params(b, cfg)
+        # rwkv_params carries its own channel-mix; ln2 norms it
+        p["ln2"] = b.norm(cfg.d_model)
+    else:
+        raise ValueError(pat.kind)
+    return p
+
+
+def _stack_trees(trees: List[Any]) -> Any:
+    if len(trees) == 1:
+        return jax.tree.map(lambda x: x[None], trees[0])
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _lead_axis(tree: Any, count: int, mode: str) -> Any:
+    """Abstract/spec modes: add a [count] lead axis to every leaf."""
+    def add(x):
+        if isinstance(x, jax.ShapeDtypeStruct):
+            return jax.ShapeDtypeStruct((count, *x.shape), x.dtype)
+        if isinstance(x, P):
+            return P(None, *x)
+        return x
+    return jax.tree.map(add, tree,
+                        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)))
+
+
+def init_params(cfg: ModelConfig, *, mode: str = "init",
+                key: Optional[jax.Array] = None, quantized: bool = False,
+                fsdp: bool = False, include_embedding: Optional[bool] = None,
+                mesh_model: int = 16) -> dict:
+    """Build the full parameter tree (or its SDS / PartitionSpec mirror).
+
+    include_embedding: default True for float (training) params, False for
+    quantized (serving) params — the embedding lives on Flash (C2).
+    """
+    if include_embedding is None:
+        include_embedding = not quantized
+    b = L.ParamBuilder(mode, key=key, quantized=quantized, qcfg=cfg.quant,
+                       fsdp=fsdp)
+    params: dict = {}
+    if include_embedding:
+        params["embedding"] = b.param((cfg.padded_vocab_size, cfg.d_model),
+                                      ("model", None))
+    # encoder (enc-dec archs)
+    if cfg.is_encdec:
+        enc_stack = []
+        for _ in range(cfg.encoder_layers):
+            if mode == "init":
+                enc_stack.append(_pattern_params(b, cfg, LayerPattern("attn")))
+        if mode == "init":
+            params["encoder"] = _stack_trees(enc_stack)
+        else:
+            one = _pattern_params(b, cfg, LayerPattern("attn"))
+            params["encoder"] = _lead_axis(one, cfg.encoder_layers, mode)
+        params["enc_norm"] = b.norm(cfg.d_model)
+    # decoder stacks
+    stacks = []
+    for patterns, count in cfg.layer_plan():
+        if mode == "init":
+            periods = []
+            for _ in range(count):
+                periods.append(tuple(
+                    _pattern_params(b, cfg, pat, cross=cfg.is_encdec)
+                    for pat in patterns))
+            stacks.append(_stack_trees(periods))
+        else:
+            one = tuple(_pattern_params(b, cfg, pat, cross=cfg.is_encdec)
+                        for pat in patterns)
+            stacks.append(_lead_axis(one, count, mode))
+    params["stacks"] = tuple(stacks)
+    params["final_norm"] = b.norm(cfg.d_model)
+    params["lm_head"] = b.linear(cfg.d_model, cfg.padded_vocab_size,
+                                 (None, "model"), bits=cfg.quant.lm_head_bits)
+    return params
+
+
+def param_specs(cfg: ModelConfig, *, quantized: bool = False,
+                fsdp: bool = False,
+                include_embedding: Optional[bool] = None) -> dict:
+    return init_params(cfg, mode="spec", quantized=quantized, fsdp=fsdp,
+                       include_embedding=include_embedding)
+
+
+def abstract_params(cfg: ModelConfig, *, quantized: bool = False,
+                    fsdp: bool = False,
+                    include_embedding: Optional[bool] = None) -> dict:
+    return init_params(cfg, mode="abstract", quantized=quantized, fsdp=fsdp,
+                       include_embedding=include_embedding)
+
+
+# ===========================================================================
+# Caches
+# ===========================================================================
+
+def _cache_for_pattern(cfg: ModelConfig, pat: LayerPattern, batch: int,
+                       max_seq: int, abstract: bool):
+    if pat.kind == "attn":
+        fn = kvc.abstract_layer_cache if abstract else kvc.init_layer_cache
+        return fn(batch, max_seq, cfg.num_kv_heads, cfg.resolved_head_dim,
+                  window=pat.window, key_bits=cfg.quant.kv_key_bits,
+                  value_fp8=cfg.quant.kv_value_fp8)
+    if pat.kind == "mamba":
+        fn = S.abstract_mamba_state if abstract else S.init_mamba_state
+        return fn(batch, cfg)
+    if pat.kind == "rwkv":
+        fn = S.abstract_rwkv_state if abstract else S.init_rwkv_state
+        return fn(batch, cfg)
+    raise ValueError(pat.kind)
+
+
+def _stack_cache(tree, count: int, abstract: bool):
+    def add(x):
+        if abstract or isinstance(x, jax.ShapeDtypeStruct):
+            return jax.ShapeDtypeStruct((count, *x.shape), x.dtype)
+        return jnp.broadcast_to(x[None], (count, *x.shape))
+    if isinstance(tree, kvc.LayerKVCache):
+        return kvc.LayerKVCache(
+            k_q=add(tree.k_q), k_scale=add(tree.k_scale),
+            k_zero=add(tree.k_zero), v=add(tree.v),
+            length=add(tree.length), window=tree.window,
+            key_bits=tree.key_bits)
+    return jax.tree.map(add, tree,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               *, abstract: bool = False,
+               cross_len: int = 0) -> dict:
+    """The full decode state: per-stack tuples of stacked per-pattern caches
+    (+ cross-attention caches for enc-dec archs)."""
+    stacks = []
+    for patterns, count in cfg.layer_plan():
+        stacks.append(tuple(
+            _stack_cache(_cache_for_pattern(cfg, pat, batch, max_seq, abstract),
+                         count, abstract)
+            for pat in patterns))
+    cache: dict = {"stacks": tuple(stacks),
+                   "pos": (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+                           else jnp.zeros((), jnp.int32))}
+    if cfg.is_encdec and cross_len:
+        cross = _cache_for_pattern(cfg, LayerPattern("attn"), batch,
+                                   cross_len, abstract)
+        # one cross cache per decoder layer, stacked per decoder stack
+        cross_stacks = []
+        for patterns, count in cfg.layer_plan():
+            cross_stacks.append(tuple(
+                _stack_cache(cross, count, abstract) for _ in patterns))
+        cache["cross"] = tuple(cross_stacks)
+    return cache
+
+
+# ===========================================================================
+# Forward passes
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class StepCtx:
+    cfg: ModelConfig
+    policy: PrecisionPolicy = DEFAULT_POLICY
+    remat: bool = False
+    act_spec: Optional[P] = None      # sharding constraint for the residual
+    # multi-LoRA (paper §5.5): {"wq_a","wq_b","wv_a","wv_b": [K,...],
+    # "ids": [B]} — shared across layers; applied in attention q/v.
+    # NOTE: arrays here are closed over by the jitted step — the serving
+    # engine re-jits when adapter TABLES change (rare: on adapter load);
+    # per-request "ids" still vary per call without retrace via the cache
+    # of identical-shape constants... pass lora via decode_step's arg for
+    # per-call ids instead (Engine does).
+    lora: Optional[dict] = None
+
+
+def _constrain(x: Array, ctx: StepCtx) -> Array:
+    if ctx.act_spec is not None:
+        x = jax.lax.with_sharding_constraint(x, ctx.act_spec)
+    return x
+
+
+def _apply_pattern(x: Array, pp: dict, cfg: ModelConfig, pat: LayerPattern,
+                   mode: str, positions, cache, cross_cache, pos, ctx: StepCtx
+                   ) -> Tuple[Array, Any, Array]:
+    """One layer. Returns (x, new_cache, moe_aux)."""
+    aux = jnp.zeros((2,), jnp.float32)
+    h = L.rms_norm(x, pp["ln1"], cfg.rms_eps)
+    if pat.kind == "attn":
+        if mode == "train":
+            att = A.attention_train(h, pp["attn"], cfg, pat, positions,
+                                    ctx.policy, lora=ctx.lora)
+            new_cache = cache
+        elif mode == "prefill":
+            att, new_cache = A.attention_prefill(
+                h, pp["attn"], cfg, pat, positions, cache.max_seq, ctx.policy,
+                lora=ctx.lora)
+        else:
+            att, new_cache = A.attention_decode(
+                h, pp["attn"], cfg, pat, cache, pos, positions, ctx.policy,
+                lora=ctx.lora)
+        x = x + att
+        if cross_cache is not None:
+            hc = L.rms_norm(x, pp["ln_cross"], cfg.rms_eps)
+            x = x + A.cross_attention(hc, pp["cross"], cfg, cross_cache,
+                                      ctx.policy)
+        h2 = L.rms_norm(x, pp["ln2"], cfg.rms_eps)
+        if pat.moe:
+            y, aux = M.apply_moe(h2, pp["moe"], cfg)
+        else:
+            y = L.apply_ffn(h2, pp["ffn"], cfg)
+        x = x + y
+    elif pat.kind == "mamba":
+        if mode == "train":
+            st = S.init_mamba_state(x.shape[0], cfg)
+            y, _ = S.mamba_forward(h, pp["mamba"], cfg, st)
+            new_cache = cache          # None in train mode
+        else:
+            y, new_cache = S.mamba_forward(h, pp["mamba"], cfg, cache)
+        x = x + y
+        h2 = L.rms_norm(x, pp["ln2"], cfg.rms_eps)
+        if pat.moe:
+            y2, aux = M.apply_moe(h2, pp["moe"], cfg)
+        else:
+            y2 = L.apply_ffn(h2, pp["ffn"], cfg)
+        x = x + y2
+    elif pat.kind == "rwkv":
+        if mode == "train":
+            st = S.init_rwkv_state(x.shape[0], cfg)
+        else:
+            st = cache
+        y, st = S.rwkv_time_mix(h, pp["tm"], cfg, st)
+        x = x + y
+        h2 = L.rms_norm(x, pp["ln2"], cfg.rms_eps)
+        y2, st = S.rwkv_channel_mix(h2, pp["tm"], cfg, st)
+        x = x + y2
+        new_cache = cache if mode == "train" else st
+    else:
+        raise ValueError(pat.kind)
+    return _constrain(x, ctx), new_cache, aux
+
+
+def _run_stacks(x: Array, params: dict, cfg: ModelConfig, mode: str,
+                positions, cache: Optional[dict], ctx: StepCtx
+                ) -> Tuple[Array, Optional[dict], Array]:
+    """Scan every stack; returns (x, new_cache, moe_aux_sum)."""
+    new_stacks = []
+    aux_total = jnp.zeros((2,), jnp.float32)
+    pos = None if cache is None else cache["pos"]
+    for si, (patterns, count) in enumerate(cfg.layer_plan()):
+        sp = params["stacks"][si]
+        scache = None if cache is None else cache["stacks"][si]
+        xcache = tuple(None for _ in patterns) if scache is None else scache
+        cross = None
+        if cfg.is_encdec and cache is not None and "cross" in cache:
+            cross = cache["cross"][si]
+
+        def body(xc, slices, _patterns=patterns):
+            xx, auxc = xc
+            pslice, cslice, crslice = slices
+            new_cs = []
+            for pi, pat in enumerate(_patterns):
+                cc = None if cslice is None else cslice[pi]
+                cr = None if crslice is None else crslice[pi]
+                xx, nc, aux = _apply_pattern(
+                    xx, pslice[pi], cfg, pat, mode, positions, cc, cr, pos, ctx)
+                new_cs.append(nc)
+                auxc = auxc + aux
+            return (xx, auxc), tuple(new_cs)
+
+        if ctx.remat:
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        (x, aux_total), new_scache = jax.lax.scan(
+            body, (x, aux_total), (sp, xcache, cross))
+        new_stacks.append(new_scache)
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache)
+        new_cache["stacks"] = tuple(new_stacks)
+    return x, new_cache, aux_total
+
+
+def _logits(x: Array, params: dict, cfg: ModelConfig) -> Array:
+    h = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return L.apply_linear(h, params["lm_head"], cfg.quant,
+                          out_dtype=jnp.float32)
+
+
+def embed_tokens(params: dict, cfg: ModelConfig, tokens: Array) -> Array:
+    emb = params["embedding"]
+    return emb.astype(jnp.bfloat16)[tokens]
+
+
+# --- encoder ---------------------------------------------------------------
+
+def encode(params: dict, cfg: ModelConfig, src_embeds: Array,
+           positions: Array, ctx: StepCtx) -> Array:
+    """Bidirectional encoder (enc-dec archs). src_embeds: [B, S, d]."""
+    x = src_embeds.astype(jnp.bfloat16)
+
+    def body(xc, pslice):
+        xx = xc
+        h = L.rms_norm(xx, pslice["ln1"], cfg.rms_eps)
+        qh, kh, vh = A._project_qkv(h, pslice["attn"], cfg)
+        qh = L.positional(qh, cfg, positions)
+        kh = L.positional(kh, cfg, positions)
+        qh = A._prescale(qh, cfg.resolved_head_dim, ctx.policy)
+        att = A.flash_attention(qh, kh, vh, causal=False, policy=ctx.policy)
+        att = att.reshape(*xx.shape[:2], -1)
+        xx = xx + L.apply_linear(att, pslice["attn"]["wo"], cfg.quant)
+        h2 = L.rms_norm(xx, pslice["ln2"], cfg.rms_eps)
+        xx = xx + L.apply_ffn(h2, pslice["ffn"], cfg)
+        return _constrain(xx, ctx), None
+
+    if ctx.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.rms_norm(x, params["enc_norm"], cfg.rms_eps)
+
+
+def build_cross_caches(params: dict, cfg: ModelConfig, enc_out: Array,
+                       abstract: bool = False) -> tuple:
+    """Per-decoder-layer quantized cross KV (scanned per stack)."""
+    cross_stacks = []
+    for si, (patterns, count) in enumerate(cfg.layer_plan()):
+        sp = params["stacks"][si]
+
+        def body(_, pslice, _patterns=patterns):
+            caches = tuple(
+                A.build_cross_cache(enc_out, pslice[pi]["cross"], cfg)
+                for pi in range(len(_patterns)))
+            return None, caches
+
+        _, caches = jax.lax.scan(body, None, sp)
+        cross_stacks.append(caches)
+    return tuple(cross_stacks)
+
+
+# ===========================================================================
+# Public step functions
+# ===========================================================================
+
+def forward_hidden(params: dict, cfg: ModelConfig, batch: dict,
+                   ctx: Optional[StepCtx] = None) -> Tuple[Array, Array]:
+    """Training forward up to the final norm (pre-lm_head).
+
+    Returns (hidden [B,T,d] fp-normed, moe_aux[2]).  The training loss uses
+    this with a CHUNKED lm_head+CE (train_loop.chunked_cross_entropy) so the
+    [B,T,V] logits never fully materialize."""
+    ctx = ctx or StepCtx(cfg)
+    if "tokens" in batch:
+        x = embed_tokens(params, cfg, batch["tokens"])
+    else:
+        x = batch["embeds"].astype(jnp.bfloat16)
+    B, T = x.shape[:2]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    if cfg.is_encdec:
+        src = batch["src_embeds"]
+        spos = jnp.broadcast_to(jnp.arange(src.shape[1])[None],
+                                (B, src.shape[1]))
+        enc_out = encode(params, cfg, src, spos, ctx)
+        cross = build_cross_caches(params, cfg, enc_out)
+        cache = {"pos": jnp.zeros((), jnp.int32), "cross": cross,
+                 "stacks": tuple(tuple(None for _ in pats)
+                                 for pats, _ in cfg.layer_plan())}
+        x, _, aux = _run_stacks(x, params, cfg, "train", positions, cache, ctx)
+    else:
+        x, _, aux = _run_stacks(x, params, cfg, "train", positions, None, ctx)
+    return L.rms_norm(x, params["final_norm"], cfg.rms_eps), aux
+
+
+def forward_train(params: dict, cfg: ModelConfig, batch: dict,
+                  ctx: Optional[StepCtx] = None) -> Tuple[Array, Array]:
+    """Training forward. batch: {"tokens" | "embeds", "positions"?,
+    "src_embeds"? (encdec/audio/vlm)} -> (logits [B,T,V], moe_aux[2])."""
+    ctx = ctx or StepCtx(cfg)
+    if "tokens" in batch:
+        x = embed_tokens(params, cfg, batch["tokens"])
+    else:
+        x = batch["embeds"].astype(jnp.bfloat16)
+    B, T = x.shape[:2]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    cache = None
+    if cfg.is_encdec:
+        src = batch["src_embeds"]
+        spos = jnp.broadcast_to(jnp.arange(src.shape[1])[None],
+                                (B, src.shape[1]))
+        enc_out = encode(params, cfg, src, spos, ctx)
+        cross = build_cross_caches(params, cfg, enc_out)
+        # train-mode "cache": only cross KV, no self-KV allocation
+        cache = {"pos": jnp.zeros((), jnp.int32), "cross": cross,
+                 "stacks": tuple(tuple(None for _ in pats)
+                                 for pats, _ in cfg.layer_plan())}
+        x, _, aux = _run_stacks(x, params, cfg, "train", positions, cache, ctx)
+        return _logits(x, params, cfg), aux
+    x, _, aux = _run_stacks(x, params, cfg, "train", positions, None, ctx)
+    return _logits(x, params, cfg), aux
+
+
+def prefill(params: dict, cfg: ModelConfig, embeds: Array, max_seq: int,
+            positions: Optional[Array] = None,
+            src_embeds: Optional[Array] = None,
+            ctx: Optional[StepCtx] = None,
+            lora: Optional[dict] = None) -> Tuple[Array, dict]:
+    """Prefill: embeds [B, T, d] (token rows come from Flash, C2).
+    Returns (last-token logits [B, V], cache)."""
+    ctx = ctx or StepCtx(cfg)
+    if lora is not None:
+        ctx = dataclasses.replace(ctx, lora=lora)
+    x = embeds.astype(jnp.bfloat16)
+    B, T = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    cross_len = 0
+    cache = init_cache(cfg, B, max_seq)
+    if cfg.is_encdec:
+        assert src_embeds is not None
+        spos = jnp.broadcast_to(jnp.arange(src_embeds.shape[1])[None],
+                                (B, src_embeds.shape[1]))
+        enc_out = encode(params, cfg, src_embeds, spos, ctx)
+        cache["cross"] = build_cross_caches(params, cfg, enc_out)
+    x, cache, _ = _run_stacks(x, params, cfg, "prefill", positions, cache, ctx)
+    cache["pos"] = jnp.asarray(T, jnp.int32)
+    logits = _logits(x[:, -1:], params, cfg)[:, 0]
+    return logits, cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, embeds: Array, cache: dict,
+                positions: Optional[Array] = None,
+                ctx: Optional[StepCtx] = None,
+                lora: Optional[dict] = None) -> Tuple[Array, dict]:
+    """One decode step. embeds: [B, 1, d] (row fetched from Flash — C2).
+    Returns (logits [B, V], new cache).  ``lora``: per-call multi-LoRA
+    tables + per-request adapter ids (C7)."""
+    ctx = ctx or StepCtx(cfg)
+    if lora is not None:
+        ctx = dataclasses.replace(ctx, lora=lora)
+    x = embeds.astype(jnp.bfloat16)
+    B, T = x.shape[:2]
+    pos = cache["pos"]
+    if positions is None:
+        positions = jnp.broadcast_to(pos[None, None], (B, T))
+    x, cache, _ = _run_stacks(x, params, cfg, "decode", positions, cache, ctx)
+    cache["pos"] = pos + T
+    logits = _logits(x, params, cfg)[:, -1]
+    return logits, cache

@@ -1,0 +1,190 @@
+"""Serving engine: the paper's runtime, end to end.
+
+  * Embedding table lives on Flash (C2): every prefill/decode step gathers
+    token rows from a disk memmap — ``serve_step`` takes embeddings, never
+    token ids.
+  * Weights are combined-quantized (C1): int4/int8 layers, int8 lm_head.
+  * KV cache quantized int8-K/fp8-V (C1) inside the jitted steps.
+  * Mixed precision (C5) inside the model; fp32 softmax, pre-scaled query.
+  * Multi-LoRA (C7): online-loaded adapters, batched per-request selection,
+    A.(B.x) ordering.
+  * Request scheduling (C4): length-aware balanced batching.
+
+Generation pattern: per-request prefill, then slot-synchronous batched
+decode (requests join a decode batch after their prefill — continuous
+batching at decode granularity).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import hybrid_storage as HS
+from repro.core import lora as LR
+from repro.models import transformer as T
+from repro.serving import sampling as SM
+from repro.serving.scheduler import Request
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    flash_bytes: int = 0
+
+    @property
+    def prefill_tps(self) -> float:
+        return self.prefill_tokens / self.prefill_s if self.prefill_s else 0.0
+
+    @property
+    def decode_tps(self) -> float:
+        return self.decode_tokens / self.decode_s if self.decode_s else 0.0
+
+
+class Engine:
+    """Single-host engine (tests/examples); the pod path uses the same step
+    functions via launch/serve.py with the production mesh."""
+
+    def __init__(self, cfg: ModelConfig, params: dict,
+                 embedding: np.ndarray | HS.EmbeddingStore,
+                 max_seq: int = 256,
+                 flash_dir: Optional[str] = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        if isinstance(embedding, HS.EmbeddingStore):
+            self.embedding = embedding
+            self.flash = embedding.flash
+        else:
+            # put the embedding table on (simulated) Flash — C2
+            self.flash = HS.FlashStore(flash_dir or "/tmp/repro_flash",
+                                       HS.FlashSpec(simulate=False))
+            self.embedding = HS.EmbeddingStore.create(
+                self.flash, np.asarray(embedding, np.float32))
+        self.stats = EngineStats()
+        # multi-LoRA (C7): online-loaded adapter registries for q/v
+        hd = cfg.resolved_head_dim
+        self.lora_q = LR.LoraRegistry(cfg.d_model, cfg.num_heads * hd,
+                                      max_rank=8)
+        self.lora_v = LR.LoraRegistry(cfg.d_model, cfg.num_kv_heads * hd,
+                                      max_rank=8)
+        self._prefill = jax.jit(functools.partial(self._prefill_impl, cfg),
+                                static_argnames=("max_seq",))
+        self._decode = jax.jit(functools.partial(self._decode_impl, cfg))
+
+    # --- jitted steps -------------------------------------------------------
+    @staticmethod
+    def _prefill_impl(cfg, params, embeds, src_embeds=None, lora=None,
+                      *, max_seq):
+        return T.prefill(params, cfg, embeds, max_seq=max_seq,
+                         src_embeds=src_embeds, lora=lora)
+
+    @staticmethod
+    def _decode_impl(cfg, params, embeds, cache, lora=None):
+        return T.decode_step(params, cfg, embeds, cache, lora=lora)
+
+    # --- multi-LoRA (C7) ------------------------------------------------------
+    def load_adapter(self, name: str, q_ab, v_ab) -> None:
+        """Online-load one adapter: q_ab/v_ab = (A [d, r], B [r, out])."""
+        self.lora_q.load(name, *q_ab)
+        self.lora_v.load(name, *v_ab)
+
+    def _lora_for(self, requests: Sequence[Request],
+                  rows: Optional[Sequence[int]] = None) -> Optional[dict]:
+        if not self.lora_q._names:
+            return None
+        ids = [self.lora_q.slot(r.adapter) for r in requests]
+        if rows is not None:
+            ids = [ids[i] for i in rows]
+        qa, qb = self.lora_q.device_tables()
+        va, vb = self.lora_v.device_tables()
+        return {"wq_a": qa, "wq_b": qb, "wv_a": va, "wv_b": vb,
+                "ids": jnp.asarray(ids, jnp.int32)}
+
+    # --- embedding via Flash (C2) --------------------------------------------
+    def embed(self, token_ids: np.ndarray) -> jax.Array:
+        rows = self.embedding.lookup(np.asarray(token_ids))
+        self.stats.flash_bytes = self.flash.bytes_read
+        return jnp.asarray(rows, jnp.bfloat16)
+
+    # --- generation ------------------------------------------------------------
+    def generate(self, requests: Sequence[Request],
+                 sampling: SM.SamplingParams,
+                 src_embeds: Optional[np.ndarray] = None,
+                 key: Optional[jax.Array] = None) -> List[Request]:
+        """Prefill each request, then batched decode until done/max."""
+        cfg = self.cfg
+        key = key if key is not None else jax.random.PRNGKey(0)
+        caches, last_logits = [], []
+        t0 = time.perf_counter()
+        for ri, req in enumerate(requests):
+            toks = np.asarray(req.prompt_tokens)[None, :]
+            embeds = self.embed(toks)
+            src = None
+            if cfg.is_encdec:
+                assert src_embeds is not None
+                src = jnp.asarray(src_embeds[ri:ri + 1], jnp.bfloat16)
+            logits, cache = self._prefill(
+                self.params, embeds, src,
+                self._lora_for(requests, rows=[ri]), max_seq=self.max_seq)
+            caches.append(cache)
+            last_logits.append(logits)
+            self.stats.prefill_tokens += toks.size
+        jax.block_until_ready(last_logits[-1])
+        self.stats.prefill_s += time.perf_counter() - t0
+
+        # batch the decode: concat caches on the batch axis
+        cache = jax.tree.map(
+            lambda *xs: (xs[0] if getattr(xs[0], "ndim", 0) <= 1
+                         else jnp.concatenate(xs, axis=1)),
+            *caches) if len(caches) > 1 else caches[0]
+        if len(caches) > 1:
+            cache["pos"] = caches[0]["pos"]
+        logits = jnp.concatenate(last_logits, axis=0)
+
+        t0 = time.perf_counter()
+        for step in range(sampling.max_new_tokens):
+            key, sub = jax.random.split(key)
+            tok = SM.sample(logits, sampling, cfg.vocab_size, sub)
+            tok_np = np.asarray(tok)
+            for ri, req in enumerate(requests):
+                if not req.done:
+                    req.generated.append(int(tok_np[ri]))
+                    if (sampling.eos_token >= 0
+                            and tok_np[ri] == sampling.eos_token):
+                        req.done = True
+                    elif len(req.generated) >= req.max_new_tokens:
+                        req.done = True
+            if all(r.done for r in requests):
+                break
+            # C2: the next token's embedding row comes from Flash
+            embeds = self.embed(tok_np[:, None])
+            logits, cache = self._decode(self.params, embeds, cache,
+                                         self._lora_for(requests))
+            self.stats.decode_tokens += len(requests)
+        jax.block_until_ready(logits)
+        self.stats.decode_s += time.perf_counter() - t0
+        return list(requests)
+
+
+def build_engine(cfg: ModelConfig, key: Optional[jax.Array] = None,
+                 max_seq: int = 256,
+                 flash_dir: Optional[str] = None) -> Engine:
+    """Random-weights engine for examples/tests: quantized serving params +
+    a bf16 embedding table exported to Flash (the paper's conversion flow)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    params = T.init_params(cfg, key=k1, quantized=True)
+    emb = np.asarray(
+        jax.random.normal(k2, (cfg.padded_vocab_size, cfg.d_model)) * 0.02,
+        np.float32)
+    return Engine(cfg, params, emb, max_seq=max_seq, flash_dir=flash_dir)

@@ -1,0 +1,52 @@
+"""Token sampling: greedy / temperature / top-k / top-p.
+
+Pad-vocab slots (cfg.padded_vocab_size > cfg.vocab_size) are masked to
+-inf before any selection.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0         # 0 => greedy
+    top_k: int = 0                   # 0 => off
+    top_p: float = 1.0               # 1 => off
+    max_new_tokens: int = 32
+    eos_token: int = -1              # -1 => never stops early
+
+
+def mask_pad_vocab(logits: Array, vocab_size: int) -> Array:
+    V = logits.shape[-1]
+    if V == vocab_size:
+        return logits
+    idx = jnp.arange(V)
+    return jnp.where(idx[None, :] < vocab_size, logits, -jnp.inf)
+
+
+def sample(logits: Array, params: SamplingParams, vocab_size: int,
+           key: Optional[jax.Array] = None) -> Array:
+    """logits: [B, V] fp32 -> token ids [B]."""
+    logits = mask_pad_vocab(logits, vocab_size)
+    if params.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / params.temperature
+    if params.top_k:
+        kth = jax.lax.top_k(logits, params.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if params.top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(cum < params.top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    assert key is not None, "stochastic sampling needs a PRNG key"
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

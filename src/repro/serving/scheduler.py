@@ -1,0 +1,73 @@
+"""Request scheduling with workload balancing (paper §5.2, C4 — TPU analogue).
+
+The paper balances matmul rows across asymmetric big.LITTLE cores by their
+measured throughput.  On a homogeneous pod the skew is in the *work*, not
+the workers: variable-length requests.  ``balance_requests`` assigns
+requests to data-parallel replica groups proportionally to per-replica
+rate weights (and, with equal rates, equalizes total token load) — the
+same "proportional split beats uniform split" insight, reproduced
+quantitatively in benchmarks/bench_load_balance.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import List, Optional, Sequence
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt_tokens: List[int]
+    max_new_tokens: int = 32
+    adapter: Optional[str] = None      # multi-LoRA (C7)
+    # runtime state
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    @property
+    def length(self) -> int:
+        return len(self.prompt_tokens)
+
+    @property
+    def cost(self) -> float:
+        """Approximate work: prefill tokens + expected decode steps."""
+        return self.length + 4.0 * self.max_new_tokens
+
+
+def balance_requests(requests: Sequence[Request], n_workers: int,
+                     rates: Optional[Sequence[float]] = None
+                     ) -> List[List[Request]]:
+    """LPT-style proportional assignment (paper Fig. 4's 'balanced').
+
+    rates: per-worker throughput weights (uniform when None) — the paper's
+    per-core capability table; here, per-replica-group speed (useful with
+    heterogeneous pod slices).
+    """
+    rates = list(rates) if rates else [1.0] * n_workers
+    assert len(rates) == n_workers
+    buckets: List[List[Request]] = [[] for _ in range(n_workers)]
+    # min-heap on normalized finish time
+    heap = [(0.0, i) for i in range(n_workers)]
+    heapq.heapify(heap)
+    for req in sorted(requests, key=lambda r: -r.cost):
+        t, i = heapq.heappop(heap)
+        buckets[i].append(req)
+        heapq.heappush(heap, (t + req.cost / rates[i], i))
+    return buckets
+
+
+def uniform_requests(requests: Sequence[Request], n_workers: int
+                     ) -> List[List[Request]]:
+    """Round-robin (the paper's 'uniform' baseline)."""
+    buckets: List[List[Request]] = [[] for _ in range(n_workers)]
+    for j, req in enumerate(requests):
+        buckets[j % n_workers].append(req)
+    return buckets
+
+
+def makespan(buckets: Sequence[Sequence[Request]],
+             rates: Optional[Sequence[float]] = None) -> float:
+    rates = list(rates) if rates else [1.0] * len(buckets)
+    return max((sum(r.cost for r in b) / rate) if b else 0.0
+               for b, rate in zip(buckets, rates))

@@ -1,0 +1,88 @@
+"""Checkpointing: save/restore params + optimizer state + step.
+
+Layout: <dir>/step_<n>/
+  manifest.json        — tree structure, shapes, dtypes
+  arrays.npz           — flat leaves keyed by index (QuantizedTensor fields
+                         flatten like any other pytree leaves)
+
+Single-host here; on a pod each host writes its addressable shards under
+shard_<host> with the same manifest (the restore path reassembles by
+index), which is what the paper's "model conversion then load" flow maps
+onto.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _tree_paths(tree) -> list:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+
+
+def save(directory: str, step: int, params, opt_state=None,
+         extra: Optional[dict] = None) -> str:
+    out = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(out, exist_ok=True)
+    bundle = {"params": params}
+    if opt_state is not None:
+        bundle["opt_state"] = opt_state
+    leaves, treedef = jax.tree.flatten(bundle)
+    arrays = {}
+    dtypes = []
+    for i, x in enumerate(leaves):
+        a = np.asarray(x)
+        dtypes.append(str(a.dtype))
+        if a.dtype == jnp.bfloat16:
+            a = a.view(np.uint16)     # numpy can't serialize bf16 natively
+        arrays[f"a{i}"] = a
+    np.savez(os.path.join(out, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "treedef": str(treedef),
+        "dtypes": dtypes,
+        "shapes": [list(np.shape(l)) for l in leaves],
+        "extra": extra or {},
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return out
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, like, step: Optional[int] = None
+            ) -> Tuple[Any, int]:
+    """``like``: a pytree with the same structure (e.g. freshly-initialized
+    {"params":..., "opt_state":...}); returns (restored bundle, step)."""
+    if step is None:
+        step = latest_step(directory)
+        assert step is not None, f"no checkpoints under {directory}"
+    src = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(src, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(src, "arrays.npz"))
+    leaves_like, treedef = jax.tree.flatten(like)
+    assert len(leaves_like) == manifest["n_leaves"], \
+        (len(leaves_like), manifest["n_leaves"])
+    leaves = []
+    for i in range(len(leaves_like)):
+        a = data[f"a{i}"]
+        if manifest["dtypes"][i] == "bfloat16":
+            a = a.view(jnp.bfloat16)
+        leaves.append(jnp.asarray(a))
+    return jax.tree.unflatten(treedef, leaves), step

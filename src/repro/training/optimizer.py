@@ -1,0 +1,176 @@
+"""Optimizers: AdamW and Adafactor (pytree transforms, no deps).
+
+AdamW keeps fp32 m/v (12 bytes/param of state) — fine up to ~30B params on
+256 chips with 2-D (data x model) state sharding.  Adafactor keeps factored
+second moments (O(rows+cols)) and no momentum — used for the >=100B
+training dry-runs (see EXPERIMENTS.md memory math).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    grad_clip: float = 1.0
+
+
+def lr_schedule(cfg: OptConfig, step: Array) -> Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def _global_norm(tree) -> Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: OptConfig, params, grads, state):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m2 / b1c
+        vh = v2 / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no momentum)
+# ---------------------------------------------------------------------------
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params):
+    def state_for(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"f": jax.tree.map(state_for, params,
+                              is_leaf=lambda x: hasattr(x, "shape")),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: OptConfig, params, grads, state):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(p, g, s):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if _factored(p.shape):
+            vr = decay * s["vr"] + (1 - decay) * g2.mean(-1)
+            vc = decay * s["vc"] + (1 - decay) * g2.mean(-2)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(vr.mean(-1)[..., None, None], 1e-30))
+            update = g * jax.lax.rsqrt(denom + 1e-30)
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = decay * s["v"] + (1 - decay) * g2
+            update = g * jax.lax.rsqrt(v + 1e-30)
+            new_s = {"v": v}
+        # update clipping (Adafactor RMS rule)
+        rms = jnp.sqrt(jnp.mean(update * update) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        newp = (p.astype(jnp.float32) - lr * update
+                - lr * cfg.weight_decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), new_s
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_s = tdef.flatten_up_to(state["f"])
+    out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_f = tdef.unflatten([o[1] for o in out])
+    return new_p, {"f": new_f, "step": step}, gnorm
+
+
+def init_state(cfg: OptConfig, params):
+    return adamw_init(params) if cfg.kind == "adamw" else adafactor_init(params)
+
+
+def update(cfg: OptConfig, params, grads, state):
+    fn = adamw_update if cfg.kind == "adamw" else adafactor_update
+    return fn(cfg, params, grads, state)
+
+
+def abstract_state(cfg: OptConfig, abstract_params):
+    """ShapeDtypeStruct mirror of init_state (dry-run, no allocation)."""
+    return jax.eval_shape(lambda p: init_state(cfg, p), abstract_params)
+
+
+def state_specs(cfg: OptConfig, specs, abstract_params):
+    """PartitionSpec tree for the optimizer state, mirroring param specs.
+
+    Needs the abstract params because Adafactor's state *structure* depends
+    on parameter shapes (factored vs not)."""
+    from jax.sharding import PartitionSpec as P
+    if cfg.kind == "adamw":
+        return {"m": specs, "v": specs, "step": P()}
+    def state_spec(s, p):
+        s = s if isinstance(s, P) else P()
+        if _factored(p.shape):
+            sr = P(*s[:-1]) if len(s) == len(p.shape) else P()
+            sc = P(*(*s[:-2], s[-1])) if len(s) == len(p.shape) else P()
+            return {"vr": sr, "vc": sc}
+        return {"v": s if len(s) == len(p.shape) else P()}
+    f = jax.tree.map(state_spec, specs, abstract_params,
+                     is_leaf=lambda x: isinstance(x, P))
+    return {"f": f, "step": P()}

@@ -1,0 +1,115 @@
+"""Training step: cross-entropy LM loss + optimizer update, remat-scanned.
+
+``make_train_step(cfg, opt)`` returns a pure function
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+suitable for jax.jit with in/out shardings from ``train_shardings``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.training import optimizer as O
+
+Array = jax.Array
+
+MOE_LB_WEIGHT = 0.01
+MOE_Z_WEIGHT = 0.001
+
+
+def cross_entropy(logits: Array, labels: Array, mask: Optional[Array] = None
+                  ) -> Array:
+    """Mean token NLL. logits fp32 [B,T,V]; labels [B,T] int32.
+
+    The gold logit is extracted with a fused select+reduce (not
+    take_along_axis): with the vocab dim sharded on "model", each shard
+    reduces locally + one small all-reduce — a take_along_axis gather here
+    makes GSPMD all-gather the full [B,T,V] logits per chip."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0),
+                   axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()
+
+
+def chunked_cross_entropy(hidden: Array, lm_head: dict, labels: Array,
+                          mask: Optional[Array], cfg: ModelConfig,
+                          chunk: int = 512) -> Array:
+    """lm_head matmul + CE scanned over sequence chunks (checkpointed):
+    the [B, T, V] logits (and their fp32 backward copies) never exist —
+    only [B, chunk, V] per step.  A measured memory-term lever; see
+    EXPERIMENTS.md §Perf."""
+    from repro.models import layers as L
+    B, Tk, d = hidden.shape
+    if Tk % chunk or Tk <= chunk:
+        logits = L.apply_linear(hidden, lm_head, cfg.quant,
+                                out_dtype=jnp.float32)
+        return cross_entropy(logits, labels, mask)
+    nc = Tk // chunk
+    hc = jnp.moveaxis(hidden.reshape(B, nc, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+    mc = (jnp.moveaxis(mask.reshape(B, nc, chunk), 1, 0)
+          if mask is not None else None)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        s, n = carry
+        if mc is None:
+            h_i, l_i = xs
+            m_i = jnp.ones(l_i.shape, jnp.float32)
+        else:
+            h_i, l_i, m_i = xs
+        logits = L.apply_linear(h_i, lm_head, cfg.quant,
+                                out_dtype=jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        vio = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        gold = jnp.sum(jnp.where(vio == l_i[..., None], logits, 0.0), -1)
+        nll = (logz - gold) * m_i
+        return (s + nll.sum(), n + m_i.sum()), None
+
+    xs = (hc, lc) if mc is None else (hc, lc, mc)
+    (s, n), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), xs)
+    return s / jnp.maximum(n, 1)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, ctx: T.StepCtx
+            ) -> Tuple[Array, dict]:
+    hidden, aux = T.forward_hidden(params, cfg, batch, ctx)
+    loss = chunked_cross_entropy(hidden, params["lm_head"], batch["labels"],
+                                 batch.get("mask"), cfg)
+    total = loss
+    if cfg.num_experts:
+        total = total + MOE_LB_WEIGHT * aux[0] + MOE_Z_WEIGHT * aux[1]
+    return total, {"loss": loss, "moe_lb": aux[0], "moe_z": aux[1]}
+
+
+def make_train_step(cfg: ModelConfig, opt: O.OptConfig,
+                    act_spec: Optional[P] = None, remat: bool = True):
+    ctx = T.StepCtx(cfg, remat=remat, act_spec=act_spec)
+
+    def train_step(params, opt_state, batch):
+        (total, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, ctx), has_aux=True)(params)
+        new_params, new_state, gnorm = O.update(opt, params, grads, opt_state)
+        metrics = dict(metrics, total=total, grad_norm=gnorm)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def default_opt_for(cfg: ModelConfig) -> O.OptConfig:
+    """AdamW for <=~30B params; Adafactor above (state memory, see
+    EXPERIMENTS.md)."""
+    n = cfg.param_count()["total"]
+    return O.OptConfig(kind="adamw" if n < 30e9 else "adafactor")

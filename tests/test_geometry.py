@@ -1,0 +1,87 @@
+"""C6: geometry compute — Region fusion vs composed rearrangement ops."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import geometry as g
+
+
+def test_transpose_region():
+    x = jnp.arange(24).reshape(4, 6)
+    regs = g.region_transpose((4, 6), (1, 0))
+    out = g.execute_regions(regs, x, 24).reshape(6, 4)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x.T))
+
+
+def test_slice_region():
+    x = jnp.arange(40).reshape(8, 5)
+    regs = g.region_slice((8, 5), (2, 1), (3, 4))
+    out = g.execute_regions(regs, x, 12).reshape(3, 4)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x[2:5, 1:5]))
+
+
+def test_concat_regions():
+    a = jnp.arange(6).reshape(2, 3)
+    b = jnp.arange(9).reshape(3, 3) + 100
+    reg_lists = g.region_concat([(2, 3), (3, 3)], axis=0)
+    out = jnp.zeros(15, a.dtype)
+    for regs, src in zip(reg_lists, (a, b)):
+        for r in regs:
+            out = out.at[jnp.asarray(r.dst_indices())].set(
+                src.reshape(-1)[jnp.asarray(r.src_indices())])
+    np.testing.assert_array_equal(np.asarray(out.reshape(5, 3)),
+                                  np.asarray(jnp.concatenate([a, b], 0)))
+
+
+def test_fusion_transpose_then_slice():
+    x = jnp.arange(24).reshape(4, 6)
+    plan = g.fuse_chain([g.region_transpose((4, 6), (1, 0)),
+                         g.region_slice((6, 4), (1, 0), (2, 4))], [24, 8])
+    assert plan.num_stages == 1                 # fused into one pass
+    out = g.execute_plan(plan, x).reshape(2, 4)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x.T[1:3]))
+
+
+def test_fusion_reduces_memory_ops():
+    chain = [g.region_transpose((8, 8), (1, 0)),
+             g.region_transpose((8, 8), (1, 0))]
+    fused = g.fuse_chain(chain, [64, 64])
+    unfused_ops = sum(2 * r.numel for step in chain for r in step)
+    assert fused.memory_ops == unfused_ops // 2  # one pass instead of two
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 6), st.integers(2, 6),
+       st.permutations([0, 1, 2]), st.permutations([0, 1, 2]))
+def test_fused_double_transpose_matches_composed(a, b, c, p1, p2):
+    x = jnp.arange(a * b * c).reshape(a, b, c)
+    mid_shape = tuple(np.array((a, b, c))[list(p1)])
+    plan = g.fuse_chain([g.region_transpose((a, b, c), tuple(p1)),
+                         g.region_transpose(mid_shape, tuple(p2))],
+                        [a * b * c] * 2)
+    assert plan.num_stages == 1
+    ref = x.transpose(p1).transpose(p2)
+    out = g.execute_plan(plan, x).reshape(ref.shape)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_fused_slice_chain_matches_composed(data):
+    n0, m0 = 8, 8
+    x = jnp.arange(n0 * m0).reshape(n0, m0)
+    s0 = data.draw(st.integers(0, 3)), data.draw(st.integers(0, 3))
+    sz = data.draw(st.integers(2, n0 - 3)), data.draw(st.integers(2, m0 - 3))
+    perm = data.draw(st.permutations([0, 1]))
+    chain = [g.region_slice((n0, m0), s0, sz),
+             g.region_transpose(sz, tuple(perm))]
+    plan = g.fuse_chain(chain, [sz[0] * sz[1]] * 2)
+    ref = x[s0[0]:s0[0] + sz[0], s0[1]:s0[1] + sz[1]].transpose(perm)
+    out = g.execute_plan(plan, x).reshape(ref.shape)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_gather_rows_runs_compress():
+    regs = g.region_gather_rows((10, 4), [2, 3, 4, 8])
+    assert len(regs) == 2                       # [2,3,4] contiguous + [8]

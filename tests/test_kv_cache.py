@@ -1,0 +1,80 @@
+"""C1 (KV part): int8 keys / fp8 values, ring buffers, masks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kv_cache as kvc
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_append_and_dequant_keys():
+    c = kvc.init_layer_cache(2, 16, 4, 8)
+    k = jax.random.normal(KEY, (2, 3, 4, 8))
+    v = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 4, 8))
+    c = kvc.append(c, k, v, jnp.int32(0))
+    kd = kvc.dequantize_keys(c.k_q[:, :3], c.k_scale[:, :3], c.k_zero[:, :3],
+                             jnp.float32)
+    assert float(jnp.abs(kd - k).max()) < 0.02          # int8 per-token/head
+    assert float(jnp.abs(c.v[:, :3].astype(jnp.float32) - v).max()) < 0.25  # fp8
+    assert int(c.length) == 3
+
+
+def test_incremental_append_matches_bulk():
+    """Decode-time appends quantize identically to a bulk prefill append."""
+    k = jax.random.normal(KEY, (1, 4, 2, 8))
+    v = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 2, 8))
+    bulk = kvc.append(kvc.init_layer_cache(1, 8, 2, 8), k, v, jnp.int32(0))
+    inc = kvc.init_layer_cache(1, 8, 2, 8)
+    for t in range(4):
+        inc = kvc.append(inc, k[:, t:t + 1], v[:, t:t + 1], jnp.int32(t))
+    np.testing.assert_array_equal(np.asarray(bulk.k_q[:, :4]),
+                                  np.asarray(inc.k_q[:, :4]))
+    np.testing.assert_array_equal(
+        np.asarray(bulk.v[:, :4].astype(jnp.float32)),
+        np.asarray(inc.v[:, :4].astype(jnp.float32)))
+
+
+def test_ring_buffer_overwrites_oldest():
+    c = kvc.init_layer_cache(1, 4, 2, 8, window=4)
+    for p in range(6):
+        c = kvc.append(c, jnp.full((1, 1, 2, 8), float(p)),
+                       jnp.full((1, 1, 2, 8), float(p)), jnp.int32(p))
+    pos = kvc.slot_positions(c, jnp.int32(6))
+    # slots hold positions 4,5,2,3 (ring of size 4 after 6 writes)
+    np.testing.assert_array_equal(np.asarray(pos), [4, 5, 2, 3])
+    vals = kvc.dequantize_keys(c.k_q, c.k_scale, c.k_zero, jnp.float32)[0, :, 0, 0]
+    np.testing.assert_allclose(np.asarray(vals), [4, 5, 2, 3], atol=0.05)
+
+
+def test_valid_mask_full_cache():
+    c = kvc.init_layer_cache(1, 8, 2, 4)
+    m = kvc.valid_mask(c, jnp.int32(3))
+    np.testing.assert_array_equal(np.asarray(m),
+                                  [1, 1, 1, 0, 0, 0, 0, 0])
+
+
+def test_slot_positions_before_wrap():
+    c = kvc.init_layer_cache(1, 4, 2, 4, window=4)
+    pos = kvc.slot_positions(c, jnp.int32(2))
+    np.testing.assert_array_equal(np.asarray(pos), [0, 1, -1, -1])
+
+
+def test_int4_keys_pack_and_roundtrip():
+    k = jax.random.normal(jax.random.PRNGKey(3), (1, 8, 2, 16))
+    kq, ks, kz = kvc.quantize_keys(k, bits=4)
+    assert kq.shape == (1, 8, 2, 8)            # packed: half the bytes
+    kd = kvc.dequantize_keys(kq, ks, kz, jnp.float32, bits=4)
+    assert float(jnp.abs(kd - k).max()) < 0.35  # int4: 15 levels per (tok,head)
+
+
+def test_int4_cache_append():
+    c = kvc.init_layer_cache(1, 8, 2, 16, key_bits=4)
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 3, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(5), (1, 3, 2, 16))
+    c = kvc.append(c, k, v, jnp.int32(0))
+    assert c.key_bits == 4 and c.k_q.shape[-1] == 8
+    kd = kvc.dequantize_keys(c.k_q[:, :3], c.k_scale[:, :3], c.k_zero[:, :3],
+                             jnp.float32, bits=4)
+    assert float(jnp.abs(kd - k).max()) < 0.35

@@ -1,0 +1,41 @@
+"""C5: mixed float precision — fp32 softmax, query pre-scaling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import precision as PR
+
+
+def test_prescale_equivalent_to_postscale_in_fp32():
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 64))
+    pol_pre = PR.PrecisionPolicy(compute_dtype=jnp.float32,
+                                 prescale_query=True)
+    pol_post = PR.PrecisionPolicy(compute_dtype=jnp.float32,
+                                  prescale_query=False)
+    s1 = PR.attention_scores(q, k, 64, pol_pre)
+    s2 = PR.attention_scores(q, k, 64, pol_post)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_prescaling_prevents_fp16_overflow():
+    """The paper's motivating case: large query values overflow fp16 when
+    Q.K^T accumulates before scaling; pre-scaling by 1/sqrt(d_k) avoids it."""
+    q = jnp.full((1, 2, 256), 40.0)
+    k = jnp.full((1, 2, 256), 40.0)
+    unsafe = PR.attention_scores(q, k, 256, PR.UNSAFE_FP16_POLICY)
+    assert bool(jnp.isinf(unsafe).any())       # 40*40*256 = 409600 > 65504
+    safe_pol = PR.PrecisionPolicy(compute_dtype=jnp.float16,
+                                  accum_dtype=jnp.float16,
+                                  softmax_dtype=jnp.float32,
+                                  prescale_query=True)
+    safe = PR.attention_scores(q, k, 256, safe_pol)
+    assert not bool(jnp.isinf(safe).any())     # 2.5*40*256 = 25600 < 65504
+
+
+def test_softmax_fp32_under_bf16_policy():
+    x = jnp.asarray([[1e3, -1e3, 0.0]], jnp.bfloat16)
+    y = PR.softmax(x, policy=PR.DEFAULT_POLICY)
+    assert y.dtype == jnp.float32
+    assert abs(float(y.sum()) - 1.0) < 1e-6

@@ -1,0 +1,103 @@
+"""C1: asymmetric quantization (Eq. 1), packing, integer matmul paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as q
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("bits,tol", [(4, 0.25), (8, 0.02)])
+def test_roundtrip_error_bounded(bits, tol):
+    w = jax.random.normal(KEY, (64, 48))
+    qt = q.quantize(w, bits)
+    err = jnp.abs(q.dequantize(qt, jnp.float32) - w).max()
+    # per-channel asymmetric: max error <= scale/2 per channel
+    assert float(err) < tol
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_eq1_quantized_values_in_clip_range(bits):
+    w = jax.random.normal(KEY, (32, 32)) * 3
+    qt = q.quantize(w, bits)
+    vals = q.unpack_int4(qt.data) if bits == 4 else qt.data
+    lo, hi = (0, 15) if bits == 4 else (-128, 127)
+    assert int(vals.min()) >= lo and int(vals.max()) <= hi
+
+
+def test_pack_unpack_int4_inverse():
+    vals = jnp.arange(16, dtype=jnp.int8).reshape(2, 8)
+    assert (q.unpack_int4(q.pack_int4(vals)) == vals).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 17), st.integers(1, 9), st.floats(0.1, 100.0))
+def test_quantize_preserves_minmax_channels(rows, cols, scale):
+    """Eq. 1 maps w_min -> clip_min and w_max -> clip_max exactly."""
+    rng = np.random.default_rng(rows * 100 + cols)
+    w = jnp.asarray(rng.normal(size=(rows * 2, cols * 2)) * scale, jnp.float32)
+    qt = q.quantize(w, 8)
+    wd = q.dequantize(qt, jnp.float32)
+    np.testing.assert_allclose(np.asarray(wd.min(0)), np.asarray(w.min(0)),
+                               rtol=1e-2, atol=1e-3 * scale)
+    np.testing.assert_allclose(np.asarray(wd.max(0)), np.asarray(w.max(0)),
+                               rtol=1e-2, atol=1e-3 * scale)
+
+
+def test_group_quant_more_accurate():
+    w = jax.random.normal(KEY, (128, 16)) * jnp.linspace(0.1, 4.0, 128)[:, None]
+    e_pc = jnp.abs(q.dequantize(q.quantize(w, 4), jnp.float32) - w).mean()
+    e_gr = jnp.abs(q.dequantize(q.quantize(w, 4, group_size=32),
+                                jnp.float32) - w).mean()
+    assert float(e_gr) < float(e_pc)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("act_bits", [8, 16])
+def test_quant_matmul_close_to_dequant(bits, act_bits):
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 64))
+    w = jax.random.normal(jax.random.PRNGKey(2), (64, 48))
+    qt = q.quantize(w, bits)
+    cfg = q.QuantConfig(weight_bits=bits, act_bits=act_bits)
+    y = q.quant_matmul(x, qt, cfg, jnp.float32)
+    y_ref = x @ q.dequantize(qt, jnp.float32)
+    rel = jnp.abs(y - y_ref).max() / jnp.abs(y_ref).max()
+    assert float(rel) < (0.02 if act_bits == 8 else 5e-3)
+
+
+def test_activation_quant_symmetric_per_row():
+    x = jnp.asarray([[1.0, -2.0, 0.5], [100.0, 1.0, -50.0]])
+    xq, sx = q.quantize_activations(x)
+    assert xq.dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(xq * sx), np.asarray(x),
+                               atol=float(sx.max()) * 0.51)
+
+
+def test_fp8_roundtrip():
+    v = jnp.asarray([0.0, 1.0, -3.5, 440.0, 500.0])
+    out = q.from_fp8(q.to_fp8(v), jnp.float32)
+    assert abs(float(out[1]) - 1.0) < 1e-6
+    assert float(out[4]) <= 448.0          # clipped to fp8 max
+    assert abs(float(out[2]) + 3.5) < 0.2
+
+
+def test_load_prequantized_adapter():
+    w = jax.random.normal(KEY, (32, 16))
+    qt = q.quantize(w, 8)
+    qt2 = q.load_prequantized(np.asarray(qt.data), np.asarray(qt.scale),
+                              np.asarray(qt.zero), 8, (32, 16))
+    np.testing.assert_array_equal(np.asarray(q.dequantize(qt, jnp.float32)),
+                                  np.asarray(q.dequantize(qt2, jnp.float32)))
+
+
+def test_abstract_quantized_shapes_match_real():
+    w = jax.random.normal(KEY, (32, 16))
+    for bits in (4, 8):
+        real = q.quantize(w, bits)
+        abst = q.abstract_quantized((32, 16), bits)
+        assert abst.data.shape == real.data.shape
+        assert abst.scale.shape == real.scale.shape
+        assert abst.data.dtype == real.data.dtype

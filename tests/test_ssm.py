@@ -1,0 +1,123 @@
+"""SSM layers: mamba chunk/unchunk parity, decode-vs-scan parity; rwkv ditto."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import layers as L
+from repro.models import ssm as S
+
+KEY = jax.random.PRNGKey(0)
+
+
+def mamba_cfg():
+    cfg = registry.reduced(registry.get("jamba-1.5-large-398b"))
+    return dataclasses.replace(cfg, quant=dataclasses.replace(
+        cfg.quant, weight_bits=16, act_bits=16))
+
+
+def rwkv_cfg():
+    cfg = registry.reduced(registry.get("rwkv6-7b"))
+    return dataclasses.replace(cfg, quant=dataclasses.replace(
+        cfg.quant, weight_bits=16, act_bits=16))
+
+
+def test_mamba_chunked_matches_unchunked():
+    cfg = mamba_cfg()
+    b = L.ParamBuilder("init", key=KEY, qcfg=cfg.quant)
+    p = S.mamba_params(b, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.bfloat16)
+    st = S.init_mamba_state(2, cfg)
+    old = S.MAMBA_CHUNK
+    try:
+        S.MAMBA_CHUNK = 10_000
+        y_full, s_full = S.mamba_forward(x, p, cfg, st)
+        S.MAMBA_CHUNK = 4
+        y_chunk, s_chunk = S.mamba_forward(x, p, cfg, st)
+    finally:
+        S.MAMBA_CHUNK = old
+    np.testing.assert_allclose(np.asarray(y_full, np.float32),
+                               np.asarray(y_chunk, np.float32),
+                               rtol=0.05, atol=0.05)
+    np.testing.assert_allclose(np.asarray(s_full["ssm"]),
+                               np.asarray(s_chunk["ssm"]),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_mamba_decode_matches_scan():
+    cfg = mamba_cfg()
+    b = L.ParamBuilder("init", key=KEY, qcfg=cfg.quant)
+    p = S.mamba_params(b, cfg)
+    T = 6
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, T, cfg.d_model),
+                          jnp.bfloat16)
+    y_full, _ = S.mamba_forward(x, p, cfg, S.init_mamba_state(1, cfg))
+    st = S.init_mamba_state(1, cfg)
+    ys = []
+    for t in range(T):
+        y_t, st = S.mamba_decode(x[:, t:t + 1], p, cfg, st)
+        ys.append(y_t)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full, np.float32),
+                               np.asarray(y_step, np.float32),
+                               rtol=0.06, atol=0.06)
+
+
+def test_rwkv_chunked_matches_plain():
+    cfg = rwkv_cfg()
+    b = L.ParamBuilder("init", key=KEY, qcfg=cfg.quant)
+    p = S.rwkv_params(b, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, cfg.d_model),
+                          jnp.bfloat16)
+    st = S.init_rwkv_state(2, cfg)
+    old = S.RWKV_CHUNK
+    try:
+        S.RWKV_CHUNK = 4
+        y_chunk, s_chunk = S.rwkv_time_mix(x, p, cfg, st)
+        S.RWKV_CHUNK = 10_000
+        y_plain, s_plain = S.rwkv_time_mix(x, p, cfg, st)
+    finally:
+        S.RWKV_CHUNK = old
+    np.testing.assert_allclose(np.asarray(y_chunk, np.float32),
+                               np.asarray(y_plain, np.float32),
+                               rtol=0.05, atol=0.05)
+    np.testing.assert_allclose(np.asarray(s_chunk["wkv"]),
+                               np.asarray(s_plain["wkv"]),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_rwkv_decode_matches_scan():
+    cfg = rwkv_cfg()
+    b = L.ParamBuilder("init", key=KEY, qcfg=cfg.quant)
+    p = S.rwkv_params(b, cfg)
+    T = 5
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, T, cfg.d_model),
+                          jnp.bfloat16)
+    y_full, _ = S.rwkv_time_mix(x, p, cfg, S.init_rwkv_state(1, cfg))
+    st = S.init_rwkv_state(1, cfg)
+    ys = []
+    for t in range(T):
+        y_t, st = S.rwkv_time_mix(x[:, t:t + 1], p, cfg, st)
+        ys.append(y_t)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full, np.float32),
+                               np.asarray(y_step, np.float32),
+                               rtol=0.06, atol=0.06)
+
+
+def test_rwkv_data_dependent_decay_in_range():
+    cfg = rwkv_cfg()
+    b = L.ParamBuilder("init", key=KEY, qcfg=cfg.quant)
+    p = S.rwkv_params(b, cfg)
+    # decay w = exp(-exp(...)) must land in (0, 1) — the Finch hallmark
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 4, cfg.d_model),
+                          jnp.bfloat16)
+    wlo = L.apply_linear(jnp.tanh(
+        L.apply_linear(x, p["wA"], cfg.quant, out_dtype=jnp.float32)
+    ).astype(jnp.bfloat16), p["wB"], cfg.quant, out_dtype=jnp.float32)
+    w = jnp.exp(-jnp.exp(p["w0"][None, None] + wlo))
+    assert float(w.min()) > 0.0 and float(w.max()) < 1.0

@@ -1,0 +1,50 @@
+"""C3: hardware-driven tile selection — Table 2 + TPU BlockSpec solver."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tiling
+
+
+def test_paper_table2_reproduced():
+    for isa in tiling.PAPER_ISAS:
+        assert tiling.solve_cpu_tiles(isa) == tiling.PAPER_TABLE2[isa.name], \
+            isa.name
+
+
+def test_register_constraint_eq3_holds():
+    for isa in tiling.PAPER_ISAS:
+        ep, hp, lp = tiling.solve_cpu_tiles(isa)
+        assert ep + hp + ep * hp <= isa.register_budget
+        assert lp == isa.instruction_width
+
+
+def test_reorder_shapes():
+    assert tiling.reorder_shape_cpu(1024, 512, 12, 4) == (86, 128, 12, 4)
+    assert tiling.reorder_shape_gpu(512, 1024) == (16, 1024, 32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([256, 512, 1024, 4096]),
+       st.sampled_from([256, 1024, 8192]),
+       st.sampled_from([256, 2048, 8192]),
+       st.sampled_from([1.0, 2.0]))
+def test_tpu_blocks_fit_vmem_and_are_aligned(m, n, k, in_bytes):
+    spec = tiling.TPUSpec()
+    bm, bn, bk = tiling.solve_tpu_blocks(m, n, k, in_bytes=in_bytes, spec=spec)
+    assert tiling.vmem_working_set(bm, bn, bk, in_bytes) <= spec.vmem_bytes * 0.8
+    assert bm % min(spec.sublane, m) == 0 or bm == m
+    assert bn % min(spec.lane, n) == 0 or bn == n
+    assert bk % min(spec.lane, k) == 0 or bk == k
+
+
+def test_tpu_blocks_beat_naive_traffic():
+    m = n = k = 4096
+    bm, bn, bk = tiling.solve_tpu_blocks(m, n, k, in_bytes=1.0)
+    chosen = tiling.hbm_traffic(m, n, k, bm, bn, bk, 1.0)
+    naive = tiling.hbm_traffic(m, n, k, 8, 128, 128, 1.0)
+    assert chosen < naive / 4          # blocking pays off by >4x
+
+
+def test_memory_access_count_matches_paper_formula():
+    # e/e_p * h/h_p * (l e_p + l h_p + h_p e_p), Eq. 2
+    assert tiling.memory_access_count(12, 8, 4, 12, 8) == 1 * 1 * (4 * 12 + 4 * 8 + 96)
