@@ -32,8 +32,11 @@ def main() -> None:
         t = time_fn(fn, x, a, b)
         flops = jax.jit(lambda x, a, b, o=opt: lora.lora_apply(
             x, a, b, optimized=o)).lower(x, a, b).compile().cost_analysis()
+        # cost_analysis() returns a dict on recent jax, [dict] on older
+        if isinstance(flops, (list, tuple)):
+            flops = flops[0] if flops else {}
         emit(f"table3_measured_{'optimized' if opt else 'naive'}",
-             t * 1e6, f"h={H};r={R};xla_flops={flops.get('flops'):.3e}")
+             t * 1e6, f"h={H};r={R};xla_flops={flops.get('flops', 0.0):.3e}")
 
 
 if __name__ == "__main__":

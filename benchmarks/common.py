@@ -1,10 +1,21 @@
-"""Shared benchmark helpers: timing + CSV emission."""
+"""Shared benchmark helpers: timing + CSV/JSON emission."""
 from __future__ import annotations
 
+import os
 import time
-from typing import Callable
+from typing import Callable, Dict, List
 
 import jax
+
+# Every emit() lands here as well as on stdout; benchmarks/run.py dumps the
+# accumulated rows as the CI benchmark-smoke JSON artifact.
+ROWS: List[Dict] = []
+
+
+def is_smoke() -> bool:
+    """Reduced trace sizes for the CI benchmark-smoke job
+    (set by ``benchmarks/run.py --smoke``)."""
+    return os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -21,4 +32,6 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                 "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")

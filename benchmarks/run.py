@@ -1,18 +1,32 @@
 """Benchmark harness: one module per paper table/figure.
 
 Each emits ``name,us_per_call,derived`` CSV rows:
-  bench_prefill_decode   — Fig. 5 (quantization-path speed comparison)
-  bench_kv_flash         — Fig. 2 (DRAM / Flash / prefetch / exceeding)
-  bench_tile_sizes       — Table 2 (register solver) + TPU BlockSpec solver
-  bench_lora_order       — Table 3 (LoRA computation order)
-  bench_load_balance     — Fig. 4 (balanced vs uniform workload)
-  bench_param_breakdown  — Table 1 (+ §4.1 Flash-embedding arithmetic)
-  bench_quant_accuracy   — §4.2 (quantization error by scheme)
-  bench_geometry         — §5.4 (Region fusion memory-op reduction)
+  bench_prefill_decode       — Fig. 5 (quantization-path speed comparison)
+  bench_kv_flash             — Fig. 2 (DRAM / Flash / prefetch / exceeding)
+  bench_tile_sizes           — Table 2 (register solver) + TPU BlockSpec solver
+  bench_lora_order           — Table 3 (LoRA computation order)
+  bench_load_balance         — Fig. 4 (balanced vs uniform workload)
+  bench_param_breakdown      — Table 1 (+ §4.1 Flash-embedding arithmetic)
+  bench_quant_accuracy       — §4.2 (quantization error by scheme)
+  bench_geometry             — §5.4 (Region fusion memory-op reduction)
+  bench_continuous_batching  — continuous vs slot-synchronous serving
+
+Flags:
+  --smoke        reduced configurations (CI benchmark-smoke job)
+  --json PATH    dump all emitted rows as a JSON artifact
+  --only SUBSTR  run only modules whose name contains SUBSTR
 """
+import argparse
 import importlib
+import json
+import os
 import sys
 import traceback
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 MODULES = [
     "benchmarks.bench_param_breakdown",
@@ -23,18 +37,40 @@ MODULES = [
     "benchmarks.bench_quant_accuracy",
     "benchmarks.bench_kv_flash",
     "benchmarks.bench_prefill_decode",
+    "benchmarks.bench_continuous_batching",
 ]
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced benchmark configurations")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write emitted rows as JSON")
+    ap.add_argument("--only", default=None, metavar="SUBSTR",
+                    help="run only modules matching SUBSTR")
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+
+    from benchmarks import common
+
     print("name,us_per_call,derived")
     failed = []
     for mod in MODULES:
+        if args.only and args.only not in mod:
+            continue
         try:
             importlib.import_module(mod).main()
         except Exception:
             failed.append(mod)
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"smoke": args.smoke, "failed": failed,
+                       "rows": common.ROWS}, f, indent=2)
+        print(f"[run] wrote {len(common.ROWS)} rows to {args.json}",
+              file=sys.stderr)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

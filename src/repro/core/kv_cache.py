@@ -68,9 +68,11 @@ class LayerKVCache:
 
 def init_layer_cache(batch: int, max_seq: int, kv_heads: int, head_dim: int,
                      *, window: int = 0, key_bits: int = 8,
-                     value_fp8: bool = True) -> LayerKVCache:
+                     value_fp8: bool = True,
+                     per_row: bool = False) -> LayerKVCache:
     """Zero-initialized quantized cache (int8 carrier; int4 keys pack two
-    nibbles per byte along head_dim)."""
+    nibbles per byte along head_dim).  ``per_row``: track one position per
+    batch row ([B] int32 length) — continuous-batching slot caches."""
     size = min(window, max_seq) if window else max_seq
     vdt = q.FP8_DTYPE if value_fp8 else jnp.bfloat16
     kd = head_dim // 2 if key_bits == 4 else head_dim
@@ -79,13 +81,14 @@ def init_layer_cache(batch: int, max_seq: int, kv_heads: int, head_dim: int,
         k_scale=jnp.ones((batch, size, kv_heads), jnp.float32),
         k_zero=jnp.zeros((batch, size, kv_heads), jnp.float32),
         v=jnp.zeros((batch, size, kv_heads, head_dim), vdt),
-        length=jnp.zeros((), jnp.int32),
+        length=jnp.zeros((batch,) if per_row else (), jnp.int32),
         window=window, key_bits=key_bits)
 
 
 def abstract_layer_cache(batch: int, max_seq: int, kv_heads: int, head_dim: int,
                          *, window: int = 0, key_bits: int = 8,
-                         value_fp8: bool = True) -> LayerKVCache:
+                         value_fp8: bool = True,
+                         per_row: bool = False) -> LayerKVCache:
     size = min(window, max_seq) if window else max_seq
     sds = jax.ShapeDtypeStruct
     vdt = q.FP8_DTYPE if value_fp8 else jnp.bfloat16
@@ -95,7 +98,7 @@ def abstract_layer_cache(batch: int, max_seq: int, kv_heads: int, head_dim: int,
         k_scale=sds((batch, size, kv_heads), jnp.float32),
         k_zero=sds((batch, size, kv_heads), jnp.float32),
         v=sds((batch, size, kv_heads, head_dim), vdt),
-        length=sds((), jnp.int32),
+        length=sds((batch,) if per_row else (), jnp.int32),
         window=window, key_bits=key_bits)
 
 
@@ -129,14 +132,29 @@ def append(cache: LayerKVCache, k_new: Array, v_new: Array,
     """Append ``t`` new tokens' K/V at positions [pos, pos+t).
 
     Quantizes on the way in. Ring-buffer aware for windowed layers. ``pos``
-    is a scalar int32 (same for all batch rows; the serving engine aligns
-    requests to slot-synchronous decode).
+    is either a scalar int32 (all batch rows aligned — slot-synchronous
+    decode) or a [B] int32 vector of per-row positions (continuous
+    batching: each slot decodes at its own offset).
     """
     b, t, h, d = k_new.shape
     kq, ks, kz = quantize_keys(k_new, bits=cache.key_bits)
     v_cast = v_new.astype(cache.v.dtype) if cache.v.dtype != jnp.float8_e4m3fn \
         else q.to_fp8(v_new)
     size = cache.max_seq
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 1:
+        # per-row scatter: row i writes its t tokens at [pos[i], pos[i]+t)
+        rows = jnp.arange(b)[:, None]
+        slots = pos[:, None] + jnp.arange(t)[None]        # [B, t]
+        if cache.window:
+            slots = jnp.mod(slots, size)
+        k_q = cache.k_q.at[rows, slots].set(kq)
+        k_s = cache.k_scale.at[rows, slots].set(ks)
+        k_z = cache.k_zero.at[rows, slots].set(kz)
+        v = cache.v.at[rows, slots].set(v_cast)
+        return LayerKVCache(k_q=k_q, k_scale=k_s, k_zero=k_z, v=v,
+                            length=pos + t, window=cache.window,
+                            key_bits=cache.key_bits)
     if cache.window:
         # ring buffer: slot = position mod window. For t tokens this is a
         # scatter; decode (t==1) is the hot path and stays a dynamic slice.
@@ -163,10 +181,16 @@ def append(cache: LayerKVCache, k_new: Array, v_new: Array,
 
 
 def valid_mask(cache: LayerKVCache, pos: Array) -> Array:
-    """[S] bool — which cache slots hold live tokens given current pos
-    (number of tokens written so far is pos; ring slots wrap)."""
+    """bool mask of cache slots holding live tokens given current pos
+    (number of tokens written so far is pos; ring slots wrap).
+
+    pos scalar -> [S]; pos [B] (per-row positions) -> [B, S].
+    """
     size = cache.max_seq
+    pos = jnp.asarray(pos, jnp.int32)
     idx = jnp.arange(size)
+    if pos.ndim == 1:
+        pos = pos[:, None]
     if cache.window:
         n_valid = jnp.minimum(pos, size)
         # slots [0, n_valid) valid until wrap; after wrap all valid
@@ -175,10 +199,16 @@ def valid_mask(cache: LayerKVCache, pos: Array) -> Array:
 
 
 def slot_positions(cache: LayerKVCache, pos: Array) -> Array:
-    """[S] int32 — the absolute token position stored in each slot (for
-    relative-position masks/RoPE bookkeeping); invalid slots get -1."""
+    """The absolute token position stored in each slot (for relative-position
+    masks/RoPE bookkeeping); invalid slots get -1.
+
+    pos scalar -> [S]; pos [B] (per-row positions) -> [B, S].
+    """
     size = cache.max_seq
+    pos = jnp.asarray(pos, jnp.int32)
     idx = jnp.arange(size)
+    if pos.ndim == 1:
+        pos = pos[:, None]
     if cache.window:
         # slot s holds position p where p ≡ s (mod size) and p is the
         # largest such p < pos.

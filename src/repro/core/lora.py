@@ -88,6 +88,7 @@ class LoraRegistry:
         self._b = np.zeros((max_adapters, max_rank, out_dim), np.float32)
         self._names: Dict[str, int] = {}
         self._free = list(range(1, max_adapters))
+        self._device: Optional[tuple] = None   # cached device-side tables
 
     def load(self, name: str, a: np.ndarray, b: np.ndarray) -> int:
         """Online-load an adapter; pads rank up to max_rank. Returns slot."""
@@ -104,6 +105,7 @@ class LoraRegistry:
         self._b[slot] = 0.0
         self._a[slot, :, :r] = a
         self._b[slot, :r, :] = b
+        self._device = None
         return slot
 
     def unload(self, name: str) -> None:
@@ -111,12 +113,17 @@ class LoraRegistry:
         self._a[slot] = 0.0
         self._b[slot] = 0.0
         self._free.insert(0, slot)
+        self._device = None
 
     def slot(self, name: Optional[str]) -> int:
         return 0 if name is None else self._names[name]
 
     def device_tables(self) -> tuple[Array, Array]:
-        return jnp.asarray(self._a), jnp.asarray(self._b)
+        """Device-side adapter tables. Cached — tables only change on
+        load/unload, and serving calls this every decode step."""
+        if self._device is None:
+            self._device = (jnp.asarray(self._a), jnp.asarray(self._b))
+        return self._device
 
     @property
     def resident_bytes(self) -> int:

@@ -1,7 +1,13 @@
 """Serving driver: batched requests against a quantized engine.
 
+Continuous batching (default): step-driven EngineLoop with per-slot KV
+management — requests join/leave the decode batch without draining it.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
-      --requests 8 --max-new 16
+      --requests 8 --max-new 16 --slots 4
+
+Legacy slot-synchronous path: --no-continuous (the paper's two-phase
+generate; kept as the benchmark baseline).
 """
 from __future__ import annotations
 
@@ -26,6 +32,15 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--continuous", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="continuous batching (EngineLoop) vs the legacy "
+                         "slot-synchronous two-phase generate")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode-batch rows (continuous mode)")
+    ap.add_argument("--preempt-patience", type=int, default=0,
+                    help=">0: evict the longest-running request after a "
+                         "queued request waits this many steps")
     args = ap.parse_args()
 
     cfg = registry.get(args.arch)
@@ -41,18 +56,36 @@ def main() -> None:
                         1, cfg.vocab_size, size=int(rng.integers(4, 32)))),
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]
-    # C4: balanced assignment report (vs uniform)
-    bal = balance_requests(reqs, 4)
-    uni = uniform_requests(reqs, 4)
-    print(f"[serve] C4 makespan: balanced={makespan(bal):.0f} "
-          f"uniform={makespan(uni):.0f}")
-    src = None
-    if cfg.is_encdec:
-        src = np.asarray(rng.normal(size=(len(reqs), 16, cfg.d_model)) * 0.02,
-                         np.float32)
-    out = eng.generate(reqs, SM.SamplingParams(
-        temperature=args.temperature, top_k=50, max_new_tokens=args.max_new),
-        src_embeds=src)
+    sp = SM.SamplingParams(temperature=args.temperature, top_k=50,
+                           max_new_tokens=args.max_new)
+
+    if args.continuous and not cfg.is_encdec:
+        loop = E.EngineLoop(eng, max_slots=args.slots,
+                            preempt_patience=args.preempt_patience)
+        t0 = time.perf_counter()
+        out = loop.run(reqs, sp)
+        wall = time.perf_counter() - t0
+        s = eng.stats
+        done = sum(len(r.generated) for r in out)
+        print(f"[serve] continuous: {len(out)} requests, {done} new tokens "
+              f"in {wall:.2f}s ({done / wall:.1f} tok/s) on "
+              f"{args.slots} slots")
+        print(f"[serve] TTFT p50={s.ttft(50) * 1e3:.0f}ms "
+              f"p95={s.ttft(95) * 1e3:.0f}ms; "
+              f"TPOT p50={s.tpot(50) * 1e3:.0f}ms; "
+              f"latency p50={s.latency(50):.2f}s p95={s.latency(95):.2f}s")
+    else:
+        # C4: balanced assignment report (vs uniform)
+        bal = balance_requests(reqs, 4)
+        uni = uniform_requests(reqs, 4)
+        print(f"[serve] C4 makespan: balanced={makespan(bal):.0f} "
+              f"uniform={makespan(uni):.0f}")
+        src = None
+        if cfg.is_encdec:
+            src = np.asarray(
+                rng.normal(size=(len(reqs), 16, cfg.d_model)) * 0.02,
+                np.float32)
+        out = eng.generate(reqs, sp, src_embeds=src)
     for r in out[:4]:
         print(f"[serve] req {r.uid}: prompt {len(r.prompt_tokens)} toks -> "
               f"{r.generated}")

@@ -187,9 +187,11 @@ def decode_attention_ref(qh: Array, cache: kvc.LayerKVCache, pos: Array,
     s = jnp.einsum("btkgd,bskd->bkgts",
                    qh.reshape(B, T, Hkv, G, D).astype(policy.compute_dtype), k,
                    preferred_element_type=jnp.float32)   # [B,Hkv,G,1,S]
-    slot_pos = kvc.slot_positions(cache, pos)            # [S]
+    slot_pos = kvc.slot_positions(cache, pos)            # [S] or [B,S]
     mask = slot_pos >= 0
-    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    if mask.ndim == 1:
+        mask = mask[None]
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s.astype(policy.softmax_dtype), axis=-1)
     out = jnp.einsum("bkgts,bskd->btkgd", p.astype(policy.compute_dtype), v,
                      preferred_element_type=jnp.float32)

@@ -148,12 +148,12 @@ def abstract_params(cfg: ModelConfig, *, quantized: bool = False,
 # ===========================================================================
 
 def _cache_for_pattern(cfg: ModelConfig, pat: LayerPattern, batch: int,
-                       max_seq: int, abstract: bool):
+                       max_seq: int, abstract: bool, per_row: bool = False):
     if pat.kind == "attn":
         fn = kvc.abstract_layer_cache if abstract else kvc.init_layer_cache
         return fn(batch, max_seq, cfg.num_kv_heads, cfg.resolved_head_dim,
                   window=pat.window, key_bits=cfg.quant.kv_key_bits,
-                  value_fp8=cfg.quant.kv_value_fp8)
+                  value_fp8=cfg.quant.kv_value_fp8, per_row=per_row)
     if pat.kind == "mamba":
         fn = S.abstract_mamba_state if abstract else S.init_mamba_state
         return fn(batch, cfg)
@@ -180,18 +180,25 @@ def _stack_cache(tree, count: int, abstract: bool):
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
                *, abstract: bool = False,
-               cross_len: int = 0) -> dict:
+               cross_len: int = 0, per_row: bool = False) -> dict:
     """The full decode state: per-stack tuples of stacked per-pattern caches
-    (+ cross-attention caches for enc-dec archs)."""
+    (+ cross-attention caches for enc-dec archs).
+
+    per_row=True builds a continuous-batching cache: ``pos`` is a [B] int32
+    vector (one decode offset per slot) instead of a scalar, and each
+    LayerKVCache tracks per-row lengths.
+    """
     stacks = []
     for patterns, count in cfg.layer_plan():
         stacks.append(tuple(
-            _stack_cache(_cache_for_pattern(cfg, pat, batch, max_seq, abstract),
+            _stack_cache(_cache_for_pattern(cfg, pat, batch, max_seq, abstract,
+                                            per_row=per_row),
                          count, abstract)
             for pat in patterns))
+    pos_shape = (batch,) if per_row else ()
     cache: dict = {"stacks": tuple(stacks),
-                   "pos": (jax.ShapeDtypeStruct((), jnp.int32) if abstract
-                           else jnp.zeros((), jnp.int32))}
+                   "pos": (jax.ShapeDtypeStruct(pos_shape, jnp.int32) if abstract
+                           else jnp.zeros(pos_shape, jnp.int32))}
     if cfg.is_encdec and cross_len:
         cross = _cache_for_pattern(cfg, LayerPattern("attn"), batch,
                                    cross_len, abstract)
@@ -202,6 +209,39 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
                 _stack_cache(cross, count, abstract) for _ in patterns))
         cache["cross"] = tuple(cross_stacks)
     return cache
+
+
+def scatter_request(cache: dict, single: dict, slot: Array) -> dict:
+    """Write a freshly prefilled single-request cache (batch=1) into row
+    ``slot`` of a shared per-row decode cache (continuous batching).
+
+    The freed slot's stale KV/state is simply overwritten for positions
+    [0, T) and masked beyond (per-row ``pos`` governs validity), so slot
+    reuse needs no zeroing and no re-jit.  ``slot`` may be a traced int32 —
+    one compiled scatter serves every slot.
+    """
+    def upd(big, small):
+        small = small.astype(big.dtype)
+        if big.ndim == small.ndim:          # [L, 1, ...] into [L, B, ...]
+            return jax.lax.dynamic_update_slice_in_dim(big, small, slot,
+                                                       axis=1)
+        # per-layer scalar (e.g. LayerKVCache.length [L] into [L, B])
+        return jax.lax.dynamic_update_index_in_dim(big, small, slot, axis=1)
+
+    new = dict(cache)
+    new["stacks"] = jax.tree.map(upd, cache["stacks"], single["stacks"])
+    new["pos"] = cache["pos"].at[slot].set(
+        jnp.asarray(single["pos"], jnp.int32))
+    return new
+
+
+def free_slots(cache: dict, rows: Array) -> dict:
+    """Reset the positions of finished/preempted rows to zero. The KV bytes
+    stay in place; per-row masks make them unreachable until the next
+    prefill scatter reuses the row."""
+    new = dict(cache)
+    new["pos"] = cache["pos"].at[rows].set(0)
+    return new
 
 
 # ===========================================================================
@@ -457,9 +497,17 @@ def prefill(params: dict, cfg: ModelConfig, embeds: Array, max_seq: int,
             positions: Optional[Array] = None,
             src_embeds: Optional[Array] = None,
             ctx: Optional[StepCtx] = None,
-            lora: Optional[dict] = None) -> Tuple[Array, dict]:
+            lora: Optional[dict] = None,
+            valid_len: Optional[Array] = None) -> Tuple[Array, dict]:
     """Prefill: embeds [B, T, d] (token rows come from Flash, C2).
-    Returns (last-token logits [B, V], cache)."""
+    Returns (last-token logits [B, V], cache).
+
+    valid_len (scalar int32): true prompt length when ``embeds`` is padded
+    to a jit bucket — logits are taken at valid_len-1 and the cache position
+    is set to valid_len, so the padded tail stays masked.  Only valid for
+    causal full-cache models (padding would corrupt ring buffers / SSM
+    state).
+    """
     ctx = ctx or StepCtx(cfg)
     if lora is not None:
         ctx = dataclasses.replace(ctx, lora=lora)
@@ -476,18 +524,31 @@ def prefill(params: dict, cfg: ModelConfig, embeds: Array, max_seq: int,
         enc_out = encode(params, cfg, src_embeds, spos, ctx)
         cache["cross"] = build_cross_caches(params, cfg, enc_out)
     x, cache, _ = _run_stacks(x, params, cfg, "prefill", positions, cache, ctx)
-    cache["pos"] = jnp.asarray(T, jnp.int32)
-    logits = _logits(x[:, -1:], params, cfg)[:, 0]
+    if valid_len is None:
+        cache["pos"] = jnp.asarray(T, jnp.int32)
+        last = x[:, -1:]
+    else:
+        vl = jnp.asarray(valid_len, jnp.int32)
+        cache["pos"] = vl
+        last = jax.lax.dynamic_slice_in_dim(x, vl - 1, 1, axis=1)
+    logits = _logits(last, params, cfg)[:, 0]
     return logits, cache
 
 
 def decode_step(params: dict, cfg: ModelConfig, embeds: Array, cache: dict,
                 positions: Optional[Array] = None,
                 ctx: Optional[StepCtx] = None,
-                lora: Optional[dict] = None) -> Tuple[Array, dict]:
+                lora: Optional[dict] = None,
+                active: Optional[Array] = None) -> Tuple[Array, dict]:
     """One decode step. embeds: [B, 1, d] (row fetched from Flash — C2).
     Returns (logits [B, V], new cache).  ``lora``: per-call multi-LoRA
-    tables + per-request adapter ids (C7)."""
+    tables + per-request adapter ids (C7).
+
+    With a per-row cache (``pos`` of shape [B]) each row decodes at its own
+    offset — continuous batching.  ``active`` ([B] bool) freezes the
+    positions of empty slots: their rows still flow through the batch (cheap
+    on a fixed-shape step) but write only to masked scratch space and never
+    advance."""
     ctx = ctx or StepCtx(cfg)
     if lora is not None:
         ctx = dataclasses.replace(ctx, lora=lora)
@@ -495,8 +556,14 @@ def decode_step(params: dict, cfg: ModelConfig, embeds: Array, cache: dict,
     B, T = x.shape[:2]
     pos = cache["pos"]
     if positions is None:
-        positions = jnp.broadcast_to(pos[None, None], (B, T))
+        if jnp.ndim(pos) == 1:
+            positions = pos[:, None] + jnp.arange(T)[None]
+        else:
+            positions = jnp.broadcast_to(pos[None, None], (B, T))
     x, cache, _ = _run_stacks(x, params, cfg, "decode", positions, cache, ctx)
-    cache["pos"] = pos + T
+    if active is not None:
+        cache["pos"] = jnp.where(active, pos + T, pos)
+    else:
+        cache["pos"] = pos + T
     logits = _logits(x, params, cfg)[:, -1]
     return logits, cache

@@ -30,7 +30,24 @@ from repro.core import hybrid_storage as HS
 from repro.core import lora as LR
 from repro.models import transformer as T
 from repro.serving import sampling as SM
-from repro.serving.scheduler import Request
+from repro.serving.scheduler import ContinuousScheduler, Request
+
+
+@dataclasses.dataclass
+class RequestStats:
+    """Per-request serving latency record (continuous batching)."""
+    uid: int
+    ttft_s: float          # arrival -> first token
+    tpot_s: float          # mean inter-token time after the first
+    latency_s: float       # arrival -> completion
+    new_tokens: int
+    preemptions: int = 0
+
+
+def percentile(xs: Sequence[float], p: float) -> float:
+    if not xs:
+        return 0.0
+    return float(np.percentile(np.asarray(xs, np.float64), p))
 
 
 @dataclasses.dataclass
@@ -40,6 +57,8 @@ class EngineStats:
     prefill_s: float = 0.0
     decode_s: float = 0.0
     flash_bytes: int = 0
+    # continuous batching: per-request TTFT/TPOT records
+    requests: List[RequestStats] = dataclasses.field(default_factory=list)
 
     @property
     def prefill_tps(self) -> float:
@@ -48,6 +67,15 @@ class EngineStats:
     @property
     def decode_tps(self) -> float:
         return self.decode_tokens / self.decode_s if self.decode_s else 0.0
+
+    def ttft(self, p: float = 50.0) -> float:
+        return percentile([r.ttft_s for r in self.requests], p)
+
+    def tpot(self, p: float = 50.0) -> float:
+        return percentile([r.tpot_s for r in self.requests], p)
+
+    def latency(self, p: float = 50.0) -> float:
+        return percentile([r.latency_s for r in self.requests], p)
 
 
 class Engine:
@@ -98,11 +126,14 @@ class Engine:
         self.lora_q.load(name, *q_ab)
         self.lora_v.load(name, *v_ab)
 
-    def _lora_for(self, requests: Sequence[Request],
+    def _lora_for(self, requests: Sequence[Optional[Request]],
                   rows: Optional[Sequence[int]] = None) -> Optional[dict]:
+        """Per-row adapter tables; None entries (empty continuous-batching
+        slots) select the zero adapter."""
         if not self.lora_q._names:
             return None
-        ids = [self.lora_q.slot(r.adapter) for r in requests]
+        ids = [self.lora_q.slot(r.adapter) if r is not None else 0
+               for r in requests]
         if rows is not None:
             ids = [ids[i] for i in rows]
         qa, qb = self.lora_q.device_tables()
@@ -173,6 +204,211 @@ class Engine:
             self.stats.decode_tokens += len(requests)
         jax.block_until_ready(logits)
         self.stats.decode_s += time.perf_counter() - t0
+        return list(requests)
+
+
+class EngineLoop:
+    """Step-driven continuous-batching serving loop.
+
+    Replaces the slot-synchronous two-phase generate with one decode batch
+    of ``max_slots`` rows over a shared per-row KV cache:
+
+      * a request joins the moment a slot frees (prefill-on-join): its
+        prompt is prefilled alone, then scattered into the freed cache row
+        — no re-jit, decode shapes never change;
+      * every step advances all occupied rows by one token at their own
+        per-row positions; finished rows are reclaimed immediately;
+      * admission is FIFO + cost tie-break under slot/token budgets, with
+        optional preemption of the longest-running request (resume
+        re-prefills prompt+generated, so greedy output is unchanged).
+
+    Per-request TTFT/TPOT/latency land in ``engine.stats.requests``.
+    """
+
+    def __init__(self, engine: Engine, max_slots: int = 4,
+                 token_budget: Optional[int] = None,
+                 preempt_patience: int = 0,
+                 prefill_buckets: bool = True):
+        cfg = engine.cfg
+        assert not cfg.is_encdec, "continuous batching: decoder-only models"
+        self.eng = engine
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.scheduler = ContinuousScheduler(
+            max_slots, engine.max_seq, token_budget=token_budget,
+            preempt_patience=preempt_patience)
+        # padding prompts to pow2 buckets caps prefill recompiles, but is
+        # only sound for full-cache attention (padded tails would wrap ring
+        # buffers / corrupt sequential SSM state)
+        self._can_bucket = prefill_buckets and all(
+            pat.kind == "attn" and pat.window == 0
+            for pats, _ in cfg.layer_plan() for pat in pats)
+        self.cache = T.init_cache(cfg, max_slots, engine.max_seq,
+                                  per_row=True)
+        self.logits = jnp.zeros((max_slots, cfg.padded_vocab_size),
+                                jnp.float32)
+        # slot -> queue of already-generated tokens a resumed request still
+        # has to replay through decode before sampling continues
+        self._resume_hold: Dict[int, List[int]] = {}
+        self._prefill = jax.jit(functools.partial(self._prefill_impl, cfg),
+                                static_argnames=("max_seq",))
+        self._decode = jax.jit(functools.partial(self._decode_impl, cfg))
+        self._scatter = jax.jit(T.scatter_request)
+
+    @staticmethod
+    def _prefill_impl(cfg, params, embeds, lora, valid_len, *, max_seq):
+        return T.prefill(params, cfg, embeds, max_seq=max_seq, lora=lora,
+                         valid_len=valid_len)
+
+    @staticmethod
+    def _decode_impl(cfg, params, embeds, cache, lora, active):
+        return T.decode_step(params, cfg, embeds, cache, lora=lora,
+                             active=active)
+
+    # --- helpers -----------------------------------------------------------
+    def _bucket(self, t: int) -> int:
+        if not self._can_bucket:
+            return t
+        b = 8
+        while b < t:
+            b *= 2
+        return min(b, self.eng.max_seq)
+
+    def _slot_lora(self) -> Optional[dict]:
+        return self.eng._lora_for(self.scheduler.running)
+
+    def _row_lora(self, req: Request) -> Optional[dict]:
+        return self.eng._lora_for([req])
+
+    def _prefill_into_slot(self, req: Request, slot: int) -> None:
+        toks = list(req.prompt_tokens)
+        if req.generated:
+            # preemption resume: prefill the prompt only, then replay every
+            # generated token through the ordinary batched decode (see
+            # run()).  Replaying through decode — not prefill — rebuilds the
+            # cache by the exact code path the uninterrupted run used
+            # (quantized-cache attention), so greedy decoding resumes
+            # identically; prefill's flash attention over raw bf16 K/V
+            # would leave slightly different history entries behind.
+            self._resume_hold[slot] = list(req.generated)
+        t = len(toks)
+        bucket = self._bucket(t)
+        ids = np.zeros((1, bucket), np.int64)
+        ids[0, :t] = np.asarray(toks)
+        t0 = time.perf_counter()
+        embeds = self.eng.embed(ids)
+        logits1, single = self._prefill(
+            self.eng.params, embeds, self._row_lora(req),
+            jnp.asarray(t, jnp.int32), max_seq=self.eng.max_seq)
+        self.cache = self._scatter(self.cache, single,
+                                   jnp.asarray(slot, jnp.int32))
+        self.logits = self.logits.at[slot].set(logits1[0])
+        jax.block_until_ready(self.logits)
+        self.eng.stats.prefill_tokens += t
+        self.eng.stats.prefill_s += time.perf_counter() - t0
+
+    # --- the serving loop --------------------------------------------------
+    def run(self, requests: Sequence[Request],
+            sampling: SM.SamplingParams,
+            arrivals: Optional[Sequence[int]] = None,
+            key: Optional[jax.Array] = None) -> List[Request]:
+        """Serve a trace to completion.  ``arrivals``: per-request arrival
+        step (trace replay); default: everything queued at step 0."""
+        eng, sched, cfg = self.eng, self.scheduler, self.cfg
+        key = key if key is not None else jax.random.PRNGKey(0)
+        arrivals = list(arrivals) if arrivals is not None \
+            else [0] * len(requests)
+        assert len(arrivals) == len(requests)
+        for req in requests:
+            need = req.length + req.max_new_tokens
+            assert need <= eng.max_seq, \
+                f"request {req.uid} cannot fit in max_seq={eng.max_seq}"
+            assert need <= sched.token_budget, \
+                f"request {req.uid} exceeds the scheduler token budget"
+        pending = sorted(zip(arrivals, requests), key=lambda p: (p[0], p[1].uid))
+        pending = list(pending)
+
+        t0 = time.perf_counter()
+        pf0 = eng.stats.prefill_s
+        step = 0
+        while pending or sched.has_work():
+            sched.step = step
+            now = time.perf_counter()
+            while pending and pending[0][0] <= step:
+                _, req = pending.pop(0)
+                req.arrival_t = now
+                sched.submit(req, arrival_step=step)
+            # replaying rows make no sampling progress, so evicting one
+            # could livelock (replay restarts from scratch every stint)
+            preempted = sched.maybe_preempt(
+                exclude_slots=set(self._resume_hold),
+                sampling_cap=sampling.max_new_tokens)
+            if preempted is not None:
+                freed_slot, _ = preempted
+                self.cache = T.free_slots(
+                    self.cache, jnp.asarray([freed_slot], jnp.int32))
+            for slot, req in sched.admit():
+                self._prefill_into_slot(req, slot)
+            running = list(sched.running)
+            if not any(r is not None for r in running):
+                step += 1
+                continue
+
+            # one token for every occupied slot (newly admitted rows sample
+            # from their prefill logits — TTFT is measured right here)
+            key, sub = jax.random.split(key)
+            tok = SM.sample(self.logits, sampling, cfg.vocab_size, sub)
+            tok_np = np.asarray(tok)
+            now = time.perf_counter()
+            for slot, req in enumerate(running):
+                if req is None or slot in self._resume_hold:
+                    continue
+                t_id = int(tok_np[slot])
+                req.generated.append(t_id)
+                if req.first_token_t == 0.0:
+                    req.first_token_t = now
+                cap = min(req.max_new_tokens, sampling.max_new_tokens)
+                if ((sampling.eos_token >= 0 and t_id == sampling.eos_token)
+                        or len(req.generated) >= cap):
+                    req.finish_t = now
+                    sched.finish(req)
+                    self.cache = T.free_slots(
+                        self.cache, jnp.asarray([slot], jnp.int32))
+                    eng.stats.requests.append(RequestStats(
+                        uid=req.uid, ttft_s=req.ttft, tpot_s=req.tpot,
+                        latency_s=req.finish_t - req.arrival_t,
+                        new_tokens=len(req.generated),
+                        preemptions=req.preemptions))
+
+            if not any(r is not None for r in sched.running):
+                step += 1
+                continue
+            # batched decode: every occupied row advances at its own pos
+            ids = np.zeros((self.max_slots, 1), np.int64)
+            active = np.zeros((self.max_slots,), bool)
+            for slot, req in enumerate(sched.running):
+                if req is None:
+                    continue
+                replay = self._resume_hold.get(slot)
+                if replay:
+                    ids[slot, 0] = replay.pop(0)
+                    if not replay:
+                        del self._resume_hold[slot]
+                        # restart the stint clock: preemption patience
+                        # should buy fresh tokens, not replay catch-up
+                        req.admit_step = step
+                else:
+                    ids[slot, 0] = req.generated[-1]
+                active[slot] = True
+            embeds = eng.embed(ids)
+            self.logits, self.cache = self._decode(
+                eng.params, embeds, self.cache, self._slot_lora(),
+                jnp.asarray(active))
+            eng.stats.decode_tokens += int(active.sum())
+            step += 1
+        jax.block_until_ready(self.logits)
+        wall = time.perf_counter() - t0
+        eng.stats.decode_s += wall - (eng.stats.prefill_s - pf0)
         return list(requests)
 
 

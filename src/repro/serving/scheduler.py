@@ -1,18 +1,27 @@
-"""Request scheduling with workload balancing (paper §5.2, C4 — TPU analogue).
+"""Request scheduling: continuous batching + workload balancing.
 
-The paper balances matmul rows across asymmetric big.LITTLE cores by their
-measured throughput.  On a homogeneous pod the skew is in the *work*, not
-the workers: variable-length requests.  ``balance_requests`` assigns
-requests to data-parallel replica groups proportionally to per-replica
-rate weights (and, with equal rates, equalizes total token load) — the
-same "proportional split beats uniform split" insight, reproduced
+Workload balancing (paper §5.2, C4 — TPU analogue): the paper balances
+matmul rows across asymmetric big.LITTLE cores by their measured
+throughput.  On a homogeneous pod the skew is in the *work*, not the
+workers: variable-length requests.  ``balance_requests`` assigns requests
+to data-parallel replica groups proportionally to per-replica rate weights
+(and, with equal rates, equalizes total token load) — the same
+"proportional split beats uniform split" insight, reproduced
 quantitatively in benchmarks/bench_load_balance.py.
+
+Continuous batching (``ContinuousScheduler``): per-slot admission for the
+step-driven EngineLoop.  Requests join the decode batch the moment a slot
+frees (prefill-on-join) instead of waiting for the whole batch to drain —
+this kills the head-of-line blocking that makes slot-synchronous serving
+lose throughput on mixed-length traffic.  Admission is FIFO with the
+existing cost model as tie-break, bounded by slot and token budgets, with
+optional preemption of the longest-running request under queue pressure.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass
@@ -24,6 +33,16 @@ class Request:
     # runtime state
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # continuous-batching runtime state (None/-1 until scheduled)
+    slot: int = -1                     # decode-batch row currently held
+    arrival_step: int = -1             # step the request entered the queue
+    admit_step: int = -1               # step of (latest) admission
+    finish_step: int = -1              # step the request completed
+    preemptions: int = 0               # times evicted and requeued
+    # per-request latency stats (wall-clock, filled by EngineLoop)
+    arrival_t: float = 0.0
+    first_token_t: float = 0.0
+    finish_t: float = 0.0
 
     @property
     def length(self) -> int:
@@ -33,6 +52,25 @@ class Request:
     def cost(self) -> float:
         """Approximate work: prefill tokens + expected decode steps."""
         return self.length + 4.0 * self.max_new_tokens
+
+    @property
+    def context_tokens(self) -> List[int]:
+        """Tokens to (re)prefill on admission: prompt + anything already
+        generated (non-empty after a preemption — resume re-prefills)."""
+        return list(self.prompt_tokens) + list(self.generated)
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token (s)."""
+        return self.first_token_t - self.arrival_t
+
+    @property
+    def tpot(self) -> float:
+        """Time per output token after the first (s)."""
+        n = len(self.generated)
+        if n <= 1:
+            return 0.0
+        return (self.finish_t - self.first_token_t) / (n - 1)
 
 
 def balance_requests(requests: Sequence[Request], n_workers: int,
@@ -71,3 +109,140 @@ def makespan(buckets: Sequence[Sequence[Request]],
     rates = list(rates) if rates else [1.0] * len(buckets)
     return max((sum(r.cost for r in b) / rate) if b else 0.0
                for b, rate in zip(buckets, rates))
+
+
+# ===========================================================================
+# Continuous batching
+# ===========================================================================
+
+class ContinuousScheduler:
+    """Slot admission for the step-driven EngineLoop.
+
+    * FIFO by arrival step; requests arriving on the same step are
+      tie-broken by the C4 cost model (cheapest first — short requests
+      drain slots faster, which is what continuous batching exploits).
+    * Budgets: at most ``max_slots`` concurrent requests, and the committed
+      token load (context + remaining decode budget, summed over running
+      requests) never exceeds ``token_budget``.
+    * Optional preemption: when a request has been waiting longer than
+      ``preempt_patience`` steps with no slot free, the longest-running
+      active request is evicted and requeued.  Resume re-prefills
+      prompt+generated into a freed slot, so greedy decoding is unaffected.
+    """
+
+    def __init__(self, max_slots: int, max_seq: int,
+                 token_budget: Optional[int] = None,
+                 preempt_patience: int = 0):
+        assert max_slots >= 1
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.token_budget = token_budget or max_slots * max_seq
+        self.preempt_patience = preempt_patience
+        self.waiting: List[Request] = []
+        self.running: List[Optional[Request]] = [None] * max_slots
+        self.step = 0
+
+    # --- queue state -------------------------------------------------------
+    @property
+    def active(self) -> List[Request]:
+        return [r for r in self.running if r is not None]
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(r is not None for r in self.running)
+
+    def _committed_tokens(self) -> int:
+        return sum(len(r.context_tokens) + r.max_new_tokens -
+                   len(r.generated) for r in self.active)
+
+    def _fits(self, req: Request) -> bool:
+        need = len(req.context_tokens) + req.max_new_tokens - len(req.generated)
+        return self._committed_tokens() + need <= self.token_budget
+
+    # --- transitions -------------------------------------------------------
+    def submit(self, req: Request, arrival_step: Optional[int] = None) -> None:
+        req.arrival_step = self.step if arrival_step is None else arrival_step
+        self.waiting.append(req)
+
+    def admit(self) -> List[Tuple[int, Request]]:
+        """Fill free slots from the queue (FIFO, cost tie-break).  Returns
+        the (slot, request) pairs admitted this step — the engine prefills
+        each into its slot."""
+        self.waiting.sort(key=lambda r: (r.arrival_step, r.cost, r.uid))
+        admitted: List[Tuple[int, Request]] = []
+        for slot in range(self.max_slots):
+            if self.running[slot] is not None or not self.waiting:
+                continue
+            cand = None
+            for req in self.waiting:
+                # remaining decode budget is max_new - generated: a resumed
+                # request's generated tokens are already in context_tokens
+                need = (len(req.context_tokens) + req.max_new_tokens
+                        - len(req.generated))
+                if need > self.max_seq:
+                    continue        # can never run; don't block the queue
+                if self._fits(req):
+                    cand = req
+                # strict FIFO under the token budget: a head that doesn't
+                # fit *yet* blocks later arrivals (letting small requests
+                # slip past would starve a large head indefinitely)
+                break
+            if cand is None:
+                break
+            self.waiting.remove(cand)
+            cand.slot = slot
+            cand.admit_step = self.step
+            self.running[slot] = cand
+            admitted.append((slot, cand))
+        return admitted
+
+    def maybe_preempt(self, exclude_slots: Optional[set] = None,
+                      sampling_cap: Optional[int] = None
+                      ) -> Optional[Tuple[int, Request]]:
+        """Under queue pressure, evict the longest-running request (most
+        generated tokens) so the head of the queue can make progress.
+        At most one eviction per step; never evicts a request admitted this
+        step, one about to finish (``sampling_cap`` tightens the per-request
+        budget the engine actually decodes to), or one in ``exclude_slots``
+        (the engine shields rows mid-resume-replay).
+        Returns (freed_slot, victim)."""
+        if not self.preempt_patience or not self.waiting:
+            return None
+        head = min(self.waiting,
+                   key=lambda r: (r.arrival_step, r.cost, r.uid))
+        if self.step - head.arrival_step < self.preempt_patience:
+            return None
+        if any(r is None for r in self.running):
+            return None                      # a slot is free; no need
+        # a victim must have held its slot >= patience steps: without this
+        # minimum stint, a deep queue (every waiter past patience) would
+        # trigger an eviction every step and each stint would net ~1 token
+        # per re-prefill — pure thrash
+        def cap(r: Request) -> int:
+            return (min(r.max_new_tokens, sampling_cap)
+                    if sampling_cap is not None else r.max_new_tokens)
+
+        victims = [r for r in self.running
+                   if r is not None
+                   and (exclude_slots is None or r.slot not in exclude_slots)
+                   and r.admit_step + self.preempt_patience <= self.step
+                   and len(r.generated) >= 1
+                   and len(r.generated) < cap(r) - 1]
+        if not victims:
+            return None
+        victim = max(victims, key=lambda r: len(r.generated))
+        freed = victim.slot
+        self.running[freed] = None
+        victim.slot = -1
+        victim.preemptions += 1
+        # re-enters at the BACK of the FIFO (otherwise the victim's early
+        # arrival step would win the very next admission and ping-pong)
+        victim.arrival_step = self.step
+        self.waiting.append(victim)
+        return freed, victim
+
+    def finish(self, req: Request) -> None:
+        req.done = True
+        req.finish_step = self.step
+        if req.slot >= 0:
+            self.running[req.slot] = None
+        req.slot = -1

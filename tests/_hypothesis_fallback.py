@@ -1,0 +1,105 @@
+"""Minimal stand-in for ``hypothesis`` used when the real package is absent.
+
+``hypothesis`` is a declared dev dependency (see pyproject.toml) and CI
+installs it, but the property tests should still collect and pass in lean
+environments (e.g. a container with only jax/numpy/pytest).  ``conftest.py``
+registers this module as ``hypothesis`` in ``sys.modules`` only when the
+real import fails.
+
+Only the API surface the test-suite uses is implemented: ``given``,
+``settings``, ``strategies.integers/floats/permutations/sampled_from/data``.
+Examples are drawn from a fixed-seed PRNG, so tests stay deterministic.
+"""
+from __future__ import annotations
+
+import random
+import types
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value, max_value, **_kw):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def permutations(values):
+    seq = list(values)
+
+    def draw(rng):
+        out = list(seq)
+        rng.shuffle(out)
+        return out
+    return _Strategy(draw)
+
+
+def sampled_from(values):
+    seq = list(values)
+    return _Strategy(lambda rng: rng.choice(seq))
+
+
+class _DataObject:
+    """Mirrors hypothesis' interactive ``data()`` draw object."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy, label=None):
+        return strategy.example(self._rng)
+
+
+class _DataStrategy(_Strategy):
+    def __init__(self):
+        super().__init__(lambda rng: _DataObject(rng))
+
+
+def data():
+    return _DataStrategy()
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.floats = floats
+strategies.permutations = permutations
+strategies.sampled_from = sampled_from
+strategies.data = data
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        # No functools.wraps: pytest must see a zero-argument signature
+        # (like real hypothesis), not the strategy parameters as fixtures.
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                drawn = [s.example(rng) for s in arg_strategies]
+                drawn_kw = {k: s.example(rng)
+                            for k, s in kw_strategies.items()}
+                fn(*drawn, **drawn_kw)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._max_examples = DEFAULT_MAX_EXAMPLES
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        if hasattr(fn, "_max_examples"):
+            fn._max_examples = max_examples
+        return fn
+    return deco

@@ -1,0 +1,23 @@
+"""Test bootstrap: src/ on sys.path + a hypothesis fallback.
+
+The real ``hypothesis`` package is preferred (CI installs it from
+requirements.txt); in lean environments the property tests fall back to a
+fixed-seed shim so the suite still collects and passes.
+"""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, os.path.abspath(_SRC))
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _HERE = os.path.dirname(os.path.abspath(__file__))
+    if _HERE not in sys.path:
+        sys.path.insert(0, _HERE)
+    import _hypothesis_fallback as _shim
+
+    sys.modules["hypothesis"] = _shim
+    sys.modules["hypothesis.strategies"] = _shim.strategies

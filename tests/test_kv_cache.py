@@ -69,6 +69,7 @@ def test_int4_keys_pack_and_roundtrip():
     assert float(jnp.abs(kd - k).max()) < 0.35  # int4: 15 levels per (tok,head)
 
 
+@pytest.mark.slow
 def test_int4_cache_append():
     c = kvc.init_layer_cache(1, 8, 2, 16, key_bits=4)
     k = jax.random.normal(jax.random.PRNGKey(4), (1, 3, 2, 16))

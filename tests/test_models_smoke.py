@@ -9,6 +9,8 @@ import pytest
 from repro.configs import registry
 from repro.models import transformer as T
 
+pytestmark = pytest.mark.slow  # per-arch sweep; full-suite CI job only
+
 KEY = jax.random.PRNGKey(0)
 B, S = 2, 16
 

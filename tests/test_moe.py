@@ -74,6 +74,7 @@ def test_aux_losses_finite_and_balanced_lower():
     assert lb >= 1.0 - 1e-3        # Switch LB loss lower bound at balance
 
 
+@pytest.mark.slow
 def test_chunked_matches_unchunked():
     cfg = tiny_cfg()
     b = L.ParamBuilder("init", key=KEY, qcfg=cfg.quant)

@@ -86,6 +86,7 @@ def test_balance_respects_rates():
         uniform_requests(reqs, 3), rates) + 1e-6
 
 
+@pytest.mark.slow
 def test_multi_lora_in_engine(tmp_path):
     """C7 end-to-end: adapters change generations; no-adapter matches base."""
     import numpy as np

@@ -25,6 +25,7 @@ def rwkv_cfg():
         cfg.quant, weight_bits=16, act_bits=16))
 
 
+@pytest.mark.slow
 def test_mamba_chunked_matches_unchunked():
     cfg = mamba_cfg()
     b = L.ParamBuilder("init", key=KEY, qcfg=cfg.quant)

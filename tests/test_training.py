@@ -11,6 +11,8 @@ from repro.training import checkpoint as CKPT
 from repro.training import optimizer as O
 from repro.training import train_loop as TL
 
+pytestmark = pytest.mark.slow  # optimizer/train steps; full-suite CI job only
+
 KEY = jax.random.PRNGKey(0)
 
 
