@@ -19,7 +19,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit, is_smoke
+from benchmarks.common import emit, is_smoke, summary
 from repro.configs import registry
 from repro.serving import engine as E
 from repro.serving import sampling as SM
@@ -45,7 +45,7 @@ def run_continuous(loop, trace, sp):
     recs = loop.eng.stats.requests[n0:]
     toks = sum(r.new_tokens for r in recs)
     lats = [r.latency_s for r in recs]
-    return toks / wall, lats
+    return toks / wall, lats, recs
 
 
 def run_slot_synchronous(eng, trace, sp, slots):
@@ -83,7 +83,7 @@ def main() -> None:
     run_slot_synchronous(eng, make_trace(cfg, n, p_lo, p_hi, d_lo, d_hi),
                          sp, slots)
 
-    cont_tps, cont_lat = run_continuous(
+    cont_tps, cont_lat, recs = run_continuous(
         loop, make_trace(cfg, n, p_lo, p_hi, d_lo, d_hi), sp)
     sync_tps, sync_lat = run_slot_synchronous(
         eng, make_trace(cfg, n, p_lo, p_hi, d_lo, d_hi), sp, slots)
@@ -100,6 +100,15 @@ def main() -> None:
     emit("continuous_speedup", 0.0,
          f"throughput {cont_tps / sync_tps:.2f}x "
          f"p95_latency {p(sync_lat, 95) / max(p(cont_lat, 95), 1e-9):.2f}x")
+
+    # headline metrics for the cross-PR BENCH_*.json artifact
+    ttfts = [r.ttft_s for r in recs]
+    tpots = [r.tpot_s for r in recs]
+    summary("tokens_per_s", cont_tps)
+    summary("ttft_p50_s", p(ttfts, 50))
+    summary("ttft_p95_s", p(ttfts, 95))
+    summary("tpot_p50_s", p(tpots, 50))
+    summary("tpot_p95_s", p(tpots, 95))
 
 
 if __name__ == "__main__":

@@ -11,6 +11,13 @@ speedups come from:
   W8A8      — int8 weights + int8 activations (paper's CPU path)
   W4A8      — int4 weights + int8 activations (paper's CPU path)
 
+The integer paths additionally run under BOTH dispatch backends:
+``reference`` (XLA fallback, the plain row names) and ``dispatch`` (the
+``_dispatch``-suffixed rows: kernel-routed via runtime/dispatch.py,
+interpret mode on CPU — wall time there measures the Python interpreter,
+not the TPU kernels; the rows exist so kernel-path regressions and the
+plan/dispatch overhead show up in CI).
+
 Derived column: decode-phase HBM-bytes ratio vs bf16 (the memory-bound
 decode speedup predictor — on TPU/phone alike, decode t/s ~ 1/bytes).
 """
@@ -22,10 +29,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, is_smoke, summary, time_fn
 from repro.configs import registry
 from repro.core.quantization import QuantConfig
 from repro.models import transformer as T
+from repro.runtime import dispatch as RD
+from repro.runtime import plan as RP
 
 PROMPT = 64
 DECODE = 16
@@ -53,25 +62,39 @@ def run(arch: str = "qwen2-7b") -> None:
     }
     key = jax.random.PRNGKey(0)
     bf16_bytes = None
+    # the integer (kernel-eligible) paths also run kernel-routed; smoke
+    # keeps one to bound the interpret-mode CPU cost
+    dispatch_paths = {"W4A8"} if is_smoke() else {"W4A8", "W8A8"}
     for name, qc in paths.items():
         cfg = dataclasses.replace(base, quant=qc)
-        params = T.init_params(cfg, key=key, quantized=qc.weight_bits < 16,
-                               include_embedding=False)
+        quantized = qc.weight_bits < 16
+        params = T.init_params(cfg, key=key, quantized=quantized,
+                               include_embedding=False, pack=quantized)
+        backends = [("", "reference")]
+        if name in dispatch_paths:
+            backends.append(("_dispatch", "interpret"))
+        plan = RP.build_plan(cfg, params) if quantized else None
         emb = jax.random.normal(key, (1, PROMPT, cfg.d_model), jnp.bfloat16)
-        prefill = jax.jit(lambda p, e, _cfg=cfg: T.prefill(
-            p, _cfg, e, max_seq=PROMPT + DECODE))
-        t_prefill = time_fn(prefill, params, emb)
-        _, cache = prefill(params, emb)
         demb = jax.random.normal(key, (1, 1, cfg.d_model), jnp.bfloat16)
-        decode = jax.jit(lambda p, e, c, _cfg=cfg: T.decode_step(p, _cfg, e, c))
-        t_decode = time_fn(decode, params, demb, cache)
         wb = weight_bytes(cfg)
         if name == "bf16":
             bf16_bytes = wb
-        emit(f"fig5_prefill_{name}", t_prefill / PROMPT * 1e6,
-             f"tok/s={PROMPT / t_prefill:.1f}")
-        emit(f"fig5_decode_{name}", t_decode * 1e6,
-             f"tok/s={1 / t_decode:.1f};bytes_ratio={wb / bf16_bytes:.3f}")
+        for suffix, backend in backends:
+            ctx = T.StepCtx(cfg, dispatch=RD.Dispatcher(plan=plan,
+                                                        backend=backend))
+            prefill = jax.jit(lambda p, e, _cfg=cfg, _ctx=ctx: T.prefill(
+                p, _cfg, e, max_seq=PROMPT + DECODE, ctx=_ctx))
+            t_prefill = time_fn(prefill, plan.params if plan else params, emb)
+            _, cache = prefill(plan.params if plan else params, emb)
+            decode = jax.jit(lambda p, e, c, _cfg=cfg, _ctx=ctx:
+                             T.decode_step(p, _cfg, e, c, ctx=_ctx))
+            t_decode = time_fn(decode, plan.params if plan else params,
+                               demb, cache)
+            emit(f"fig5_prefill_{name}{suffix}", t_prefill / PROMPT * 1e6,
+                 f"tok/s={PROMPT / t_prefill:.1f}")
+            emit(f"fig5_decode_{name}{suffix}", t_decode * 1e6,
+                 f"tok/s={1 / t_decode:.1f};bytes_ratio={wb / bf16_bytes:.3f}")
+            summary(f"decode_tok_s_{name}{suffix}", 1 / t_decode)
 
 
 def main() -> None:

@@ -11,6 +11,15 @@ import jax
 # accumulated rows as the CI benchmark-smoke JSON artifact.
 ROWS: List[Dict] = []
 
+# Headline metrics (tokens/s, TTFT/TPOT percentiles) — benchmarks fill this
+# via summary(); benchmarks/run.py writes it to the repo-root BENCH_*.json
+# so the perf trajectory is tracked across PRs.
+SUMMARY: Dict[str, float] = {}
+
+
+def summary(key: str, value: float) -> None:
+    SUMMARY[key] = round(float(value), 6)
+
 
 def is_smoke() -> bool:
     """Reduced trace sizes for the CI benchmark-smoke job

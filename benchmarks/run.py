@@ -71,6 +71,13 @@ def main() -> None:
                        "rows": common.ROWS}, f, indent=2)
         print(f"[run] wrote {len(common.ROWS)} rows to {args.json}",
               file=sys.stderr)
+        # repo-root trajectory artifact: headline numbers per PR
+        bench_path = os.path.join(_ROOT, "BENCH_pr2.json")
+        with open(bench_path, "w") as f:
+            json.dump({"suite": "mnn-llm-repro", "pr": 2,
+                       "smoke": args.smoke,
+                       "summary": common.SUMMARY}, f, indent=2)
+        print(f"[run] wrote summary to {bench_path}", file=sys.stderr)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

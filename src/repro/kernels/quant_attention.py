@@ -9,7 +9,9 @@ Mixed precision per the paper: the query arrives pre-scaled by 1/sqrt(D);
 softmax runs in fp32 (online, flash-decoding style over S blocks).
 
 Grid (B, Hkv, nS) with S innermost; online-softmax state (m, l, acc) lives
-in VMEM scratch across the S steps.
+in VMEM scratch across the S steps.  Valid-prefix lengths ride in SMEM as a
+[B] vector (continuous batching: every slot decodes at its own offset); a
+scalar/[1] length broadcasts to all rows.
 """
 from __future__ import annotations
 
@@ -26,6 +28,7 @@ NEG_INF = -1e30
 
 def _kernel(len_ref, q_ref, kq_ref, ks_ref, kz_ref, v_ref, o_ref,
             m_ref, l_ref, acc_ref, *, n_s: int, bs: int):
+    b_idx = pl.program_id(0)
     s_idx = pl.program_id(2)
 
     @pl.when(s_idx == 0)
@@ -42,7 +45,7 @@ def _kernel(len_ref, q_ref, kq_ref, ks_ref, kz_ref, v_ref, o_ref,
     k = (kq.astype(jnp.float32) - kz[:, None]) * ks[:, None]
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # [G, bs]
     pos = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
-    valid = pos < len_ref[0]
+    valid = pos < len_ref[b_idx]
     s = jnp.where(valid, s, NEG_INF)
 
     m_prev = m_ref[...]                            # [G, 1]
@@ -66,7 +69,8 @@ def quant_decode_attention(q: jax.Array, k_q: jax.Array, k_scale: jax.Array,
                            interpret: bool = True) -> jax.Array:
     """q: f32 [B, H, D] pre-scaled; k_q int8 [B, S, Hkv, D];
     k_scale/k_zero f32 [B, S, Hkv]; v fp8/bf16 [B, S, Hkv, D];
-    length: int32 [1] valid prefix.  Returns f32 [B, H, D]."""
+    length: int32 valid prefix — scalar/[1] (all rows aligned) or [B]
+    per-row offsets (continuous batching).  Returns f32 [B, H, D]."""
     B, H, D = q.shape
     S, Hkv = k_q.shape[1], k_q.shape[2]
     G = H // Hkv
@@ -74,7 +78,7 @@ def quant_decode_attention(q: jax.Array, k_q: jax.Array, k_scale: jax.Array,
     assert S % bs == 0, (S, bs)
     n_s = S // bs
     qg = q.reshape(B, Hkv, G, D)
-    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32).reshape(-1)[:1], (1,))
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32).reshape(-1), (B,))
 
     kernel = functools.partial(_kernel, n_s=n_s, bs=bs)
     out = pl.pallas_call(

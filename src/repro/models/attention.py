@@ -5,9 +5,10 @@ pre-scaled by 1/sqrt(d_k) BEFORE Q.K^T, softmax/accumulators fp32.
 
 Prefill never materializes the [T, S] score matrix for the full sequence:
 an outer sequential map over query chunks and an inner scan over KV chunks
-computes online softmax (flash attention in pure JAX — the dry-run lowers
-this; the Pallas decode kernel in repro/kernels/quant_attention.py is the
-TPU hot path for decode).
+computes online softmax (flash attention in pure JAX).  Attention entry
+points route through ``runtime.dispatch``: on the kernel backends the
+Pallas kernels (flash_prefill / quant_attention) run; this module's
+pure-JAX paths are the registered reference implementations.
 
 KV is stored quantized (int8 keys + fp8 values, paper Fig. 3) in the
 attention-friendly layout [B, S, H_kv, D] — written once, never
@@ -27,6 +28,7 @@ from repro.core import kv_cache as kvc
 from repro.core import quantization as q
 from repro.core.precision import PrecisionPolicy, DEFAULT_POLICY
 from repro.models import layers as L
+from repro.runtime import dispatch as D
 
 Array = jax.Array
 NEG_INF = -1e30
@@ -49,12 +51,14 @@ def attn_params(b: L.ParamBuilder, cfg: ModelConfig, cross: bool = False) -> dic
 
 def _project_qkv(x: Array, p: dict, cfg: ModelConfig,
                  kv_src: Optional[Array] = None,
-                 lora: Optional[dict] = None) -> Tuple[Array, Array, Array]:
+                 lora: Optional[dict] = None,
+                 dispatch: Optional[D.Dispatcher] = None
+                 ) -> Tuple[Array, Array, Array]:
     hd = cfg.resolved_head_dim
     src = x if kv_src is None else kv_src
-    qp = L.apply_linear(x, p["wq"], cfg.quant)
-    kp = L.apply_linear(src, p["wk"], cfg.quant)
-    vp = L.apply_linear(src, p["wv"], cfg.quant)
+    qp = L.apply_linear(x, p["wq"], cfg.quant, dispatch=dispatch)
+    kp = L.apply_linear(src, p["wk"], cfg.quant, dispatch=dispatch)
+    vp = L.apply_linear(src, p["wv"], cfg.quant, dispatch=dispatch)
     if lora is not None:
         # multi-LoRA bypass (paper §5.5): batched per-request adapters on
         # q/v projections, A.(B.x) order (never materializes A@B).
@@ -205,27 +209,29 @@ def decode_attention_ref(qh: Array, cache: kvc.LayerKVCache, pos: Array,
 def attention_train(x: Array, p: dict, cfg: ModelConfig, pat: LayerPattern,
                     positions: Array,
                     policy: PrecisionPolicy = DEFAULT_POLICY,
-                    lora: 'Optional[dict]' = None) -> Array:
+                    lora: 'Optional[dict]' = None,
+                    dispatch: Optional[D.Dispatcher] = None) -> Array:
     """Training/plain forward (no cache)."""
-    qh, kh, vh = _project_qkv(x, p, cfg, lora=lora)
+    qh, kh, vh = _project_qkv(x, p, cfg, lora=lora, dispatch=dispatch)
     qh = L.positional(qh, cfg, positions)
     kh = L.positional(kh, cfg, positions)
     qh = _prescale(qh, cfg.resolved_head_dim, policy)
-    out = flash_attention(qh, kh, vh, causal=True, window=pat.window,
-                          policy=policy)
+    out = D.resolve(dispatch).prefill_attention(
+        qh, kh, vh, causal=True, window=pat.window, policy=policy)
     B, T = x.shape[:2]
     out = out.reshape(B, T, -1)
-    return L.apply_linear(out, p["wo"], cfg.quant)
+    return L.apply_linear(out, p["wo"], cfg.quant, dispatch=dispatch)
 
 
 def attention_prefill(x: Array, p: dict, cfg: ModelConfig, pat: LayerPattern,
                       positions: Array, max_seq: int,
                       policy: PrecisionPolicy = DEFAULT_POLICY,
-                      lora: 'Optional[dict]' = None
+                      lora: 'Optional[dict]' = None,
+                      dispatch: Optional[D.Dispatcher] = None
                       ) -> Tuple[Array, kvc.LayerKVCache]:
     """Prefill: full-sequence attention + build the quantized cache."""
     B, T = x.shape[:2]
-    qh, kh, vh = _project_qkv(x, p, cfg, lora=lora)
+    qh, kh, vh = _project_qkv(x, p, cfg, lora=lora, dispatch=dispatch)
     qh = L.positional(qh, cfg, positions)
     kh = L.positional(kh, cfg, positions)
     cache = kvc.init_layer_cache(B, max_seq, cfg.num_kv_heads,
@@ -234,52 +240,55 @@ def attention_prefill(x: Array, p: dict, cfg: ModelConfig, pat: LayerPattern,
                                  value_fp8=cfg.quant.kv_value_fp8)
     cache = kvc.append(cache, kh, vh, jnp.zeros((), jnp.int32))
     qh = _prescale(qh, cfg.resolved_head_dim, policy)
-    out = flash_attention(qh, kh, vh, causal=True, window=pat.window,
-                          policy=policy)
+    out = D.resolve(dispatch).prefill_attention(
+        qh, kh, vh, causal=True, window=pat.window, policy=policy)
     out = out.reshape(B, T, -1)
-    return L.apply_linear(out, p["wo"], cfg.quant), cache
+    return L.apply_linear(out, p["wo"], cfg.quant, dispatch=dispatch), cache
 
 
 def attention_decode(x: Array, p: dict, cfg: ModelConfig, pat: LayerPattern,
                      cache: kvc.LayerKVCache, pos: Array, positions: Array,
                      policy: PrecisionPolicy = DEFAULT_POLICY,
-                     lora: 'Optional[dict]' = None
+                     lora: 'Optional[dict]' = None,
+                     dispatch: Optional[D.Dispatcher] = None
                      ) -> Tuple[Array, kvc.LayerKVCache]:
     """One decode step: append quantized K/V, attend over the cache."""
     B, T = x.shape[:2]
-    qh, kh, vh = _project_qkv(x, p, cfg, lora=lora)
+    qh, kh, vh = _project_qkv(x, p, cfg, lora=lora, dispatch=dispatch)
     qh = L.positional(qh, cfg, positions)
     kh = L.positional(kh, cfg, positions)
     cache = kvc.append(cache, kh, vh, pos)
     qh = _prescale(qh, cfg.resolved_head_dim, policy)
-    out = decode_attention_ref(qh, cache, pos + T, policy=policy)
+    out = D.resolve(dispatch).decode_attention(qh, cache, pos + T, policy)
     out = out.reshape(B, T, -1)
-    return L.apply_linear(out, p["wo"], cfg.quant), cache
+    return L.apply_linear(out, p["wo"], cfg.quant, dispatch=dispatch), cache
 
 
 def cross_attention(x: Array, p: dict, cfg: ModelConfig,
                     cross_cache: kvc.LayerKVCache,
-                    policy: PrecisionPolicy = DEFAULT_POLICY) -> Array:
+                    policy: PrecisionPolicy = DEFAULT_POLICY,
+                    dispatch: Optional[D.Dispatcher] = None) -> Array:
     """Decoder cross-attention over the (quantized) encoder KV."""
     B, T = x.shape[:2]
     hd = cfg.resolved_head_dim
-    qp = L.apply_linear(x, p["wq"], cfg.quant)
+    qp = L.apply_linear(x, p["wq"], cfg.quant, dispatch=dispatch)
     qh = qp.reshape(B, T, cfg.num_heads, hd)
     qh = _prescale(qh, hd, policy)
-    out = decode_attention_ref(qh, cross_cache, cross_cache.length,
-                               policy=policy)
+    out = D.resolve(dispatch).decode_attention(qh, cross_cache,
+                                               cross_cache.length, policy)
     out = out.reshape(B, T, -1)
-    return L.apply_linear(out, p["wo"], cfg.quant)
+    return L.apply_linear(out, p["wo"], cfg.quant, dispatch=dispatch)
 
 
-def build_cross_cache(enc_out: Array, p: dict, cfg: ModelConfig
+def build_cross_cache(enc_out: Array, p: dict, cfg: ModelConfig,
+                      dispatch: Optional[D.Dispatcher] = None
                       ) -> kvc.LayerKVCache:
     B, S = enc_out.shape[:2]
     hd = cfg.resolved_head_dim
-    kp = L.apply_linear(enc_out, p["wk"], cfg.quant).reshape(
-        B, S, cfg.num_kv_heads, hd)
-    vp = L.apply_linear(enc_out, p["wv"], cfg.quant).reshape(
-        B, S, cfg.num_kv_heads, hd)
+    kp = L.apply_linear(enc_out, p["wk"], cfg.quant, dispatch=dispatch
+                        ).reshape(B, S, cfg.num_kv_heads, hd)
+    vp = L.apply_linear(enc_out, p["wv"], cfg.quant, dispatch=dispatch
+                        ).reshape(B, S, cfg.num_kv_heads, hd)
     cache = kvc.init_layer_cache(B, S, cfg.num_kv_heads, hd,
                                  key_bits=cfg.quant.kv_key_bits,
                                  value_fp8=cfg.quant.kv_value_fp8)

@@ -9,6 +9,13 @@ A model's parameter tree is described by init functions written against a
 Quantization policy is applied here (C1): Linear weights become
 ``QuantizedTensor``s when the builder is in quantized mode; lm_head gets
 ``lm_head_bits`` (int8-prioritized per the paper); biases/norms stay float.
+With ``pack=True`` (serving) the builder emits plan-aware
+``runtime.plan.PackedLinear`` weights — the kernel-native padded layout,
+built once at init instead of repacked at plan time.
+
+Hot ops (linear matmul, rmsnorm) route through ``runtime.dispatch``: the
+registry — not this module — decides between the Pallas kernels and the
+reference paths.
 """
 from __future__ import annotations
 
@@ -23,6 +30,8 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.core import quantization as q
 from repro.core.precision import PrecisionPolicy, DEFAULT_POLICY
+from repro.runtime import dispatch as D
+from repro.runtime import plan as RP
 
 Array = jax.Array
 
@@ -34,7 +43,7 @@ class ParamBuilder:
 
     def __init__(self, mode: str, key: Optional[jax.Array] = None,
                  quantized: bool = False, qcfg: Optional[q.QuantConfig] = None,
-                 fsdp: bool = False, dtype=jnp.bfloat16):
+                 fsdp: bool = False, dtype=jnp.bfloat16, pack: bool = False):
         assert mode in ("init", "abstract", "spec")
         self.mode = mode
         self._key = key
@@ -42,6 +51,7 @@ class ParamBuilder:
         self.qcfg = qcfg or q.QuantConfig()
         self.fsdp = fsdp          # shard big weights over "data" too (ZeRO-3)
         self.dtype = dtype
+        self.pack = pack          # emit kernel-native PackedLinear weights
 
     def _next_key(self):
         self._key, k = jax.random.split(self._key)
@@ -93,16 +103,24 @@ class ParamBuilder:
             return {"w": self.param(shape, full_spec, scale=scale)}
         gs = self.qcfg.group_size
         g = (in_dim // gs) if (gs and gs < in_dim) else 1
+        # expert tables (lead dims) keep the QuantizedTensor layout for the
+        # MoE expert-axis gathers; per-layer 2-D linears pack kernel-native
+        pack = self.pack and not lead
         if self.mode == "spec":
             data_spec = full_spec
             sz_spec = (*full_spec[:-2], None, full_spec[-1])
+            if pack:
+                return {"w": RP.spec_packed(data_spec, sz_spec, bits, shape)}
             return {"w": q.QuantizedTensor(
                 data=P(*data_spec), scale=P(*sz_spec), zero=P(*sz_spec),
                 bits=bits, shape=shape)}
         if self.mode == "abstract":
+            if pack:
+                return {"w": RP.abstract_packed(shape, bits, gs)}
             return {"w": q.abstract_quantized(shape, bits, gs)}
         wf = (jax.random.normal(self._next_key(), shape, jnp.float32) * scale)
-        return {"w": q.quantize(wf, bits, group_size=gs)}
+        qt = q.quantize(wf, bits, group_size=gs)
+        return {"w": RP.pack_linear(qt) if pack else qt}
 
     def bias(self, dim: int, spec=("model",)):
         return self.param((dim,), spec, scale=0.0)
@@ -112,25 +130,20 @@ class ParamBuilder:
 
 
 def apply_linear(x: Array, p: dict, qcfg: q.QuantConfig,
-                 out_dtype=jnp.bfloat16) -> Array:
-    """y = x @ w (+b). Dispatches the quantized path (C1)."""
-    w = p["w"]
-    if isinstance(w, q.QuantizedTensor):
-        y = q.quant_matmul(x, w, qcfg, out_dtype=out_dtype)
-    else:
-        y = jnp.matmul(x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
-                       preferred_element_type=jnp.float32).astype(out_dtype)
+                 out_dtype=jnp.bfloat16,
+                 dispatch: Optional[D.Dispatcher] = None) -> Array:
+    """y = x @ w (+b), routed through the kernel dispatcher (C1/C3)."""
+    y = D.resolve(dispatch).linear(x, p["w"], qcfg, out_dtype=out_dtype)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y
 
 
-def rms_norm(x: Array, weight: Array, eps: float = 1e-5) -> Array:
-    """RMSNorm (paper fuses it at conversion; kernel in repro/kernels)."""
-    xf = x.astype(jnp.float32)
-    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
-    y = xf * jax.lax.rsqrt(var + eps)
-    return (y * weight.astype(jnp.float32)).astype(x.dtype)
+def rms_norm(x: Array, weight: Array, eps: float = 1e-5,
+             dispatch: Optional[D.Dispatcher] = None) -> Array:
+    """RMSNorm, routed through the kernel dispatcher (fused Pallas kernel
+    on the kernel backends, fp32 reference otherwise)."""
+    return D.resolve(dispatch).rmsnorm(x, weight, eps)
 
 
 # ---------------------------------------------------------------------------
@@ -201,12 +214,13 @@ def ffn_params(b: ParamBuilder, cfg: ModelConfig, d_ff: Optional[int] = None) ->
             "w_down": b.linear(f, d, ("model", None))}
 
 
-def apply_ffn(x: Array, p: dict, cfg: ModelConfig) -> Array:
+def apply_ffn(x: Array, p: dict, cfg: ModelConfig,
+              dispatch: Optional[D.Dispatcher] = None) -> Array:
     if cfg.act == "swiglu":
-        g = apply_linear(x, p["w_gate"], cfg.quant)
-        u = apply_linear(x, p["w_up"], cfg.quant)
+        g = apply_linear(x, p["w_gate"], cfg.quant, dispatch=dispatch)
+        u = apply_linear(x, p["w_up"], cfg.quant, dispatch=dispatch)
         h = swiglu(u, g)
     else:
-        u = apply_linear(x, p["w_up"], cfg.quant)
+        u = apply_linear(x, p["w_up"], cfg.quant, dispatch=dispatch)
         h = jax.nn.gelu(u.astype(jnp.float32)).astype(u.dtype)
-    return apply_linear(h, p["w_down"], cfg.quant)
+    return apply_linear(h, p["w_down"], cfg.quant, dispatch=dispatch)

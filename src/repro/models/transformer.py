@@ -82,16 +82,19 @@ def _lead_axis(tree: Any, count: int, mode: str) -> Any:
 def init_params(cfg: ModelConfig, *, mode: str = "init",
                 key: Optional[jax.Array] = None, quantized: bool = False,
                 fsdp: bool = False, include_embedding: Optional[bool] = None,
-                mesh_model: int = 16) -> dict:
+                mesh_model: int = 16, pack: bool = False) -> dict:
     """Build the full parameter tree (or its SDS / PartitionSpec mirror).
 
     include_embedding: default True for float (training) params, False for
     quantized (serving) params — the embedding lives on Flash (C2).
+    pack: emit kernel-native PackedLinear weights (runtime/plan.py) for the
+    per-layer linears — the serving engines build params this way so no
+    repacking happens at plan time.
     """
     if include_embedding is None:
         include_embedding = not quantized
     b = L.ParamBuilder(mode, key=key, quantized=quantized, qcfg=cfg.quant,
-                       fsdp=fsdp)
+                       fsdp=fsdp, pack=pack)
     params: dict = {}
     if include_embedding:
         params["embedding"] = b.param((cfg.padded_vocab_size, cfg.d_model),
@@ -254,6 +257,11 @@ class StepCtx:
     policy: PrecisionPolicy = DEFAULT_POLICY
     remat: bool = False
     act_spec: Optional[P] = None      # sharding constraint for the residual
+    # kernel dispatcher (runtime/dispatch.py): trace-time static — the
+    # Engine binds its Dispatcher here so every linear/rmsnorm/attention
+    # call resolves through the (op, backend, quant tag) registry; None
+    # resolves to the reference (or REPRO_BACKEND-selected) default.
+    dispatch: Optional[Any] = None
     # multi-LoRA (paper §5.5): {"wq_a","wq_b","wv_a","wv_b": [K,...],
     # "ids": [B]} — shared across layers; applied in attention q/v.
     # NOTE: arrays here are closed over by the jitted step — the serving
@@ -275,30 +283,31 @@ def _apply_pattern(x: Array, pp: dict, cfg: ModelConfig, pat: LayerPattern,
                    ) -> Tuple[Array, Any, Array]:
     """One layer. Returns (x, new_cache, moe_aux)."""
     aux = jnp.zeros((2,), jnp.float32)
-    h = L.rms_norm(x, pp["ln1"], cfg.rms_eps)
+    dsp = ctx.dispatch
+    h = L.rms_norm(x, pp["ln1"], cfg.rms_eps, dispatch=dsp)
     if pat.kind == "attn":
         if mode == "train":
             att = A.attention_train(h, pp["attn"], cfg, pat, positions,
-                                    ctx.policy, lora=ctx.lora)
+                                    ctx.policy, lora=ctx.lora, dispatch=dsp)
             new_cache = cache
         elif mode == "prefill":
             att, new_cache = A.attention_prefill(
                 h, pp["attn"], cfg, pat, positions, cache.max_seq, ctx.policy,
-                lora=ctx.lora)
+                lora=ctx.lora, dispatch=dsp)
         else:
             att, new_cache = A.attention_decode(
                 h, pp["attn"], cfg, pat, cache, pos, positions, ctx.policy,
-                lora=ctx.lora)
+                lora=ctx.lora, dispatch=dsp)
         x = x + att
         if cross_cache is not None:
-            hc = L.rms_norm(x, pp["ln_cross"], cfg.rms_eps)
+            hc = L.rms_norm(x, pp["ln_cross"], cfg.rms_eps, dispatch=dsp)
             x = x + A.cross_attention(hc, pp["cross"], cfg, cross_cache,
-                                      ctx.policy)
-        h2 = L.rms_norm(x, pp["ln2"], cfg.rms_eps)
+                                      ctx.policy, dispatch=dsp)
+        h2 = L.rms_norm(x, pp["ln2"], cfg.rms_eps, dispatch=dsp)
         if pat.moe:
             y, aux = M.apply_moe(h2, pp["moe"], cfg)
         else:
-            y = L.apply_ffn(h2, pp["ffn"], cfg)
+            y = L.apply_ffn(h2, pp["ffn"], cfg, dispatch=dsp)
         x = x + y
     elif pat.kind == "mamba":
         if mode == "train":
@@ -308,11 +317,11 @@ def _apply_pattern(x: Array, pp: dict, cfg: ModelConfig, pat: LayerPattern,
         else:
             y, new_cache = S.mamba_forward(h, pp["mamba"], cfg, cache)
         x = x + y
-        h2 = L.rms_norm(x, pp["ln2"], cfg.rms_eps)
+        h2 = L.rms_norm(x, pp["ln2"], cfg.rms_eps, dispatch=dsp)
         if pat.moe:
             y2, aux = M.apply_moe(h2, pp["moe"], cfg)
         else:
-            y2 = L.apply_ffn(h2, pp["ffn"], cfg)
+            y2 = L.apply_ffn(h2, pp["ffn"], cfg, dispatch=dsp)
         x = x + y2
     elif pat.kind == "rwkv":
         if mode == "train":
@@ -321,7 +330,7 @@ def _apply_pattern(x: Array, pp: dict, cfg: ModelConfig, pat: LayerPattern,
             st = cache
         y, st = S.rwkv_time_mix(h, pp["tm"], cfg, st)
         x = x + y
-        h2 = L.rms_norm(x, pp["ln2"], cfg.rms_eps)
+        h2 = L.rms_norm(x, pp["ln2"], cfg.rms_eps, dispatch=dsp)
         y2, st = S.rwkv_channel_mix(h2, pp["tm"], cfg, st)
         x = x + y2
         new_cache = cache if mode == "train" else st
@@ -371,10 +380,11 @@ def _run_stacks(x: Array, params: dict, cfg: ModelConfig, mode: str,
     return x, new_cache, aux_total
 
 
-def _logits(x: Array, params: dict, cfg: ModelConfig) -> Array:
-    h = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+def _logits(x: Array, params: dict, cfg: ModelConfig,
+            dispatch=None) -> Array:
+    h = L.rms_norm(x, params["final_norm"], cfg.rms_eps, dispatch=dispatch)
     return L.apply_linear(h, params["lm_head"], cfg.quant,
-                          out_dtype=jnp.float32)
+                          out_dtype=jnp.float32, dispatch=dispatch)
 
 
 def embed_tokens(params: dict, cfg: ModelConfig, tokens: Array) -> Array:
@@ -389,29 +399,35 @@ def encode(params: dict, cfg: ModelConfig, src_embeds: Array,
     """Bidirectional encoder (enc-dec archs). src_embeds: [B, S, d]."""
     x = src_embeds.astype(jnp.bfloat16)
 
+    from repro.runtime import dispatch as RD
+
     def body(xc, pslice):
         xx = xc
-        h = L.rms_norm(xx, pslice["ln1"], cfg.rms_eps)
-        qh, kh, vh = A._project_qkv(h, pslice["attn"], cfg)
+        dsp = ctx.dispatch
+        h = L.rms_norm(xx, pslice["ln1"], cfg.rms_eps, dispatch=dsp)
+        qh, kh, vh = A._project_qkv(h, pslice["attn"], cfg, dispatch=dsp)
         qh = L.positional(qh, cfg, positions)
         kh = L.positional(kh, cfg, positions)
         qh = A._prescale(qh, cfg.resolved_head_dim, ctx.policy)
-        att = A.flash_attention(qh, kh, vh, causal=False, policy=ctx.policy)
+        att = RD.resolve(dsp).prefill_attention(qh, kh, vh, causal=False,
+                                                window=0, policy=ctx.policy)
         att = att.reshape(*xx.shape[:2], -1)
-        xx = xx + L.apply_linear(att, pslice["attn"]["wo"], cfg.quant)
-        h2 = L.rms_norm(xx, pslice["ln2"], cfg.rms_eps)
-        xx = xx + L.apply_ffn(h2, pslice["ffn"], cfg)
+        xx = xx + L.apply_linear(att, pslice["attn"]["wo"], cfg.quant,
+                                 dispatch=dsp)
+        h2 = L.rms_norm(xx, pslice["ln2"], cfg.rms_eps, dispatch=dsp)
+        xx = xx + L.apply_ffn(h2, pslice["ffn"], cfg, dispatch=dsp)
         return _constrain(xx, ctx), None
 
     if ctx.remat:
         body = jax.checkpoint(body,
                               policy=jax.checkpoint_policies.nothing_saveable)
     x, _ = jax.lax.scan(body, x, params["encoder"])
-    return L.rms_norm(x, params["enc_norm"], cfg.rms_eps)
+    return L.rms_norm(x, params["enc_norm"], cfg.rms_eps,
+                      dispatch=ctx.dispatch)
 
 
 def build_cross_caches(params: dict, cfg: ModelConfig, enc_out: Array,
-                       abstract: bool = False) -> tuple:
+                       abstract: bool = False, dispatch=None) -> tuple:
     """Per-decoder-layer quantized cross KV (scanned per stack)."""
     cross_stacks = []
     for si, (patterns, count) in enumerate(cfg.layer_plan()):
@@ -419,7 +435,8 @@ def build_cross_caches(params: dict, cfg: ModelConfig, enc_out: Array,
 
         def body(_, pslice, _patterns=patterns):
             caches = tuple(
-                A.build_cross_cache(enc_out, pslice[pi]["cross"], cfg)
+                A.build_cross_cache(enc_out, pslice[pi]["cross"], cfg,
+                                    dispatch=dispatch)
                 for pi in range(len(_patterns)))
             return None, caches
 
@@ -453,14 +470,15 @@ def forward_hidden(params: dict, cfg: ModelConfig, batch: dict,
         spos = jnp.broadcast_to(jnp.arange(src.shape[1])[None],
                                 (B, src.shape[1]))
         enc_out = encode(params, cfg, src, spos, ctx)
-        cross = build_cross_caches(params, cfg, enc_out)
+        cross = build_cross_caches(params, cfg, enc_out, dispatch=ctx.dispatch)
         cache = {"pos": jnp.zeros((), jnp.int32), "cross": cross,
                  "stacks": tuple(tuple(None for _ in pats)
                                  for pats, _ in cfg.layer_plan())}
         x, _, aux = _run_stacks(x, params, cfg, "train", positions, cache, ctx)
     else:
         x, _, aux = _run_stacks(x, params, cfg, "train", positions, None, ctx)
-    return L.rms_norm(x, params["final_norm"], cfg.rms_eps), aux
+    return L.rms_norm(x, params["final_norm"], cfg.rms_eps,
+                      dispatch=ctx.dispatch), aux
 
 
 def forward_train(params: dict, cfg: ModelConfig, batch: dict,
@@ -482,15 +500,15 @@ def forward_train(params: dict, cfg: ModelConfig, batch: dict,
         spos = jnp.broadcast_to(jnp.arange(src.shape[1])[None],
                                 (B, src.shape[1]))
         enc_out = encode(params, cfg, src, spos, ctx)
-        cross = build_cross_caches(params, cfg, enc_out)
+        cross = build_cross_caches(params, cfg, enc_out, dispatch=ctx.dispatch)
         # train-mode "cache": only cross KV, no self-KV allocation
         cache = {"pos": jnp.zeros((), jnp.int32), "cross": cross,
                  "stacks": tuple(tuple(None for _ in pats)
                                  for pats, _ in cfg.layer_plan())}
         x, _, aux = _run_stacks(x, params, cfg, "train", positions, cache, ctx)
-        return _logits(x, params, cfg), aux
+        return _logits(x, params, cfg, ctx.dispatch), aux
     x, _, aux = _run_stacks(x, params, cfg, "train", positions, None, ctx)
-    return _logits(x, params, cfg), aux
+    return _logits(x, params, cfg, ctx.dispatch), aux
 
 
 def prefill(params: dict, cfg: ModelConfig, embeds: Array, max_seq: int,
@@ -522,7 +540,8 @@ def prefill(params: dict, cfg: ModelConfig, embeds: Array, max_seq: int,
         spos = jnp.broadcast_to(jnp.arange(src_embeds.shape[1])[None],
                                 (B, src_embeds.shape[1]))
         enc_out = encode(params, cfg, src_embeds, spos, ctx)
-        cache["cross"] = build_cross_caches(params, cfg, enc_out)
+        cache["cross"] = build_cross_caches(params, cfg, enc_out,
+                                            dispatch=ctx.dispatch)
     x, cache, _ = _run_stacks(x, params, cfg, "prefill", positions, cache, ctx)
     if valid_len is None:
         cache["pos"] = jnp.asarray(T, jnp.int32)
@@ -531,7 +550,7 @@ def prefill(params: dict, cfg: ModelConfig, embeds: Array, max_seq: int,
         vl = jnp.asarray(valid_len, jnp.int32)
         cache["pos"] = vl
         last = jax.lax.dynamic_slice_in_dim(x, vl - 1, 1, axis=1)
-    logits = _logits(last, params, cfg)[:, 0]
+    logits = _logits(last, params, cfg, ctx.dispatch)[:, 0]
     return logits, cache
 
 
@@ -565,5 +584,5 @@ def decode_step(params: dict, cfg: ModelConfig, embeds: Array, cache: dict,
         cache["pos"] = jnp.where(active, pos + T, pos)
     else:
         cache["pos"] = pos + T
-    logits = _logits(x, params, cfg)[:, -1]
+    logits = _logits(x, params, cfg, ctx.dispatch)[:, -1]
     return logits, cache

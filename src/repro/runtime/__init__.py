@@ -1,0 +1,9 @@
+"""Runtime subsystem: the load-time ExecutionPlan + per-op kernel dispatch.
+
+``plan``     — builds one ExecutionPlan per model: tile solving
+               (core/tiling.solve_tpu_blocks per matmul shape), kernel-native
+               weight repacking, and DRAM-vs-Flash placement (paper §5.1/§4.1).
+``dispatch`` — the kernel registry keyed on (op, backend, quant tag); model
+               code routes every hot op through a Dispatcher instead of
+               importing kernels directly.
+"""

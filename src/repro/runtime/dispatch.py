@@ -1,0 +1,269 @@
+"""Kernel dispatch: one registry keyed on (op, backend, quant tag).
+
+Model code never imports ``repro.kernels`` — every hot op (linear, rmsnorm,
+decode attention, prefill attention) goes through a ``Dispatcher`` that
+resolves the implementation from this registry:
+
+  backend "tpu"        — compiled Pallas kernels (requires a TPU device)
+  backend "interpret"  — the same Pallas kernels, interpret mode (CPU
+                         parity/CI; numerically the kernel path)
+  backend "reference"  — the pure-JAX/XLA paths (core/quantization matmul,
+                         fp32 rms, models/attention reference attention)
+
+Backend selection: the ``REPRO_BACKEND`` env var overrides everything, then
+the explicit ``Dispatcher(backend=...)`` argument, then "reference".  Every
+kernel entry declares eligibility (shape/layout/platform); an ineligible or
+failing entry falls back per-op to the reference path and the reason is
+recorded on ``dispatcher.fallbacks`` — a lowering failure never takes the
+model down.
+
+A Dispatcher is trace-time static: construct one per Engine (the jitted
+step closes over it), so switching backends re-jits instead of silently
+reusing a stale cache.  ``REPRO_BACKEND`` is read when the Dispatcher is
+constructed.
+
+MoE expert matmuls intentionally stay on the reference path (see
+runtime/plan.py) — a grouped expert kernel is ROADMAP work.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as q
+from repro.runtime import plan as planlib
+
+Array = jax.Array
+
+BACKENDS = ("reference", "interpret", "tpu")
+
+_REGISTRY: Dict[Tuple[str, str, str], Callable] = {}
+
+
+class Ineligible(Exception):
+    """A kernel entry declined these operands; fall back to the next
+    backend in the chain."""
+
+
+def register(op: str, backend: str, tag: str = "*"):
+    """Register one implementation under (op, backend, quant tag)."""
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY[(op, backend, tag)] = fn
+        return fn
+    return deco
+
+
+def default_backend() -> str:
+    env = os.environ.get("REPRO_BACKEND", "").strip().lower()
+    if env:
+        if env not in BACKENDS:
+            raise ValueError(
+                f"REPRO_BACKEND={env!r}; expected one of {BACKENDS}")
+        return env
+    return "reference"
+
+
+def _require(cond: bool, why: str) -> None:
+    if not cond:
+        raise Ineligible(why)
+
+
+class Dispatcher:
+    """Resolves every hot op to its registered implementation.
+
+    ``plan``: an ExecutionPlan for tile lookup (optional — plan-less
+    dispatch solves tiles through a module-level cache).
+    """
+
+    def __init__(self, plan: Optional[planlib.ExecutionPlan] = None,
+                 backend: Optional[str] = None):
+        # env override wins (validated in default_backend); the explicit
+        # argument fills in only when REPRO_BACKEND is unset
+        env_set = bool(os.environ.get("REPRO_BACKEND", "").strip())
+        self.backend = default_backend() if env_set else (backend or "reference")
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"backend {self.backend!r}; expected one of {BACKENDS}")
+        self.plan = plan
+        # (op, backend, reason) notes, recorded at trace time
+        self.fallbacks: List[Tuple[str, str, str]] = []
+
+    def _chain(self) -> Tuple[str, ...]:
+        if self.backend == "reference":
+            return ("reference",)
+        return (self.backend, "reference")
+
+    def _call(self, op: str, tag: str, *args, **kw):
+        for be in self._chain():
+            fn = _REGISTRY.get((op, be, tag)) or _REGISTRY.get((op, be, "*"))
+            if fn is None:
+                continue
+            if be == "reference":
+                return fn(self, *args, **kw)    # the floor — let it raise
+            try:
+                return fn(self, *args, **kw)
+            except Ineligible as e:
+                self.fallbacks.append((op, be, str(e)))
+            except Exception as e:              # lowering/shape failure
+                self.fallbacks.append((op, be, f"{type(e).__name__}: {e}"))
+        raise RuntimeError(f"no implementation registered for op={op!r} "
+                           f"tag={tag!r} backend={self.backend!r}")
+
+    # --- the ops model code routes through ---------------------------------
+    def linear(self, x: Array, w, qcfg: q.QuantConfig,
+               out_dtype=jnp.bfloat16) -> Array:
+        if isinstance(w, (planlib.PackedLinear, q.QuantizedTensor)):
+            tag = f"W{w.bits}A{qcfg.act_bits}"
+        else:
+            tag = "bf16"
+        return self._call("matmul", tag, x, w, qcfg, out_dtype)
+
+    def rmsnorm(self, x: Array, weight: Array, eps: float = 1e-5) -> Array:
+        return self._call("rmsnorm", "*", x, weight, eps)
+
+    def decode_attention(self, qh: Array, cache, pos, policy) -> Array:
+        return self._call("decode_attention", "*", qh, cache, pos, policy)
+
+    def prefill_attention(self, qh: Array, kh: Array, vh: Array, *,
+                          causal: bool, window: int, policy) -> Array:
+        return self._call("prefill_attention", "*", qh, kh, vh,
+                          causal, window, policy)
+
+
+# one default (reference-or-env) dispatcher per backend value, for call
+# sites that don't thread an engine dispatcher (training, tests, examples)
+_DEFAULTS: Dict[str, Dispatcher] = {}
+
+
+def resolve(dispatch: Optional[Dispatcher]) -> Dispatcher:
+    if dispatch is not None:
+        return dispatch
+    be = default_backend()
+    if be not in _DEFAULTS:
+        _DEFAULTS[be] = Dispatcher(backend=be)
+    return _DEFAULTS[be]
+
+
+# ===========================================================================
+# Reference entries (the floor every chain ends on)
+# ===========================================================================
+
+@register("matmul", "reference")
+def _matmul_reference(disp, x, w, qcfg, out_dtype):
+    if isinstance(w, planlib.PackedLinear):
+        w = planlib.unpack_linear(w)
+    if isinstance(w, q.QuantizedTensor):
+        return q.quant_matmul(x, w, qcfg, out_dtype=out_dtype)
+    return jnp.matmul(x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+                      preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+@register("rmsnorm", "reference")
+def _rmsnorm_reference(disp, x, weight, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+@register("decode_attention", "reference")
+def _decode_attention_reference(disp, qh, cache, pos, policy):
+    from repro.models import attention as A     # lazy: models import us
+    return A.decode_attention_ref(qh, cache, pos, policy=policy)
+
+
+@register("prefill_attention", "reference")
+def _prefill_attention_reference(disp, qh, kh, vh, causal, window, policy):
+    from repro.models import attention as A     # lazy: models import us
+    return A.flash_attention(qh, kh, vh, causal=causal, window=window,
+                             policy=policy)
+
+
+# ===========================================================================
+# Pallas entries ("tpu" = compiled, "interpret" = same kernels on CPU)
+# ===========================================================================
+
+def _platform_ok(interpret: bool) -> None:
+    _require(interpret or jax.default_backend() == "tpu",
+             "tpu backend needs a TPU device (set backend='interpret' on CPU)")
+
+
+def _kernel_matmul(disp, x, w, qcfg, out_dtype, *, interpret):
+    from repro.kernels import w4a8_matmul as WM
+    _platform_ok(interpret)
+    if isinstance(w, q.QuantizedTensor):
+        _require(w.data.ndim == 2, "stacked/expert weights: reference path")
+        w = planlib.pack_linear(w)  # plan-less caller: repack inline
+    _require(w.data.ndim == 2, "stacked/expert weights: reference path")
+    _require(w.scale.shape[-2] == 1,
+             "group-wise scales make the integer correction group-dependent")
+    lead, K = x.shape[:-1], x.shape[-1]
+    _require(K == w.k, f"reduction dim {K} != weight {w.k}")
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    mp = (disp.plan.matmul_plan(w.k, w.n, w.bits) if disp.plan is not None
+          else planlib.matmul_plan(w.k, w.n, w.bits))
+    bm, bn, bk = mp.blocks(M)
+    xq, sx = q.quantize_activations(x2)
+    Mp = -(-M // bm) * bm
+    if Mp != M or mp.kp != K:
+        xq = jnp.pad(xq, ((0, Mp - M), (0, mp.kp - K)))
+        sx = jnp.pad(sx, ((0, Mp - M), (0, 0)), constant_values=1.0)
+    y = WM.w4a8_matmul(xq, sx, w.data, w.scale[0], w.zero[0], bits=w.bits,
+                       blocks=(min(bm, Mp), bn, bk), interpret=interpret)
+    return y[:M, :w.n].reshape(*lead, w.n).astype(out_dtype)
+
+
+def _kernel_rmsnorm(disp, x, weight, eps, *, interpret):
+    from repro.kernels import rmsnorm as RN
+    _platform_ok(interpret)
+    return RN.rmsnorm(x, weight, eps=eps, interpret=interpret)
+
+
+def _decode_block(s: int, cap: int = 512) -> int:
+    for b in range(min(cap, s), 0, -1):
+        if s % b == 0:
+            return b
+    return s
+
+
+def _kernel_decode_attention(disp, qh, cache, pos, policy, *, interpret):
+    from repro.kernels import quant_attention as QA
+    _platform_ok(interpret)
+    B, T = qh.shape[:2]
+    _require(T == 1, "decode kernel attends one query token")
+    _require(cache.window == 0, "ring-buffer (windowed) cache: reference path")
+    _require(cache.key_bits == 8, "int4 keys: reference path")
+    lengths = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    out = QA.quant_decode_attention(
+        qh[:, 0], cache.k_q, cache.k_scale, cache.k_zero, cache.v, lengths,
+        block_s=_decode_block(cache.k_q.shape[1]), interpret=interpret)
+    return out[:, None].astype(policy.compute_dtype)
+
+
+def _kernel_prefill_attention(disp, qh, kh, vh, causal, window, policy, *,
+                              interpret):
+    from repro.kernels import flash_prefill as FP
+    _platform_ok(interpret)
+    out = FP.flash_prefill_attention(qh, kh, vh, causal=causal,
+                                     window=window, interpret=interpret)
+    return out.astype(policy.compute_dtype)
+
+
+for _be, _interp in (("interpret", True), ("tpu", False)):
+    for _tag in ("W4A8", "W8A8"):
+        register("matmul", _be, _tag)(
+            lambda d, x, w, c, o, _i=_interp: _kernel_matmul(
+                d, x, w, c, o, interpret=_i))
+    register("rmsnorm", _be)(
+        lambda d, x, w, e, _i=_interp: _kernel_rmsnorm(
+            d, x, w, e, interpret=_i))
+    register("decode_attention", _be)(
+        lambda d, qh, c, p, pol, _i=_interp: _kernel_decode_attention(
+            d, qh, c, p, pol, interpret=_i))
+    register("prefill_attention", _be)(
+        lambda d, qh, kh, vh, ca, w, pol, _i=_interp: _kernel_prefill_attention(
+            d, qh, kh, vh, ca, w, pol, interpret=_i))

@@ -1,0 +1,286 @@
+"""ExecutionPlan: load-time weight re-layout + tile selection + placement.
+
+The paper's backend abstraction (§5.1) rearranges weights ONCE at load time
+into the layout its kernels consume and picks tile sizes per matmul shape
+with the Eq. 2-4 optimizer; at run time every hot op just dispatches.  The
+TPU analogue built here:
+
+* ``PackedLinear``   — a quantized linear weight in the kernel-native layout:
+  int8 carrier with the reduction dim padded to the 128-lane grid and output
+  channels padded to a 256 multiple (so int4 nibble pairs stay lane-aligned
+  and any solver tile divides the array).  Padding is zeros with
+  scale=1/zero=0, so padded columns dequantize to exactly 0 and the
+  asymmetric correction term is unaffected.
+* ``MatmulPlan``     — per logical (K, N, bits) shape: the padded dims plus a
+  lazily-filled cache of ``solve_tpu_blocks`` tilings per M bucket.
+* ``ExecutionPlan``  — built once per model (``build_plan``): repacks every
+  per-layer QuantizedTensor in the parameter tree, records the matmul plans,
+  and records DRAM-vs-Flash placement via ``core/hybrid_storage`` (the
+  embedding's 1/vocab per-step utilization sends it to Flash first — C2).
+
+MoE expert tables ([L, E, K, N] leaves) keep the plain QuantizedTensor
+layout: the selected-expert decode path and the grouped dispatch both index
+the expert axis directly, which a packed wrapper would obstruct; they stay
+on the reference matmul until a grouped expert kernel lands.
+
+Cost of packing on the reference backend: the reference matmul slices the
+padding back off (``unpack_linear``).  Real model dims are (8,128)-aligned
+already, so those slices are identity ops XLA folds away and the pad
+memory is zero; only deliberately-unaligned test shapes pay a real (small)
+pad/slice cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import hybrid_storage as HS
+from repro.core import quantization as q
+from repro.core import tiling
+
+Array = jax.Array
+
+LANE = 128            # minor-dim tiling the MXU wants (K alignment)
+N_ALIGN = 2 * LANE    # output channels: nibble pairs stay lane-aligned
+M_ALIGN = 8           # sublane alignment for the activation rows
+M_BUCKET_CAP = 512    # largest M the tile solver is asked about
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedLinear:
+    """A quantized linear weight in the kernel-native padded layout.
+
+    data:  int8 [..., Kp, Np//2] (bits=4, nibble pairs along N) or
+           int8 [..., Kp, Np]    (bits=8)
+    scale: fp32 [..., g, Np]; zero: fp32 [..., g, Np]
+    k, n:  the LOGICAL (unpadded) reduction / output dims — static aux, so
+           scan/vmap slices of stacked PackedLinears keep them.
+    """
+    data: Array
+    scale: Array
+    zero: Array
+    bits: int
+    k: int
+    n: int
+
+    def tree_flatten(self):
+        return (self.data, self.scale, self.zero), (self.bits, self.k, self.n)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, scale, zero = children
+        bits, k, n = aux
+        return cls(data=data, scale=scale, zero=zero, bits=bits, k=k, n=n)
+
+    @property
+    def kp(self) -> int:
+        return _ceil_to(self.k, LANE)
+
+    @property
+    def np_pad(self) -> int:
+        return _ceil_to(self.n, N_ALIGN)
+
+
+def pack_linear(qt: q.QuantizedTensor) -> PackedLinear:
+    """Repack a QuantizedTensor into the kernel-native padded layout.
+
+    Padding is exact: padded output columns get scale=1/zero=0 with q=0
+    bytes, so they dequantize to 0; padded K rows hold q=0 and only ever
+    multiply the zero-padded activation columns the dispatcher feeds in,
+    contributing nothing to the accumulator or the activation row sum.
+    """
+    k, n = int(qt.shape[-2]), int(qt.shape[-1])
+    kp, np_ = _ceil_to(k, LANE), _ceil_to(n, N_ALIGN)
+    dcols = n // 2 if qt.bits == 4 else n
+    pcols = np_ // 2 if qt.bits == 4 else np_
+    lead = qt.data.ndim - 2
+    data = jnp.pad(qt.data, [(0, 0)] * lead
+                   + [(0, kp - k), (0, pcols - dcols)])
+    sz_pad = [(0, 0)] * (qt.scale.ndim - 1) + [(0, np_ - n)]
+    scale = jnp.pad(qt.scale, sz_pad, constant_values=1.0)
+    zero = jnp.pad(qt.zero, sz_pad, constant_values=0.0)
+    return PackedLinear(data=data, scale=scale, zero=zero, bits=qt.bits,
+                        k=k, n=n)
+
+
+def unpack_linear(pl: PackedLinear) -> q.QuantizedTensor:
+    """Slice the padding back off -> the original QuantizedTensor values
+    (the reference matmul path and round-trip tests consume this)."""
+    dcols = pl.n // 2 if pl.bits == 4 else pl.n
+    data = pl.data[..., :pl.k, :dcols]
+    scale = pl.scale[..., :pl.n]
+    zero = pl.zero[..., :pl.n]
+    shape = (*data.shape[:-2], pl.k, pl.n)
+    return q.QuantizedTensor(data=data, scale=scale, zero=zero, bits=pl.bits,
+                             shape=shape)
+
+
+def abstract_packed(shape, bits: int, group_size: int = 0) -> PackedLinear:
+    """ShapeDtypeStruct mirror of ``pack_linear`` (dry-runs, no alloc)."""
+    *lead, k, n = shape
+    kp, np_ = _ceil_to(k, LANE), _ceil_to(n, N_ALIGN)
+    pcols = np_ // 2 if bits == 4 else np_
+    g = (k // group_size) if (group_size and group_size < k) else 1
+    sds = jax.ShapeDtypeStruct
+    return PackedLinear(
+        data=sds((*lead, kp, pcols), jnp.int8),
+        scale=sds((*lead, g, np_), jnp.float32),
+        zero=sds((*lead, g, np_), jnp.float32),
+        bits=bits, k=k, n=n)
+
+
+def spec_packed(data_spec, sz_spec, bits: int, shape) -> PackedLinear:
+    """PartitionSpec mirror (padding never changes the sharding layout)."""
+    *_, k, n = shape
+    return PackedLinear(data=P(*data_spec), scale=P(*sz_spec),
+                        zero=P(*sz_spec), bits=bits, k=k, n=n)
+
+
+# ---------------------------------------------------------------------------
+# Per-shape tile plans
+# ---------------------------------------------------------------------------
+
+def _fit_block(dim: int, b: int, align: int) -> int:
+    """Shrink a solver block until it divides ``dim`` (dim % align == 0)."""
+    b = min(b, dim)
+    while dim % b:
+        b -= align
+    return b
+
+
+def _m_bucket(m: int) -> int:
+    b = M_ALIGN
+    while b < min(m, M_BUCKET_CAP):
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass
+class MatmulPlan:
+    """Tiles for one logical matmul shape; ``blocks(m)`` is cached per M
+    bucket (decode M=batch and prefill M=tokens hit different buckets)."""
+    k: int
+    n: int
+    bits: int
+    _blocks: Dict[int, Tuple[int, int, int]] = dataclasses.field(
+        default_factory=dict, compare=False, repr=False)
+
+    @property
+    def kp(self) -> int:
+        return _ceil_to(self.k, LANE)
+
+    @property
+    def np_pad(self) -> int:
+        return _ceil_to(self.n, N_ALIGN)
+
+    def blocks(self, m: int) -> Tuple[int, int, int]:
+        bucket = _m_bucket(m)
+        if bucket not in self._blocks:
+            bm, bn, bk = tiling.solve_tpu_blocks(bucket, self.np_pad, self.kp,
+                                                 in_bytes=1.0)
+            # solver candidates are powers-of-two off the lane grid; shrink
+            # to divisors of the padded dims so kernel asserts always hold
+            bm = _fit_block(bucket, bm, M_ALIGN)
+            bn = _fit_block(self.np_pad, bn, LANE)
+            bk = _fit_block(self.kp, bk, LANE)
+            self._blocks[bucket] = (bm, bn, bk)
+        return self._blocks[bucket]
+
+
+# module-level cache for plan-less dispatch (tests / ad-hoc callers)
+_ADHOC_PLANS: Dict[Tuple[int, int, int], MatmulPlan] = {}
+
+
+def matmul_plan(k: int, n: int, bits: int) -> MatmulPlan:
+    key = (k, n, bits)
+    if key not in _ADHOC_PLANS:
+        _ADHOC_PLANS[key] = MatmulPlan(k=k, n=n, bits=bits)
+    return _ADHOC_PLANS[key]
+
+
+# ---------------------------------------------------------------------------
+# The per-model plan
+# ---------------------------------------------------------------------------
+
+def _packable(leaf) -> bool:
+    """Per-layer 2-D linears (optionally stacked on one scan axis).  MoE
+    expert tables ([L, E, K, N] => ndim 4) keep the QuantizedTensor layout
+    for the expert-axis gathers."""
+    return isinstance(leaf, q.QuantizedTensor) and leaf.data.ndim <= 3
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    """Everything decided once at load time (paper §5.1): kernel-native
+    packed params, per-shape tile plans, and DRAM/Flash placement."""
+    quant_tag: str
+    matmuls: Dict[Tuple[int, int, int], MatmulPlan]
+    placement: Dict[str, str]
+    params: Any
+
+    def matmul_plan(self, k: int, n: int, bits: int) -> MatmulPlan:
+        key = (k, n, bits)
+        if key not in self.matmuls:          # shape unseen at build time
+            self.matmuls[key] = MatmulPlan(k=k, n=n, bits=bits)
+        return self.matmuls[key]
+
+
+def placement_for(cfg, dram_budget_bytes: Optional[int] = None
+                  ) -> Dict[str, str]:
+    """Utilization-ordered DRAM/Flash placement (paper §4.1, C2).  The
+    default budget fits exactly the full-utilization groups (layers +
+    lm_head), so the embedding — utilization 1/vocab per step — spills to
+    Flash, reproducing the paper's policy."""
+    pc = cfg.param_count()
+    sizes = {
+        "embedding": pc["embedding"] * 2,                          # bf16
+        "layers": pc["layers"] * cfg.quant.weight_bits // 8,
+        "lm_head": pc["lm_head"] * max(cfg.quant.lm_head_bits, 8) // 8,
+    }
+    if dram_budget_bytes is None:
+        dram_budget_bytes = sizes["layers"] + sizes["lm_head"]
+    return HS.plan_embedding_placement(sizes, dram_budget_bytes)
+
+
+def build_plan(cfg, params, *,
+               dram_budget_bytes: Optional[int] = None) -> ExecutionPlan:
+    """Build the ExecutionPlan for one model: walk the parameter tree,
+    repack every per-layer QuantizedTensor into the kernel-native layout
+    (already-packed leaves pass through), solve tiles per matmul shape, and
+    record storage placement.  Pure function of (config, param shapes) —
+    construction is deterministic."""
+    matmuls: Dict[Tuple[int, int, int], MatmulPlan] = {}
+
+    def note(k: int, n: int, bits: int) -> None:
+        key = (k, n, bits)
+        if key not in matmuls:
+            matmuls[key] = MatmulPlan(k=k, n=n, bits=bits)
+            # pre-solve the decode bucket (M ~ batch) so serving never
+            # solves inside a trace; prefill buckets fill lazily
+            matmuls[key].blocks(M_ALIGN)
+
+    def repack(leaf):
+        if isinstance(leaf, PackedLinear):
+            note(leaf.k, leaf.n, leaf.bits)
+            return leaf
+        if _packable(leaf):
+            packed = pack_linear(leaf)
+            note(packed.k, packed.n, packed.bits)
+            return packed
+        return leaf
+
+    packed_params = jax.tree.map(
+        repack, params,
+        is_leaf=lambda x: isinstance(x, (q.QuantizedTensor, PackedLinear)))
+    return ExecutionPlan(quant_tag=cfg.quant.tag(), matmuls=matmuls,
+                         placement=placement_for(cfg, dram_budget_bytes),
+                         params=packed_params)

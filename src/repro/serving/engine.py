@@ -3,7 +3,11 @@
   * Embedding table lives on Flash (C2): every prefill/decode step gathers
     token rows from a disk memmap — ``serve_step`` takes embeddings, never
     token ids.
-  * Weights are combined-quantized (C1): int4/int8 layers, int8 lm_head.
+  * Weights are combined-quantized (C1): int4/int8 layers, int8 lm_head —
+    repacked once at load time into the kernel-native layout by the
+    ExecutionPlan (runtime/plan.py); every matmul/rmsnorm/attention in the
+    jitted steps routes through the kernel dispatcher (runtime/dispatch.py,
+    C3; backend via ``REPRO_BACKEND`` or ``build_engine(backend=...)``).
   * KV cache quantized int8-K/fp8-V (C1) inside the jitted steps.
   * Mixed precision (C5) inside the model; fp32 softmax, pre-scaled query.
   * Multi-LoRA (C7): online-loaded adapters, batched per-request selection,
@@ -29,6 +33,8 @@ from repro.configs.base import ModelConfig
 from repro.core import hybrid_storage as HS
 from repro.core import lora as LR
 from repro.models import transformer as T
+from repro.runtime import dispatch as RD
+from repro.runtime import plan as RP
 from repro.serving import sampling as SM
 from repro.serving.scheduler import ContinuousScheduler, Request
 
@@ -85,9 +91,17 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params: dict,
                  embedding: np.ndarray | HS.EmbeddingStore,
                  max_seq: int = 256,
-                 flash_dir: Optional[str] = None):
+                 flash_dir: Optional[str] = None,
+                 backend: Optional[str] = None,
+                 plan: Optional[RP.ExecutionPlan] = None):
         self.cfg = cfg
-        self.params = params
+        # the ExecutionPlan is built ONCE per model (paper §5.1): weights
+        # repacked into the kernel-native layout, tiles solved per matmul
+        # shape, DRAM/Flash placement recorded.  All forward passes run on
+        # the packed params through the dispatcher.
+        self.plan = plan if plan is not None else RP.build_plan(cfg, params)
+        self.params = self.plan.params
+        self.dispatch = RD.Dispatcher(plan=self.plan, backend=backend)
         self.max_seq = max_seq
         if isinstance(embedding, HS.EmbeddingStore):
             self.embedding = embedding
@@ -105,20 +119,26 @@ class Engine:
                                       max_rank=8)
         self.lora_v = LR.LoraRegistry(cfg.d_model, cfg.num_kv_heads * hd,
                                       max_rank=8)
-        self._prefill = jax.jit(functools.partial(self._prefill_impl, cfg),
-                                static_argnames=("max_seq",))
-        self._decode = jax.jit(functools.partial(self._decode_impl, cfg))
+        # jitted steps close over a per-engine StepCtx carrying the
+        # dispatcher: switching backends builds a new Engine (fresh jit
+        # cache), so a stale trace can never serve the wrong backend
+        self._ctx = T.StepCtx(cfg, dispatch=self.dispatch)
+        self._prefill = jax.jit(
+            functools.partial(self._prefill_impl, cfg, self._ctx),
+            static_argnames=("max_seq",))
+        self._decode = jax.jit(
+            functools.partial(self._decode_impl, cfg, self._ctx))
 
     # --- jitted steps -------------------------------------------------------
     @staticmethod
-    def _prefill_impl(cfg, params, embeds, src_embeds=None, lora=None,
+    def _prefill_impl(cfg, ctx, params, embeds, src_embeds=None, lora=None,
                       *, max_seq):
         return T.prefill(params, cfg, embeds, max_seq=max_seq,
-                         src_embeds=src_embeds, lora=lora)
+                         src_embeds=src_embeds, ctx=ctx, lora=lora)
 
     @staticmethod
-    def _decode_impl(cfg, params, embeds, cache, lora=None):
-        return T.decode_step(params, cfg, embeds, cache, lora=lora)
+    def _decode_impl(cfg, ctx, params, embeds, cache, lora=None):
+        return T.decode_step(params, cfg, embeds, cache, ctx=ctx, lora=lora)
 
     # --- multi-LoRA (C7) ------------------------------------------------------
     def load_adapter(self, name: str, q_ab, v_ab) -> None:
@@ -250,19 +270,21 @@ class EngineLoop:
         # slot -> queue of already-generated tokens a resumed request still
         # has to replay through decode before sampling continues
         self._resume_hold: Dict[int, List[int]] = {}
-        self._prefill = jax.jit(functools.partial(self._prefill_impl, cfg),
-                                static_argnames=("max_seq",))
-        self._decode = jax.jit(functools.partial(self._decode_impl, cfg))
+        self._prefill = jax.jit(
+            functools.partial(self._prefill_impl, cfg, engine._ctx),
+            static_argnames=("max_seq",))
+        self._decode = jax.jit(
+            functools.partial(self._decode_impl, cfg, engine._ctx))
         self._scatter = jax.jit(T.scatter_request)
 
     @staticmethod
-    def _prefill_impl(cfg, params, embeds, lora, valid_len, *, max_seq):
-        return T.prefill(params, cfg, embeds, max_seq=max_seq, lora=lora,
-                         valid_len=valid_len)
+    def _prefill_impl(cfg, ctx, params, embeds, lora, valid_len, *, max_seq):
+        return T.prefill(params, cfg, embeds, max_seq=max_seq, ctx=ctx,
+                         lora=lora, valid_len=valid_len)
 
     @staticmethod
-    def _decode_impl(cfg, params, embeds, cache, lora, active):
-        return T.decode_step(params, cfg, embeds, cache, lora=lora,
+    def _decode_impl(cfg, ctx, params, embeds, cache, lora, active):
+        return T.decode_step(params, cfg, embeds, cache, ctx=ctx, lora=lora,
                              active=active)
 
     # --- helpers -----------------------------------------------------------
@@ -414,13 +436,17 @@ class EngineLoop:
 
 def build_engine(cfg: ModelConfig, key: Optional[jax.Array] = None,
                  max_seq: int = 256,
-                 flash_dir: Optional[str] = None) -> Engine:
-    """Random-weights engine for examples/tests: quantized serving params +
-    a bf16 embedding table exported to Flash (the paper's conversion flow)."""
+                 flash_dir: Optional[str] = None,
+                 backend: Optional[str] = None) -> Engine:
+    """Random-weights engine for examples/tests: quantized serving params
+    built directly in the kernel-native packed layout + a bf16 embedding
+    table exported to Flash (the paper's conversion flow).  ``backend``
+    picks the dispatch backend (REPRO_BACKEND env overrides)."""
     key = key if key is not None else jax.random.PRNGKey(0)
     k1, k2 = jax.random.split(key)
-    params = T.init_params(cfg, key=k1, quantized=True)
+    params = T.init_params(cfg, key=k1, quantized=True, pack=True)
     emb = np.asarray(
         jax.random.normal(k2, (cfg.padded_vocab_size, cfg.d_model)) * 0.02,
         np.float32)
-    return Engine(cfg, params, emb, max_seq=max_seq, flash_dir=flash_dir)
+    return Engine(cfg, params, emb, max_seq=max_seq, flash_dir=flash_dir,
+                  backend=backend)
