@@ -19,8 +19,9 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit, is_smoke, summary
+from benchmarks.common import emit, is_smoke, record_fallbacks, summary
 from repro.configs import registry
+from repro.runtime import plan as RP
 from repro.serving import engine as E
 from repro.serving import sampling as SM
 from repro.serving.scheduler import Request
@@ -109,6 +110,41 @@ def main() -> None:
     summary("ttft_p95_s", p(ttfts, 95))
     summary("tpot_p50_s", p(tpots, 50))
     summary("tpot_p95_s", p(tpots, 95))
+    # silent reference fallbacks would masquerade as kernel regressions
+    record_fallbacks("continuous_batching", eng.dispatch)
+
+    # --- paged vs slot-reservation admission at the same DRAM budget -------
+    # Both loops get the byte budget of `budget_pages` KV pages; the
+    # baseline spends it as worst-case prompt+max_new token reservations,
+    # the paged loop as pages actually held (growth is paid by the Flash
+    # spill tier).  Peak concurrent requests is the figure of merit the
+    # paged pool exists for.
+    ps = RP.kv_page_size(max_seq)
+    pb = RP.kv_page_bytes(cfg, ps)
+    budget_pages = 2 * (max_seq // ps)       # two worst-case rows' bytes
+    n_adm, new_adm = (6, 40) if smoke else (12, 60)
+
+    def adm_trace():
+        rng = np.random.default_rng(7)
+        return [Request(uid=100 + i,
+                        prompt_tokens=list(rng.integers(1, 400, 20)),
+                        max_new_tokens=new_adm) for i in range(n_adm)]
+
+    sp_adm = SM.SamplingParams(temperature=0.0, max_new_tokens=new_adm)
+    reserved = E.EngineLoop(eng, max_slots=slots * 2,
+                            token_budget=budget_pages * ps)
+    reserved.run(adm_trace(), sp_adm)
+    paged = E.EngineLoop(eng, max_slots=slots * 2,
+                         dram_budget_bytes=budget_pages * pb)
+    paged.run(adm_trace(), sp_adm)
+    emit("paged_peak_concurrency", 0.0,
+         f"paged={paged.peak_active} reserved={reserved.peak_active} "
+         f"@ {budget_pages} pages ({budget_pages * pb} B); "
+         f"spilled={eng.stats.spilled_pages} restored={eng.stats.restored_pages}")
+    summary("peak_concurrency_paged", paged.peak_active)
+    summary("peak_concurrency_reserved", reserved.peak_active)
+    for lp in (loop, reserved, paged):
+        lp.close()
 
 
 if __name__ == "__main__":

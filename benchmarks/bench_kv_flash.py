@@ -21,6 +21,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core import hybrid_storage as HS
+from repro.core import kv_pool as KP
 
 LAYERS = 8
 KV_HEADS, HEAD_DIM = 4, 64
@@ -74,6 +75,64 @@ def scenario(name: str, spilled_tokens: int, prefetch: bool) -> None:
         shutil.rmtree(root, ignore_errors=True)
 
 
+def page_residency_scenario() -> None:
+    """Paged-pool residency: spill preempted rows' pages through the
+    PageSpillStore and restore them with group-ahead prefetch — report
+    DRAM vs Flash page counts and the prefetch hit rate alongside the
+    Fig. 2 latency numbers."""
+    root = tempfile.mkdtemp(prefix="kvpool_")
+    try:
+        flash = HS.FlashStore(root, HS.FlashSpec(bandwidth_bytes_per_s=BW,
+                                                 latency_s=15e-6,
+                                                 simulate=True))
+        store = HS.PageSpillStore(flash)
+        geom = KP.PoolGeometry(page_size=128, num_pages=12, pages_per_row=8)
+        mgr = KP.KVPoolManager(geom, num_slots=4)
+        rng = np.random.default_rng(0)
+        # three rows fill the pool; rows 1-2 get preempted to Flash
+        for row, toks in enumerate((512, 384, 512)):
+            assert mgr.alloc_row(row, toks)
+        page_bytes = geom.page_size * KV_HEADS * HEAD_DIM
+        t0 = time.perf_counter()
+        for uid, row in ((1, 1), (2, 2)):
+            pages = mgr.pages_held(row)
+            for layer in range(LAYERS):
+                arrays = {
+                    "k": rng.integers(-128, 127, size=(pages, page_bytes),
+                                      endpoint=True).astype(np.int8),
+                    "v": rng.integers(0, 255, size=(pages, page_bytes)
+                                      ).astype(np.uint8)}
+                store.put(uid, f"l{layer}", arrays,
+                          pages=pages if layer == 0 else 0)
+            mgr.spilled_pages += mgr.free_row(row)
+        spill_s = time.perf_counter() - t0
+        res = mgr.residency()
+        res["flash_pages"] = store.pages_on_flash
+        emit("pool_spill", spill_s * 1e6,
+             f"dram={res['dram_pages']};flash={res['flash_pages']};"
+             f"free={res['free_pages']}")
+        # restore row 1 with layer-ahead prefetch (the §4.1 overlap)
+        t0 = time.perf_counter()
+        store.prefetch_async(1, "l0")
+        for layer in range(LAYERS):
+            if layer + 1 < LAYERS:
+                store.prefetch_async(1, f"l{layer + 1}")
+            time.sleep(COMPUTE_S / 4)        # device writeback stands in
+            store.fetch(1, f"l{layer}")
+        store.drop(1)
+        mgr.spilled_pages -= mgr.pages_for(384)
+        assert mgr.alloc_row(1, 384)
+        restore_s = time.perf_counter() - t0
+        hits = store.prefetch_hits
+        total = hits + store.prefetch_misses
+        emit("pool_restore_prefetch", restore_s * 1e6,
+             f"dram={mgr.pages_in_use};flash={store.pages_on_flash};"
+             f"prefetch_hit_rate={hits / max(total, 1):.2f}")
+        store.close()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
 def main() -> None:
     # (a) all KV in DRAM — no spill at all
     t0 = time.perf_counter()
@@ -86,6 +145,8 @@ def main() -> None:
     scenario("flash_prefetch_hidden", 1024, prefetch=True)
     # (d) exceeding: spilled KV so large prefetch can't hide it
     scenario("flash_prefetch_exceeding", 16384, prefetch=True)
+    # (e) paged-pool tier: page residency + restore prefetch hit rate
+    page_residency_scenario()
 
 
 if __name__ == "__main__":

@@ -16,9 +16,23 @@ ROWS: List[Dict] = []
 # so the perf trajectory is tracked across PRs.
 SUMMARY: Dict[str, float] = {}
 
+# Kernel-dispatch fallbacks recorded while benchmarking: a silent drop to
+# the reference path would otherwise masquerade as a kernel regression in
+# the BENCH artifacts.  Benchmarks that build engines/dispatchers call
+# record_fallbacks(); benchmarks/run.py dumps this into the --json output.
+FALLBACKS: List[Dict] = []
+
 
 def summary(key: str, value: float) -> None:
     SUMMARY[key] = round(float(value), 6)
+
+
+def record_fallbacks(bench: str, dispatcher) -> None:
+    """Surface a Dispatcher's (op, backend, reason) fallback notes into
+    the benchmark JSON artifact."""
+    for op, backend, reason in getattr(dispatcher, "fallbacks", []):
+        FALLBACKS.append({"bench": bench, "op": op, "backend": backend,
+                          "reason": reason})
 
 
 def is_smoke() -> bool:

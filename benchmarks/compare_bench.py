@@ -1,0 +1,90 @@
+"""CI bench gate: compare the current BENCH summary to the previous run's
+artifact and fail on a tokens/s regression beyond the threshold.
+
+The CI bench-smoke job downloads the last successful main run's
+``bench-results`` artifact (which contains the prior ``BENCH_pr*.json``)
+and runs::
+
+    python benchmarks/compare_bench.py --previous prev_bench \
+        --current BENCH_pr3.json --max-regression 0.10
+
+Missing previous artifacts (first run, expired retention) pass with a
+notice — the gate only ever fails on a *measured* regression.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+
+def load_summary(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    return data.get("summary", {})
+
+
+def find_bench_json(path: str) -> str | None:
+    """Accept a BENCH_pr*.json file or a directory holding one (the
+    downloaded artifact); prefer the highest PR number."""
+    if os.path.isfile(path):
+        return path
+    if os.path.isdir(path):
+        def pr_num(p: str) -> int:
+            m = re.search(r"BENCH_pr(\d+)\.json$", p)
+            return int(m.group(1)) if m else -1
+        cands = sorted(glob.glob(os.path.join(path, "**", "BENCH_pr*.json"),
+                                 recursive=True), key=pr_num)
+        if cands:
+            return cands[-1]
+    return None
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--previous", required=True,
+                    help="previous BENCH_pr*.json (file or artifact dir)")
+    ap.add_argument("--current", required=True,
+                    help="current BENCH_pr*.json")
+    ap.add_argument("--max-regression", type=float, default=0.10,
+                    help="maximum allowed fractional drop (0.10 = 10%%)")
+    ap.add_argument("--key", default="tokens_per_s",
+                    help="summary metric to gate on (higher is better)")
+    args = ap.parse_args()
+
+    cur_path = find_bench_json(args.current)
+    if cur_path is None:
+        print(f"[compare] current bench file {args.current!r} missing",
+              file=sys.stderr)
+        raise SystemExit(1)
+    prev_path = find_bench_json(args.previous)
+    if prev_path is None:
+        print(f"[compare] no previous BENCH artifact under "
+              f"{args.previous!r} — first run, gate passes")
+        return
+
+    prev = load_summary(prev_path)
+    cur = load_summary(cur_path)
+    if args.key not in prev or args.key not in cur:
+        print(f"[compare] {args.key!r} missing "
+              f"(prev={sorted(prev)}, cur={sorted(cur)}) — gate passes")
+        return
+    p, c = float(prev[args.key]), float(cur[args.key])
+    if p <= 0:
+        print(f"[compare] previous {args.key}={p} unusable — gate passes")
+        return
+    drop = (p - c) / p
+    print(f"[compare] {args.key}: previous={p:.3f} ({prev_path}) "
+          f"current={c:.3f} ({cur_path}) change={-drop:+.1%}")
+    if drop > args.max_regression:
+        print(f"[compare] FAIL: {drop:.1%} regression exceeds the "
+              f"{args.max_regression:.0%} gate", file=sys.stderr)
+        raise SystemExit(1)
+    print("[compare] gate passes")
+
+
+if __name__ == "__main__":
+    main()

@@ -68,15 +68,18 @@ def main() -> None:
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"smoke": args.smoke, "failed": failed,
-                       "rows": common.ROWS}, f, indent=2)
-        print(f"[run] wrote {len(common.ROWS)} rows to {args.json}",
+                       "rows": common.ROWS,
+                       "fallbacks": common.FALLBACKS}, f, indent=2)
+        print(f"[run] wrote {len(common.ROWS)} rows "
+              f"({len(common.FALLBACKS)} dispatch fallbacks) to {args.json}",
               file=sys.stderr)
         # repo-root trajectory artifact: headline numbers per PR
-        bench_path = os.path.join(_ROOT, "BENCH_pr2.json")
+        bench_path = os.path.join(_ROOT, "BENCH_pr3.json")
         with open(bench_path, "w") as f:
-            json.dump({"suite": "mnn-llm-repro", "pr": 2,
+            json.dump({"suite": "mnn-llm-repro", "pr": 3,
                        "smoke": args.smoke,
-                       "summary": common.SUMMARY}, f, indent=2)
+                       "summary": common.SUMMARY,
+                       "fallbacks": common.FALLBACKS}, f, indent=2)
         print(f"[run] wrote summary to {bench_path}", file=sys.stderr)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)

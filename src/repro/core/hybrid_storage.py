@@ -90,6 +90,22 @@ class FlashStore:
         self._throttle(out.nbytes)
         return out
 
+    def read_all(self, name: str) -> np.ndarray:
+        """Read one whole stored array (throttled)."""
+        out = np.asarray(self._maps[name])
+        self.bytes_read += out.nbytes
+        self._throttle(out.nbytes)
+        return out
+
+    def delete(self, name: str) -> None:
+        """Drop a stored array and its backing file."""
+        self._maps.pop(name, None)
+        self._meta.pop(name, None)
+        try:
+            os.remove(os.path.join(self.root, name + ".bin"))
+        except OSError:
+            pass
+
     def nbytes(self, name: str) -> int:
         shape, dtype = self._meta[name]
         return int(np.prod(shape)) * np.dtype(dtype).itemsize
@@ -134,7 +150,65 @@ class SpillBlock:
     length: int
 
 
-class KVSpillManager:
+class _FlashPrefetcher:
+    """Background prefetch pump shared by the spill tiers: a worker thread
+    loads keyed blobs from Flash into an in-memory cache ahead of the
+    consumer (the §4.1 compute/IO overlap).  Subclasses implement
+    ``_load(key)`` and ``_has(key)``."""
+
+    def __init__(self):
+        self._cache: Dict = {}
+        self._q: "queue.Queue" = queue.Queue()
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._inflight: set = set()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+        self.prefetch_hits = 0
+        self.prefetch_misses = 0
+
+    def _load(self, key):
+        raise NotImplementedError
+
+    def _has(self, key) -> bool:
+        return True
+
+    def _worker(self) -> None:
+        while True:
+            key = self._q.get()
+            if key is None:
+                return
+            data = self._load(key)
+            with self._cv:
+                self._cache[key] = data
+                self._inflight.discard(key)
+                self._cv.notify_all()
+
+    def _request(self, key) -> None:
+        with self._lock:
+            if key in self._cache or key in self._inflight \
+                    or not self._has(key):
+                return
+            self._inflight.add(key)
+        self._q.put(key)
+
+    def _obtain(self, key):
+        """Blocking on an in-flight prefetch; synchronous load on a miss."""
+        with self._cv:
+            while key in self._inflight:
+                self._cv.wait()
+            if key in self._cache:
+                self.prefetch_hits += 1
+                return self._cache.pop(key)
+        self.prefetch_misses += 1
+        return self._load(key)
+
+    def close(self) -> None:
+        self._q.put(None)
+        self._thread.join(timeout=5)
+
+
+class KVSpillManager(_FlashPrefetcher):
     """Spill the oldest KV blocks of each layer to Flash; prefetch ahead.
 
     The decode loop calls, per layer:
@@ -161,15 +235,7 @@ class KVSpillManager:
         self.k_dtype = k_dtype
         self.v_dtype = v_dtype   # fp8 carried as uint8 bits on host
         self.blocks: Dict[int, list[SpillBlock]] = {i: [] for i in range(num_layers)}
-        self._cache: Dict[int, tuple[np.ndarray, np.ndarray]] = {}
-        self._q: "queue.Queue[Optional[int]]" = queue.Queue()
-        self._lock = threading.Lock()
-        self._cv = threading.Condition(self._lock)
-        self._inflight: set[int] = set()
-        self._thread = threading.Thread(target=self._worker, daemon=True)
-        self._thread.start()
-        self.prefetch_hits = 0
-        self.prefetch_misses = 0
+        super().__init__()
 
     # -- spill ----------------------------------------------------------------
     def spill(self, layer: int, k_block: np.ndarray, v_block: np.ndarray,
@@ -192,54 +258,86 @@ class KVSpillManager:
         ks, vs = [], []
         for b in self.blocks[layer]:
             name = f"kv_l{layer}_s{b.start}"
-            k = np.asarray(self.flash._maps[name + "_k"])
-            self.flash.bytes_read += k.nbytes
-            self.flash._throttle(k.nbytes)
-            ks.append(k)
-            v = np.asarray(self.flash._maps[name + "_v"])
-            self.flash.bytes_read += v.nbytes
-            self.flash._throttle(v.nbytes)
-            vs.append(v)
+            ks.append(self.flash.read_all(name + "_k"))
+            vs.append(self.flash.read_all(name + "_v"))
         if not ks:
             return (np.zeros((0,), self.k_dtype), np.zeros((0,), self.v_dtype))
         return np.concatenate(ks, axis=1), np.concatenate(vs, axis=1)
 
-    def _worker(self) -> None:
-        while True:
-            layer = self._q.get()
-            if layer is None:
-                return
-            data = self._load(layer)
-            with self._cv:
-                self._cache[layer] = data
-                self._inflight.discard(layer)
-                self._cv.notify_all()
+    def _has(self, layer: int) -> bool:
+        return bool(self.blocks[layer])
 
     def prefetch_async(self, layer: int) -> None:
-        layer = layer % self.num_layers
-        with self._lock:
-            if layer in self._cache or layer in self._inflight:
-                return
-            if not self.blocks[layer]:
-                return
-            self._inflight.add(layer)
-        self._q.put(layer)
+        self._request(layer % self.num_layers)
 
     def gather(self, layer: int) -> tuple[np.ndarray, np.ndarray]:
         """Spilled K/V for ``layer`` (blocking if the prefetch is in flight;
         synchronous load on a miss)."""
-        with self._cv:
-            while layer in self._inflight:
-                self._cv.wait()
-            if layer in self._cache:
-                self.prefetch_hits += 1
-                return self._cache.pop(layer)
-        self.prefetch_misses += 1
-        return self._load(layer)
+        return self._obtain(layer)
 
-    def close(self) -> None:
-        self._q.put(None)
-        self._thread.join(timeout=5)
+
+class PageSpillStore(_FlashPrefetcher):
+    """Row-granular paged-KV spill tier (kv_pool + §4.1 Flash overlap).
+
+    When the serving engine preempts a request, the request's pool pages —
+    every layer group's quantized K/V bytes plus scale planes — move to
+    Flash here and their DRAM pages go back to the free list; on resume
+    they come back *page-exact* (int8/fp8 bytes round-trip losslessly, so
+    resumed greedy decoding is bitwise-identical to an uninterrupted run).
+
+    Restore uses the same group-ahead prefetch overlap as KVSpillManager:
+    while the engine writes group i's pages back to the device, the
+    background thread is already reading group i+1 from Flash.
+    """
+
+    def __init__(self, flash: FlashStore):
+        self.flash = flash
+        # (uid, group) -> [(flash_key, array_name)]
+        self._meta: Dict[tuple, list] = {}
+        self._uid_pages: Dict[int, int] = {}
+        self.pages_on_flash = 0
+        super().__init__()
+
+    # -- spill ----------------------------------------------------------------
+    def put(self, uid: int, group: str, arrays: Dict[str, np.ndarray], *,
+            pages: int = 0) -> None:
+        """Write one layer group's row snapshot; ``pages`` counts the pool
+        pages this call moves to Flash (residency accounting — pass it on
+        one group per row, the bytes are per-group either way)."""
+        names = []
+        for name, arr in arrays.items():
+            key = f"pspill_u{uid}_{group}_{name}"
+            self.flash.put(key, np.ascontiguousarray(arr))
+            names.append((key, name))
+        with self._lock:
+            self._meta[(uid, group)] = names
+            self._uid_pages[uid] = self._uid_pages.get(uid, 0) + pages
+            self.pages_on_flash += pages
+
+    # -- restore ---------------------------------------------------------------
+    def _load(self, key: tuple) -> Dict[str, np.ndarray]:
+        return {name: self.flash.read_all(fkey)
+                for fkey, name in self._meta[key]}
+
+    def _has(self, key: tuple) -> bool:
+        return key in self._meta
+
+    def prefetch_async(self, uid: int, group: str) -> None:
+        self._request((uid, group))
+
+    def fetch(self, uid: int, group: str) -> Dict[str, np.ndarray]:
+        """One group's arrays (blocking on an in-flight prefetch;
+        synchronous Flash read on a miss)."""
+        return self._obtain((uid, group))
+
+    def drop(self, uid: int) -> None:
+        """Forget a request's spilled pages (restored or abandoned)."""
+        with self._lock:
+            self.pages_on_flash -= self._uid_pages.pop(uid, 0)
+            for key in [k for k in self._meta if k[0] == uid]:
+                for fkey, _ in self._meta.pop(key):
+                    self.flash.delete(fkey)
+                self._cache.pop(key, None)
 
 
 def plan_embedding_placement(param_sizes: Dict[str, int],

@@ -127,6 +127,15 @@ def dequantize_keys(kq: Array, scale: Array, zero: Array,
     return ((kq.astype(jnp.float32) - zero[..., None]) * scale[..., None]).astype(dtype)
 
 
+def cast_values(v_new: Array, dtype) -> Array:
+    """Value-side cast on append: saturating fp8 conversion for e4m3
+    caches, plain cast otherwise.  Shared by the dense and paged (kv_pool)
+    append paths so their stored bytes match exactly."""
+    if dtype == jnp.float8_e4m3fn:
+        return q.to_fp8(v_new)
+    return v_new.astype(dtype)
+
+
 def append(cache: LayerKVCache, k_new: Array, v_new: Array,
            pos: Array) -> LayerKVCache:
     """Append ``t`` new tokens' K/V at positions [pos, pos+t).
@@ -138,8 +147,7 @@ def append(cache: LayerKVCache, k_new: Array, v_new: Array,
     """
     b, t, h, d = k_new.shape
     kq, ks, kz = quantize_keys(k_new, bits=cache.key_bits)
-    v_cast = v_new.astype(cache.v.dtype) if cache.v.dtype != jnp.float8_e4m3fn \
-        else q.to_fp8(v_new)
+    v_cast = cast_values(v_new, cache.v.dtype)
     size = cache.max_seq
     pos = jnp.asarray(pos, jnp.int32)
     if pos.ndim == 1:

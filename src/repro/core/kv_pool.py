@@ -1,0 +1,402 @@
+"""Block-paged quantized KV pool (vLLM's PagedAttention move, on the
+paper's quantized-KV substrate).
+
+The per-slot caches the continuous-batching engine inherited from PR 1
+reserve ``max_seq`` contiguous tokens per slot, so admission pays the
+worst case up front.  This module stores KV in fixed-size *pages* instead:
+
+* ``PagedLayerKV`` — one layer's page pool.  Pages keep the existing
+  quant scheme (asymmetric int8/int4 keys per (token, head), fp8 values,
+  paper Fig. 3) in the attention-friendly layout, just cut into
+  ``page_size``-token pages:  ``k_q [P, page, H_kv, D]``.  The last page
+  of a full-attention pool is a *trash page*: page-table entries of
+  unallocated logical pages point at it, so appends from empty slots and
+  prefill scatters of short prompts need no masking — the bytes land in
+  the trash and reads never reference it (validity comes from ``pos``).
+* page table — ``[B, pages_per_row]`` int32 physical page ids per decode
+  row, shared by every full-attention layer (all layers append the same
+  token positions).  The table is an ordinary array input to the jitted
+  steps: allocation changes never re-trace.
+* ``KVPoolManager`` — the host-side allocator: free-list allocation,
+  allocate-on-append at page boundaries, copy-free reclaim (freeing a row
+  returns its page ids; no bytes move), and DRAM/Flash residency
+  accounting for the spill tier (serving/engine.py spills preempted rows'
+  pages through ``hybrid_storage.PageSpillStore``).
+
+Sliding-window layers need no table at all: their pages are a fixed
+per-row ring — position ``p`` lives in ring page ``(p // page) % ppw`` —
+so "dropping pages older than window" is just the modular index
+recycling the oldest page.  This replaces the dense ring-slot special
+case for the paged decode path.
+
+``paged_decode_attention_ref`` mirrors ``attention.decode_attention_ref``
+op for op, so a paged full-attention decode is *bitwise identical* to the
+dense-cache decode on the reference backend (the parity tests assert
+exactly that).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kv_cache as kvc
+from repro.core import quantization as q
+from repro.core.precision import DEFAULT_POLICY, PrecisionPolicy
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Geometry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PoolGeometry:
+    """Pool shape decided once by the ExecutionPlan (runtime/plan.py):
+    ``page_size`` tokens per page, ``num_pages`` allocatable device pages
+    (the trash page is extra), ``pages_per_row`` table width
+    (= max_seq / page_size)."""
+    page_size: int
+    num_pages: int
+    pages_per_row: int
+
+    @property
+    def trash_page(self) -> int:
+        return self.num_pages
+
+    @property
+    def max_seq(self) -> int:
+        return self.page_size * self.pages_per_row
+
+    def pages_for(self, tokens: int) -> int:
+        return -(-int(tokens) // self.page_size)
+
+
+def pages_per_window(window: int, page_size: int) -> int:
+    """Ring length (in pages) for a sliding-window layer.  One extra page
+    beyond ceil(window/page) guarantees a key is never recycled while the
+    window mask can still reach it (the newest page is partially filled)."""
+    if window % page_size == 0:
+        return window // page_size + 1
+    return window // page_size + 2
+
+
+# ---------------------------------------------------------------------------
+# The paged layer pool
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedLayerKV:
+    """One layer's paged quantized KV pool (optionally stacked [L, ...]
+    along a scan axis, like LayerKVCache in the dense path).
+
+    k_q:    int8 [..., P, page, H_kv, D]     (key_bits=8)
+            int8 [..., P, page, H_kv, D//2]  (key_bits=4, nibble pairs)
+    k_scale:fp32 [..., P, page, H_kv]
+    k_zero: fp32 [..., P, page, H_kv]
+    v:      fp8  [..., P, page, H_kv, D]
+    window: static; 0 => table-addressed full-attention pool,
+            else per-row ring of ``ppw`` pages
+    """
+    k_q: Array
+    k_scale: Array
+    k_zero: Array
+    v: Array
+    window: int = 0
+    key_bits: int = 8
+    ppw: int = 0                      # pages per window ring (window > 0)
+
+    def tree_flatten(self):
+        return ((self.k_q, self.k_scale, self.k_zero, self.v),
+                (self.window, self.key_bits, self.ppw))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        k_q, k_scale, k_zero, v = children
+        return cls(k_q, k_scale, k_zero, v,
+                   window=aux[0], key_bits=aux[1], ppw=aux[2])
+
+    @property
+    def page_size(self) -> int:
+        return self.k_q.shape[-3]
+
+    @property
+    def num_pages(self) -> int:
+        return self.k_q.shape[-4]
+
+
+def init_paged_layer(geom: PoolGeometry, kv_heads: int, head_dim: int, *,
+                     layers: int = 0, batch: int = 0, window: int = 0,
+                     key_bits: int = 8, value_fp8: bool = True
+                     ) -> PagedLayerKV:
+    """Zero-initialized pool.  Full-attention pools hold
+    ``geom.num_pages + 1`` pages (the +1 is the trash page); windowed
+    pools hold a fixed ``batch * ppw`` ring.  ``layers`` > 0 stacks a
+    leading scan axis."""
+    ps = geom.page_size
+    ppw = pages_per_window(window, ps) if window else 0
+    pages = batch * ppw if window else geom.num_pages + 1
+    vdt = q.FP8_DTYPE if value_fp8 else jnp.bfloat16
+    kd = head_dim // 2 if key_bits == 4 else head_dim
+    lead = (layers,) if layers else ()
+    return PagedLayerKV(
+        k_q=jnp.zeros((*lead, pages, ps, kv_heads, kd), jnp.int8),
+        k_scale=jnp.ones((*lead, pages, ps, kv_heads), jnp.float32),
+        k_zero=jnp.zeros((*lead, pages, ps, kv_heads), jnp.float32),
+        v=jnp.zeros((*lead, pages, ps, kv_heads, head_dim), vdt),
+        window=window, key_bits=key_bits, ppw=ppw)
+
+
+def append_paged(pool: PagedLayerKV, k_new: Array, v_new: Array, pos: Array,
+                 table: Optional[Array]) -> PagedLayerKV:
+    """Append one decode token per row at per-row positions ``pos`` [B].
+
+    Full-attention pools route through ``table`` [B, pages_per_row]
+    (unallocated rows point at the trash page); windowed pools compute
+    their ring page from the position — trivial page recycling.
+    Quantization is identical to the dense ``kv_cache.append``, so the
+    stored bytes match the dense path bit for bit.
+    """
+    b, t, h, d = k_new.shape
+    assert t == 1, "paged append is the decode hot path (one token per row)"
+    ps = pool.page_size
+    kq, ks, kz = kvc.quantize_keys(k_new, bits=pool.key_bits)
+    v_cast = kvc.cast_values(v_new, pool.v.dtype)
+    pos = jnp.asarray(pos, jnp.int32)
+    rows = jnp.arange(b)
+    if pool.window:
+        page = rows * pool.ppw + jnp.mod(pos // ps, pool.ppw)
+    else:
+        page = table[rows, pos // ps]
+    off = jnp.mod(pos, ps)
+    return PagedLayerKV(
+        k_q=pool.k_q.at[page, off].set(kq[:, 0]),
+        k_scale=pool.k_scale.at[page, off].set(ks[:, 0]),
+        k_zero=pool.k_zero.at[page, off].set(kz[:, 0]),
+        v=pool.v.at[page, off].set(v_cast[:, 0]),
+        window=pool.window, key_bits=pool.key_bits, ppw=pool.ppw)
+
+
+def gather_pages(pool: PagedLayerKV, table: Array
+                 ) -> Tuple[Array, Array, Array, Array]:
+    """Page-table-indexed dense read view: gather each row's pages in
+    logical order -> [B, n_pages*page, ...] (the dense layout, so the
+    reference attention math is unchanged)."""
+    B = table.shape[0]
+
+    def g(x):
+        y = x[table]
+        return y.reshape(B, y.shape[1] * y.shape[2], *y.shape[3:])
+
+    return g(pool.k_q), g(pool.k_scale), g(pool.k_zero), g(pool.v)
+
+
+def ring_view(pool: PagedLayerKV, pos: Array, batch: int
+              ) -> Tuple[Array, Array]:
+    """Windowed layers: the per-row ring as a (table, base) pair in
+    *logical page order*.  ``table`` [B, ppw] holds physical page ids,
+    ``base`` [B] the logical page index of table column 0 (may be
+    negative early on; those positions are masked)."""
+    ppw, ps = pool.ppw, pool.page_size
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (batch,))
+    cur = jnp.maximum(pos - 1, 0) // ps
+    base = cur - (ppw - 1)
+    rows = jnp.arange(batch)[:, None]
+    table = rows * ppw + jnp.mod(base[:, None] + jnp.arange(ppw)[None], ppw)
+    return table, base
+
+
+def scatter_pages(pool: PagedLayerKV, dense: "kvc.LayerKVCache", slot: Array,
+                  table_row: Array, valid_len: Array) -> PagedLayerKV:
+    """Write a prefilled single-request *dense* cache (leading scan axis L,
+    batch 1) into the pool pages of decode row ``slot``.
+
+    Full-attention: the dense [L, 1, max_seq, ...] arrays are already in
+    logical page order — reshape and scatter through ``table_row``
+    (trash-filled tail entries absorb the unallocated pages).
+    Windowed: translate the dense ring (slot = pos mod window) into the
+    page ring (page = (pos // page_size) mod ppw); positions outside
+    [valid_len - window, valid_len) zero out, matching a fresh pool.
+    """
+    ps = pool.page_size
+    if not pool.window:
+        n = table_row.shape[0]
+
+        def put(big, small):
+            L = small.shape[0]
+            pages = small[:, 0].reshape(L, n, ps, *small.shape[3:])
+            return big.at[:, table_row].set(pages)
+
+        return PagedLayerKV(
+            k_q=put(pool.k_q, dense.k_q),
+            k_scale=put(pool.k_scale, dense.k_scale),
+            k_zero=put(pool.k_zero, dense.k_zero),
+            v=put(pool.v, dense.v),
+            window=pool.window, key_bits=pool.key_bits, ppw=pool.ppw)
+
+    ppw = pool.ppw
+    W = dense.k_q.shape[2]            # dense ring size == window
+    t = jnp.asarray(valid_len, jnp.int32)
+    cur = jnp.maximum(t - 1, 0) // ps
+    k_q, k_scale, k_zero, v = pool.k_q, pool.k_scale, pool.k_zero, pool.v
+    for r in range(ppw):
+        # the newest logical page <= cur that lands on ring slot r
+        g = cur - jnp.mod(cur - r, ppw)
+        qpos = g * ps + jnp.arange(ps)                     # [page] positions
+        valid = (qpos >= 0) & (qpos < t) & (qpos >= t - W)
+        idx = jnp.mod(qpos, W)
+        page = slot * ppw + r
+
+        def pick(small, fill, _valid=valid, _idx=idx):
+            vals = small[:, 0, _idx]                       # [L, page, ...]
+            m = _valid.reshape(1, -1, *([1] * (vals.ndim - 2)))
+            return jnp.where(m, vals, jnp.asarray(fill, vals.dtype))
+
+        k_q = k_q.at[:, page].set(pick(dense.k_q, 0))
+        k_scale = k_scale.at[:, page].set(pick(dense.k_scale, 1.0))
+        k_zero = k_zero.at[:, page].set(pick(dense.k_zero, 0.0))
+        v = v.at[:, page].set(pick(dense.v, 0))
+    return PagedLayerKV(k_q=k_q, k_scale=k_scale, k_zero=k_zero, v=v,
+                        window=pool.window, key_bits=pool.key_bits,
+                        ppw=pool.ppw)
+
+
+def paged_decode_attention_ref(qh: Array, pool: PagedLayerKV, table: Array,
+                               base: Optional[Array], pos: Array,
+                               policy: PrecisionPolicy = DEFAULT_POLICY
+                               ) -> Array:
+    """One-token attention over the paged pool (pure-JAX reference).
+
+    Mirrors ``attention.decode_attention_ref`` op for op: gather the pages
+    into the dense layout, then the identical einsum/softmax sequence —
+    full-attention outputs are bitwise equal to the dense path.  ``base``
+    is the logical page offset of table column 0 (ring views; None => 0).
+    """
+    B, T, H, D = qh.shape
+    Hkv = pool.k_q.shape[-2]
+    G = H // Hkv
+    kq, ks, kz, v = gather_pages(pool, table)
+    k = kvc.dequantize_keys(kq, ks, kz, policy.compute_dtype,
+                            bits=pool.key_bits)              # [B,S,Hkv,D]
+    v = v.astype(policy.compute_dtype)
+    s = jnp.einsum("btkgd,bskd->bkgts",
+                   qh.reshape(B, T, Hkv, G, D).astype(policy.compute_dtype), k,
+                   preferred_element_type=jnp.float32)       # [B,Hkv,G,1,S]
+    S = k.shape[1]
+    ps = pool.page_size
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (B,))
+    if base is None:
+        kpos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    else:
+        kpos = base[:, None] * ps + jnp.arange(S)[None]
+    mask = (kpos >= 0) & (kpos < pos[:, None])
+    if pool.window:
+        mask = mask & (kpos >= pos[:, None] - pool.window)
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s.astype(policy.softmax_dtype), axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", p.astype(policy.compute_dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, T, H, D).astype(policy.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Host-side allocator
+# ---------------------------------------------------------------------------
+
+class KVPoolManager:
+    """Free-list page allocator + page-table bookkeeping (host side).
+
+    The device never sees this class — it sees the [B, pages_per_row]
+    int32 table the manager maintains (``device_table``).  Reclaim is
+    copy-free: freeing a row returns its page ids to the free list; the
+    bytes stay where they are until a new allocation overwrites them.
+    ``spilled_pages`` counts pages currently resident on Flash (the
+    engine moves preempted rows' pages there via PageSpillStore).
+    """
+
+    def __init__(self, geom: PoolGeometry, num_slots: int):
+        self.geom = geom
+        self.num_slots = num_slots
+        # pop() hands out low page ids first — deterministic allocation
+        self._free: List[int] = list(range(geom.num_pages - 1, -1, -1))
+        self.table = np.full((num_slots, geom.pages_per_row),
+                             geom.trash_page, np.int32)
+        self.row_pages: List[List[int]] = [[] for _ in range(num_slots)]
+        self.row_pos = np.zeros(num_slots, np.int64)
+        self.spilled_pages = 0
+        self.alloc_failures = 0
+
+    # --- accounting --------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.geom.num_pages - len(self._free)
+
+    def pages_for(self, tokens: int) -> int:
+        return self.geom.pages_for(tokens)
+
+    def pages_held(self, row: int) -> int:
+        return len(self.row_pages[row])
+
+    def residency(self) -> Dict[str, int]:
+        return {"dram_pages": self.pages_in_use,
+                "free_pages": self.free_pages,
+                "flash_pages": self.spilled_pages}
+
+    # --- transitions -------------------------------------------------------
+    def alloc_row(self, row: int, tokens: int) -> bool:
+        """Allocate the pages holding ``tokens`` for a fresh/restored row.
+        All-or-nothing; fills the row's table prefix."""
+        assert not self.row_pages[row], f"row {row} still holds pages"
+        need = self.pages_for(tokens)
+        if need > len(self._free):
+            self.alloc_failures += 1
+            return False
+        pages = [self._free.pop() for _ in range(need)]
+        self.row_pages[row] = pages
+        self.table[row, :need] = pages
+        return True
+
+    def ensure(self, row: int, pos: int) -> bool:
+        """Allocate-on-append: make sure the page for an append at
+        position ``pos`` exists.  False <=> the pool is out of pages (the
+        engine preempts a victim and retries)."""
+        idx = int(pos) // self.geom.page_size
+        held = self.row_pages[row]
+        if idx < len(held):
+            return True
+        assert idx == len(held), (row, pos, len(held))
+        if not self._free:
+            self.alloc_failures += 1
+            return False
+        page = self._free.pop()
+        held.append(page)
+        self.table[row, idx] = page
+        return True
+
+    def free_row(self, row: int) -> int:
+        """Copy-free reclaim: return the row's pages to the free list and
+        point its table at the trash page.  Returns pages freed."""
+        pages = self.row_pages[row]
+        for p in reversed(pages):
+            self._free.append(p)
+        self.row_pages[row] = []
+        self.table[row, :] = self.geom.trash_page
+        self.row_pos[row] = 0
+        return len(pages)
+
+    def device_table(self) -> Array:
+        return jnp.asarray(self.table)

@@ -12,6 +12,14 @@ Grid (B, Hkv, nS) with S innermost; online-softmax state (m, l, acc) lives
 in VMEM scratch across the S steps.  Valid-prefix lengths ride in SMEM as a
 [B] vector (continuous batching: every slot decodes at its own offset); a
 scalar/[1] length broadcasts to all rows.
+
+``paged_quant_decode_attention`` is the page-table variant for the paged
+KV pool (core/kv_pool.py): the grid walks *logical* pages and a
+scalar-prefetched per-row page table translates each one to its physical
+pool page in the BlockSpec index map — the kernel body is the same math
+as the dense kernel at block_s == page_size, so the two are bitwise
+equal.  A per-row ``base`` page offset + static ``window`` serve the
+sliding-window ring views (windowed decode now runs on the kernel path).
 """
 from __future__ import annotations
 
@@ -101,4 +109,102 @@ def quant_decode_attention(q: jax.Array, k_q: jax.Array, k_scale: jax.Array,
         ],
         interpret=interpret,
     )(length, qg, k_q, k_scale, k_zero, v)
+    return out.reshape(B, H, D)
+
+
+def _paged_kernel(table_ref, base_ref, len_ref, q_ref, kq_ref, ks_ref,
+                  kz_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, n_p: int, ps: int, window: int):
+    b_idx = pl.program_id(0)
+    p_idx = pl.program_id(2)
+
+    @pl.when(p_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                # [G, D] f32 (pre-scaled)
+    kq = kq_ref[0, :, 0]                           # [ps, D] int8
+    ks = ks_ref[0, :, 0]                           # [ps]
+    kz = kz_ref[0, :, 0]
+    v = v_ref[0, :, 0].astype(jnp.float32)         # [ps, D]
+    k = (kq.astype(jnp.float32) - kz[:, None]) * ks[:, None]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # [G, ps]
+    # logical position of each key in this page (the index map already
+    # translated logical page base_ref[b] + p_idx to its physical page)
+    pos = ((base_ref[b_idx] + p_idx) * ps
+           + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1))
+    length = len_ref[b_idx]
+    valid = (pos >= 0) & (pos < length)
+    if window:
+        valid = valid & (pos >= length - window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # [G, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                         # [G, ps]
+    corr = jnp.exp(m_prev - m_new)                 # [G, 1]
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)  # [G, D]
+
+    @pl.when(p_idx == n_p - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_quant_decode_attention(q: jax.Array, k_q: jax.Array,
+                                 k_scale: jax.Array, k_zero: jax.Array,
+                                 v: jax.Array, table: jax.Array,
+                                 base: jax.Array, length: jax.Array, *,
+                                 window: int = 0,
+                                 interpret: bool = True) -> jax.Array:
+    """Decode attention over the paged pool via a per-row page table.
+
+    q: f32 [B, H, D] pre-scaled; pool arrays [P, page, Hkv, D(k)];
+    table: int32 [B, n_pages] physical page per logical page (unallocated
+    entries point at the trash page — masked by ``length``); base: int32
+    [B] logical page index of table column 0 (ring views start mid-stream,
+    possibly negative); length: int32 [B] valid prefix.  The table rides
+    in scalar-prefetch SMEM so each grid step's K/V DMA is page-gathered.
+    """
+    B, H, D = q.shape
+    P, ps, Hkv = k_q.shape[0], k_q.shape[1], k_q.shape[2]
+    G = H // Hkv
+    n_p = table.shape[1]
+    qg = q.reshape(B, Hkv, G, D)
+    table = jnp.asarray(table, jnp.int32)
+    base = jnp.broadcast_to(jnp.asarray(base, jnp.int32).reshape(-1), (B,))
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32).reshape(-1), (B,))
+
+    kernel = functools.partial(_paged_kernel, n_p=n_p, ps=ps, window=window)
+    page_idx = lambda b, h, p, tbl, bs, ln: (tbl[b, p], 0, h, 0)
+    scale_idx = lambda b, h, p, tbl, bs, ln: (tbl[b, p], 0, h)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, Hkv, n_p),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, p, tbl, bs, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, D), page_idx),
+            pl.BlockSpec((1, ps, 1), scale_idx),
+            pl.BlockSpec((1, ps, 1), scale_idx),
+            pl.BlockSpec((1, ps, 1, D), page_idx),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, p, tbl, bs, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),    # running max
+            pltpu.VMEM((G, 1), jnp.float32),    # running denom
+            pltpu.VMEM((G, D), jnp.float32),    # running numerator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), jnp.float32),
+        interpret=interpret,
+    )(table, base, length, qg, k_q, k_scale, k_zero, v)
     return out.reshape(B, H, D)

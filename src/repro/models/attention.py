@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import LayerPattern, ModelConfig
 from repro.core import kv_cache as kvc
+from repro.core import kv_pool as KP
 from repro.core import quantization as q
 from repro.core.precision import PrecisionPolicy, DEFAULT_POLICY
 from repro.models import layers as L
@@ -262,6 +263,33 @@ def attention_decode(x: Array, p: dict, cfg: ModelConfig, pat: LayerPattern,
     out = D.resolve(dispatch).decode_attention(qh, cache, pos + T, policy)
     out = out.reshape(B, T, -1)
     return L.apply_linear(out, p["wo"], cfg.quant, dispatch=dispatch), cache
+
+
+def attention_decode_paged(x: Array, p: dict, cfg: ModelConfig,
+                           pat: LayerPattern, pool: KP.PagedLayerKV,
+                           table: Array, pos: Array, positions: Array,
+                           policy: PrecisionPolicy = DEFAULT_POLICY,
+                           lora: 'Optional[dict]' = None,
+                           dispatch: Optional[D.Dispatcher] = None
+                           ) -> Tuple[Array, KP.PagedLayerKV]:
+    """One decode step against the paged KV pool: append the new token's
+    quantized K/V into its page (full-attention layers via the shared page
+    table, windowed layers via their recycling ring), then attend over the
+    page-gathered history."""
+    B, T = x.shape[:2]
+    qh, kh, vh = _project_qkv(x, p, cfg, lora=lora, dispatch=dispatch)
+    qh = L.positional(qh, cfg, positions)
+    kh = L.positional(kh, cfg, positions)
+    pool = KP.append_paged(pool, kh, vh, pos, table)
+    qh = _prescale(qh, cfg.resolved_head_dim, policy)
+    if pool.window:
+        tbl, base = KP.ring_view(pool, pos + T, B)
+    else:
+        tbl, base = table, None
+    out = D.resolve(dispatch).paged_decode_attention(qh, pool, tbl, base,
+                                                     pos + T, policy)
+    out = out.reshape(B, T, -1)
+    return L.apply_linear(out, p["wo"], cfg.quant, dispatch=dispatch), pool
 
 
 def cross_attention(x: Array, p: dict, cfg: ModelConfig,

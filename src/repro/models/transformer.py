@@ -22,6 +22,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import LayerPattern, ModelConfig
 from repro.core import kv_cache as kvc
+from repro.core import kv_pool as KP
 from repro.core import quantization as q
 from repro.core.precision import DEFAULT_POLICY, PrecisionPolicy
 from repro.models import attention as A
@@ -214,6 +215,69 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
     return cache
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                     geom: KP.PoolGeometry) -> dict:
+    """Paged decode state for the continuous-batching EngineLoop: every
+    attention pattern gets a page pool (full layers share the one
+    ``table``; windowed layers use per-row rings), SSM patterns keep their
+    per-row state dicts.  ``table`` starts all-trash — rows hold no pages
+    until the host-side KVPoolManager allocates some."""
+    stacks = []
+    for patterns, count in cfg.layer_plan():
+        row = []
+        for pat in patterns:
+            if pat.kind == "attn":
+                row.append(KP.init_paged_layer(
+                    geom, cfg.num_kv_heads, cfg.resolved_head_dim,
+                    layers=count, batch=batch, window=pat.window,
+                    key_bits=cfg.quant.kv_key_bits,
+                    value_fp8=cfg.quant.kv_value_fp8))
+            else:
+                row.append(_stack_cache(
+                    _cache_for_pattern(cfg, pat, batch, max_seq, False),
+                    count, False))
+        stacks.append(tuple(row))
+    return {"stacks": tuple(stacks),
+            "pos": jnp.zeros((batch,), jnp.int32),
+            "table": jnp.full((batch, geom.pages_per_row), geom.trash_page,
+                              jnp.int32)}
+
+
+def scatter_request_paged(cfg: ModelConfig, cache: dict, single: dict,
+                          slot: Array, table_row: Array) -> dict:
+    """Paged analogue of ``scatter_request``: write a prefilled
+    single-request dense cache into decode row ``slot``'s pool pages
+    (``table_row``: the row's physical page ids, trash-filled tail) and
+    into its SSM state rows.  ``slot``/``table_row`` may be traced — one
+    compiled scatter serves every slot and allocation."""
+    def upd(big, small):
+        small = small.astype(big.dtype)
+        if big.ndim == small.ndim:
+            return jax.lax.dynamic_update_slice_in_dim(big, small, slot,
+                                                       axis=1)
+        return jax.lax.dynamic_update_index_in_dim(big, small, slot, axis=1)
+
+    new_stacks = []
+    for si, (patterns, _count) in enumerate(cfg.layer_plan()):
+        row = []
+        for pi, _pat in enumerate(patterns):
+            big = cache["stacks"][si][pi]
+            small = single["stacks"][si][pi]
+            if isinstance(big, KP.PagedLayerKV):
+                row.append(KP.scatter_pages(big, small, slot, table_row,
+                                            single["pos"]))
+            else:
+                row.append(jax.tree.map(upd, big, small))
+        new_stacks.append(tuple(row))
+    new = dict(cache)
+    new["stacks"] = tuple(new_stacks)
+    new["pos"] = cache["pos"].at[slot].set(
+        jnp.asarray(single["pos"], jnp.int32))
+    new["table"] = cache["table"].at[slot].set(
+        jnp.asarray(table_row, jnp.int32))
+    return new
+
+
 def scatter_request(cache: dict, single: dict, slot: Array) -> dict:
     """Write a freshly prefilled single-request cache (batch=1) into row
     ``slot`` of a shared per-row decode cache (continuous batching).
@@ -279,9 +343,10 @@ def _constrain(x: Array, ctx: StepCtx) -> Array:
 
 
 def _apply_pattern(x: Array, pp: dict, cfg: ModelConfig, pat: LayerPattern,
-                   mode: str, positions, cache, cross_cache, pos, ctx: StepCtx
-                   ) -> Tuple[Array, Any, Array]:
-    """One layer. Returns (x, new_cache, moe_aux)."""
+                   mode: str, positions, cache, cross_cache, pos, table,
+                   ctx: StepCtx) -> Tuple[Array, Any, Array]:
+    """One layer. Returns (x, new_cache, moe_aux).  ``table``: the shared
+    page table when the decode cache is paged (kv_pool), else None."""
     aux = jnp.zeros((2,), jnp.float32)
     dsp = ctx.dispatch
     h = L.rms_norm(x, pp["ln1"], cfg.rms_eps, dispatch=dsp)
@@ -294,6 +359,10 @@ def _apply_pattern(x: Array, pp: dict, cfg: ModelConfig, pat: LayerPattern,
             att, new_cache = A.attention_prefill(
                 h, pp["attn"], cfg, pat, positions, cache.max_seq, ctx.policy,
                 lora=ctx.lora, dispatch=dsp)
+        elif isinstance(cache, KP.PagedLayerKV):
+            att, new_cache = A.attention_decode_paged(
+                h, pp["attn"], cfg, pat, cache, table, pos, positions,
+                ctx.policy, lora=ctx.lora, dispatch=dsp)
         else:
             att, new_cache = A.attention_decode(
                 h, pp["attn"], cfg, pat, cache, pos, positions, ctx.policy,
@@ -346,6 +415,7 @@ def _run_stacks(x: Array, params: dict, cfg: ModelConfig, mode: str,
     new_stacks = []
     aux_total = jnp.zeros((2,), jnp.float32)
     pos = None if cache is None else cache["pos"]
+    table = None if cache is None else cache.get("table")
     for si, (patterns, count) in enumerate(cfg.layer_plan()):
         sp = params["stacks"][si]
         scache = None if cache is None else cache["stacks"][si]
@@ -362,7 +432,8 @@ def _run_stacks(x: Array, params: dict, cfg: ModelConfig, mode: str,
                 cc = None if cslice is None else cslice[pi]
                 cr = None if crslice is None else crslice[pi]
                 xx, nc, aux = _apply_pattern(
-                    xx, pslice[pi], cfg, pat, mode, positions, cc, cr, pos, ctx)
+                    xx, pslice[pi], cfg, pat, mode, positions, cc, cr, pos,
+                    table, ctx)
                 new_cs.append(nc)
                 auxc = auxc + aux
             return (xx, auxc), tuple(new_cs)

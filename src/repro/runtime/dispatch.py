@@ -127,6 +127,14 @@ class Dispatcher:
     def decode_attention(self, qh: Array, cache, pos, policy) -> Array:
         return self._call("decode_attention", "*", qh, cache, pos, policy)
 
+    def paged_decode_attention(self, qh: Array, pool, table, base, pos,
+                               policy) -> Array:
+        """Decode over the paged KV pool (core/kv_pool.py): ``table`` maps
+        logical to physical pages per row; ``base`` offsets ring views
+        (None for full-attention pools)."""
+        return self._call("paged_decode_attention", "*", qh, pool, table,
+                          base, pos, policy)
+
     def prefill_attention(self, qh: Array, kh: Array, vh: Array, *,
                           causal: bool, window: int, policy) -> Array:
         return self._call("prefill_attention", "*", qh, kh, vh,
@@ -173,6 +181,14 @@ def _rmsnorm_reference(disp, x, weight, eps):
 def _decode_attention_reference(disp, qh, cache, pos, policy):
     from repro.models import attention as A     # lazy: models import us
     return A.decode_attention_ref(qh, cache, pos, policy=policy)
+
+
+@register("paged_decode_attention", "reference")
+def _paged_decode_attention_reference(disp, qh, pool, table, base, pos,
+                                      policy):
+    from repro.core import kv_pool as KP
+    return KP.paged_decode_attention_ref(qh, pool, table, base, pos,
+                                         policy=policy)
 
 
 @register("prefill_attention", "reference")
@@ -244,6 +260,22 @@ def _kernel_decode_attention(disp, qh, cache, pos, policy, *, interpret):
     return out[:, None].astype(policy.compute_dtype)
 
 
+def _kernel_paged_decode_attention(disp, qh, pool, table, base, pos, policy,
+                                   *, interpret):
+    from repro.kernels import quant_attention as QA
+    _platform_ok(interpret)
+    B, T = qh.shape[:2]
+    _require(T == 1, "decode kernel attends one query token")
+    _require(pool.key_bits == 8, "int4 keys: reference path")
+    lengths = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    base_arr = jnp.zeros((B,), jnp.int32) if base is None \
+        else jnp.asarray(base, jnp.int32)
+    out = QA.paged_quant_decode_attention(
+        qh[:, 0], pool.k_q, pool.k_scale, pool.k_zero, pool.v, table,
+        base_arr, lengths, window=pool.window, interpret=interpret)
+    return out[:, None].astype(policy.compute_dtype)
+
+
 def _kernel_prefill_attention(disp, qh, kh, vh, causal, window, policy, *,
                               interpret):
     from repro.kernels import flash_prefill as FP
@@ -264,6 +296,10 @@ for _be, _interp in (("interpret", True), ("tpu", False)):
     register("decode_attention", _be)(
         lambda d, qh, c, p, pol, _i=_interp: _kernel_decode_attention(
             d, qh, c, p, pol, interpret=_i))
+    register("paged_decode_attention", _be)(
+        lambda d, qh, c, t, b, p, pol, _i=_interp:
+            _kernel_paged_decode_attention(d, qh, c, t, b, p, pol,
+                                           interpret=_i))
     register("prefill_attention", _be)(
         lambda d, qh, kh, vh, ca, w, pol, _i=_interp: _kernel_prefill_attention(
             d, qh, kh, vh, ca, w, pol, interpret=_i))

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import hybrid_storage as HS
+from repro.core import kv_pool
 from repro.core import quantization as q
 from repro.core import tiling
 
@@ -218,6 +219,33 @@ def _packable(leaf) -> bool:
     return isinstance(leaf, q.QuantizedTensor) and leaf.data.ndim <= 3
 
 
+def kv_page_size(max_seq: int) -> int:
+    """KV pool page size: the largest power-of-two divisor of ``max_seq``
+    on the solver's lane grid — capped at LANE (the S-block alignment
+    ``solve_tpu_blocks`` tilings want for the decode-attention gather) and
+    at max_seq//4 (so even short serving contexts exercise multi-page
+    tables), floored at the M_ALIGN sublane grid when it divides."""
+    cap = max(M_ALIGN, min(LANE, max_seq // 4))
+    ps = 1
+    while ps * 2 <= cap and max_seq % (ps * 2) == 0:
+        ps *= 2
+    return ps
+
+
+def kv_page_bytes(cfg, page_size: int) -> int:
+    """DRAM bytes one pool page costs across every full-attention layer
+    (int8/int4 keys + two fp32 scale planes + fp8/bf16 values).  Windowed
+    layers are excluded: their ring pages are a fixed per-slot cost, not
+    pool inventory."""
+    H, D = cfg.num_kv_heads, cfg.resolved_head_dim
+    kd = D // 2 if cfg.quant.kv_key_bits == 4 else D
+    vb = 1 if cfg.quant.kv_value_fp8 else 2
+    per_tok = H * kd + 2 * 4 * H + H * D * vb
+    n_full = sum(count for pats, count in cfg.layer_plan()
+                 for pat in pats if pat.kind == "attn" and pat.window == 0)
+    return page_size * per_tok * n_full
+
+
 @dataclasses.dataclass
 class ExecutionPlan:
     """Everything decided once at load time (paper §5.1): kernel-native
@@ -232,6 +260,24 @@ class ExecutionPlan:
         if key not in self.matmuls:          # shape unseen at build time
             self.matmuls[key] = MatmulPlan(k=k, n=n, bits=bits)
         return self.matmuls[key]
+
+    def kv_pool_geometry(self, cfg, max_seq: int, max_slots: int,
+                         dram_budget_bytes: Optional[int] = None
+                         ) -> kv_pool.PoolGeometry:
+        """Paged-KV pool geometry (the plan owns it, like tile shapes):
+        page size from the lane grid, page inventory from the DRAM budget
+        — clamped to [one full row, full per-slot reservation].  Pages
+        beyond the budget live on Flash via the engine's spill tier."""
+        ps = kv_page_size(max_seq)
+        ppr = -(-max_seq // ps)
+        if dram_budget_bytes is None:
+            num = max_slots * ppr
+        else:
+            pb = kv_page_bytes(cfg, ps)
+            num = dram_budget_bytes // pb if pb else max_slots * ppr
+        num = max(min(int(num), max_slots * ppr), ppr)
+        return kv_pool.PoolGeometry(page_size=ps, num_pages=num,
+                                    pages_per_row=ppr)
 
 
 def placement_for(cfg, dram_budget_bytes: Optional[int] = None

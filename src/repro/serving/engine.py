@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import hybrid_storage as HS
+from repro.core import kv_pool as KP
 from repro.core import lora as LR
 from repro.models import transformer as T
 from repro.runtime import dispatch as RD
@@ -63,6 +64,9 @@ class EngineStats:
     prefill_s: float = 0.0
     decode_s: float = 0.0
     flash_bytes: int = 0
+    # paged-KV spill tier: pool pages moved to / back from Flash
+    spilled_pages: int = 0
+    restored_pages: int = 0
     # continuous batching: per-request TTFT/TPOT records
     requests: List[RequestStats] = dataclasses.field(default_factory=list)
 
@@ -228,19 +232,25 @@ class Engine:
 
 
 class EngineLoop:
-    """Step-driven continuous-batching serving loop.
+    """Step-driven continuous-batching serving loop on the paged KV pool.
 
-    Replaces the slot-synchronous two-phase generate with one decode batch
-    of ``max_slots`` rows over a shared per-row KV cache:
+    One decode batch of ``max_slots`` rows over a block-paged pool
+    (core/kv_pool.py) whose geometry the ExecutionPlan owns:
 
       * a request joins the moment a slot frees (prefill-on-join): its
-        prompt is prefilled alone, then scattered into the freed cache row
-        — no re-jit, decode shapes never change;
+        prompt is prefilled alone, then scattered into freshly allocated
+        pool pages — no re-jit, decode shapes never change (the page
+        table is an ordinary array input);
       * every step advances all occupied rows by one token at their own
-        per-row positions; finished rows are reclaimed immediately;
-      * admission is FIFO + cost tie-break under slot/token budgets, with
-        optional preemption of the longest-running request (resume
-        re-prefills prompt+generated, so greedy output is unchanged).
+        per-row positions; pages are allocated on append at page
+        boundaries and returned to the free list on EOS (copy-free);
+      * admission accounts the pages a request *actually* needs now, not
+        a max_seq reservation — the same DRAM budget carries strictly
+        more concurrent requests;
+      * preemption (queue patience, or page pressure when the pool runs
+        dry mid-decode) spills the victim's pages to Flash
+        (hybrid_storage.PageSpillStore) and restores them page-exact on
+        resume, so greedy decoding is bitwise-unaffected.
 
     Per-request TTFT/TPOT/latency land in ``engine.stats.requests``.
     """
@@ -248,34 +258,45 @@ class EngineLoop:
     def __init__(self, engine: Engine, max_slots: int = 4,
                  token_budget: Optional[int] = None,
                  preempt_patience: int = 0,
-                 prefill_buckets: bool = True):
+                 prefill_buckets: bool = True,
+                 dram_budget_bytes: Optional[int] = None):
         cfg = engine.cfg
         assert not cfg.is_encdec, "continuous batching: decoder-only models"
         self.eng = engine
         self.cfg = cfg
         self.max_slots = max_slots
+        self.geom = engine.plan.kv_pool_geometry(
+            cfg, engine.max_seq, max_slots,
+            dram_budget_bytes=dram_budget_bytes)
+        self.pool = KP.KVPoolManager(self.geom, max_slots)
+        self.spill = HS.PageSpillStore(engine.flash)
         self.scheduler = ContinuousScheduler(
             max_slots, engine.max_seq, token_budget=token_budget,
-            preempt_patience=preempt_patience)
+            preempt_patience=preempt_patience, pool=self.pool)
         # padding prompts to pow2 buckets caps prefill recompiles, but is
         # only sound for full-cache attention (padded tails would wrap ring
         # buffers / corrupt sequential SSM state)
         self._can_bucket = prefill_buckets and all(
             pat.kind == "attn" and pat.window == 0
             for pats, _ in cfg.layer_plan() for pat in pats)
-        self.cache = T.init_cache(cfg, max_slots, engine.max_seq,
-                                  per_row=True)
+        self.cache = T.init_paged_cache(cfg, max_slots, engine.max_seq,
+                                        self.geom)
         self.logits = jnp.zeros((max_slots, cfg.padded_vocab_size),
                                 jnp.float32)
-        # slot -> queue of already-generated tokens a resumed request still
-        # has to replay through decode before sampling continues
-        self._resume_hold: Dict[int, List[int]] = {}
+        # uid -> spill record of a preempted request (pages on Flash)
+        self._spilled: Dict[int, dict] = {}
+        # slots whose restored request still owes one decode of its last
+        # generated token before sampling may continue (mid-step eviction
+        # caught them between sampling and KV append)
+        self._hold: set = set()
+        self.peak_active = 0
         self._prefill = jax.jit(
             functools.partial(self._prefill_impl, cfg, engine._ctx),
             static_argnames=("max_seq",))
         self._decode = jax.jit(
             functools.partial(self._decode_impl, cfg, engine._ctx))
-        self._scatter = jax.jit(T.scatter_request)
+        self._scatter = jax.jit(
+            functools.partial(T.scatter_request_paged, cfg))
 
     @staticmethod
     def _prefill_impl(cfg, ctx, params, embeds, lora, valid_len, *, max_seq):
@@ -302,18 +323,121 @@ class EngineLoop:
     def _row_lora(self, req: Request) -> Optional[dict]:
         return self.eng._lora_for([req])
 
-    def _prefill_into_slot(self, req: Request, slot: int) -> None:
+    # --- row snapshot / restore (the spill tier) ---------------------------
+    def _row_groups(self, slot: int, n_pages: int):
+        """Yield (group_name, leaf, snapshot_arrays) for every per-row
+        piece of decode state: pooled pages for full-attention layers, the
+        fixed ring for windowed layers, the row slice for SSM states."""
+        phys = np.asarray(self.pool.row_pages[slot][:n_pages], np.int64)
+        for si, (patterns, _count) in enumerate(self.cfg.layer_plan()):
+            for pi, _pat in enumerate(patterns):
+                leaf = self.cache["stacks"][si][pi]
+                group = f"s{si}p{pi}"
+                if isinstance(leaf, KP.PagedLayerKV):
+                    if leaf.window:
+                        sl = slice(slot * leaf.ppw, (slot + 1) * leaf.ppw)
+                        arrays = {f: np.asarray(getattr(leaf, f)[:, sl])
+                                  for f in ("k_q", "k_scale", "k_zero", "v")}
+                    else:
+                        arrays = {f: np.asarray(getattr(leaf, f)[:, phys])
+                                  for f in ("k_q", "k_scale", "k_zero", "v")}
+                else:
+                    leaves = jax.tree.leaves(leaf)
+                    arrays = {f"x{i}": np.asarray(x[:, slot:slot + 1])
+                              for i, x in enumerate(leaves)}
+                yield group, leaf, arrays
+
+    def _spill_row(self, slot: int, req: Request, pending: bool) -> None:
+        """Move a preempted row's pages to Flash and free its DRAM pages.
+        ``pending``: the row was evicted mid-step, after sampling but
+        before its token's KV append — the token replays through decode on
+        resume instead of carrying saved logits."""
+        n_kv = int(self.pool.row_pos[slot])
+        n_pages = self.pool.pages_for(n_kv)
+        groups = []
+        for gi, (group, _leaf, arrays) in enumerate(
+                self._row_groups(slot, n_pages)):
+            self.spill.put(req.uid, group, arrays,
+                           pages=n_pages if gi == 0 else 0)
+            groups.append(group)
+        self._spilled[req.uid] = {
+            "n_kv": n_kv, "pending": pending, "groups": groups,
+            "logits": None if pending else np.asarray(self.logits[slot])}
+        self.pool.free_row(slot)
+        # count the pages written to Flash (free_row may also return a
+        # boundary page ensure() pre-allocated this step but never filled)
+        self.eng.stats.spilled_pages += n_pages
+        self.cache = T.free_slots(self.cache,
+                                  jnp.asarray([slot], jnp.int32))
+        self._hold.discard(slot)
+
+    def _restore_into_slot(self, req: Request, slot: int, rec: dict) -> None:
+        """Bring a spilled row back page-exact: allocate fresh pages, read
+        each layer group from Flash (group-ahead prefetch overlapping the
+        device writes), and resume sampling from the saved logits — or
+        hold the slot one step to replay a pending token through decode."""
+        n_kv = rec["n_kv"]
+        ok = self.pool.alloc_row(slot, n_kv)
+        assert ok, "admission checked the pages were free"
+        phys = np.asarray(self.pool.row_pages[slot], np.int64)
+        groups = rec["groups"]
+        self.spill.prefetch_async(req.uid, groups[0])
+        gi = 0
+        new_stacks = [list(row) for row in self.cache["stacks"]]
+        for si, (patterns, _count) in enumerate(self.cfg.layer_plan()):
+            for pi, _pat in enumerate(patterns):
+                if gi + 1 < len(groups):
+                    self.spill.prefetch_async(req.uid, groups[gi + 1])
+                arrays = self.spill.fetch(req.uid, groups[gi])
+                leaf = self.cache["stacks"][si][pi]
+                if isinstance(leaf, KP.PagedLayerKV):
+                    fields = {}
+                    for f in ("k_q", "k_scale", "k_zero", "v"):
+                        big = getattr(leaf, f)
+                        val = jnp.asarray(arrays[f]).astype(big.dtype)
+                        if leaf.window:
+                            sl = slot * leaf.ppw
+                            big = jax.lax.dynamic_update_slice_in_dim(
+                                big, val, sl, axis=1)
+                        else:
+                            big = big.at[:, phys].set(val)
+                        fields[f] = big
+                    leaf = KP.PagedLayerKV(**fields, window=leaf.window,
+                                           key_bits=leaf.key_bits,
+                                           ppw=leaf.ppw)
+                else:
+                    flat, treedef = jax.tree.flatten(leaf)
+                    flat = [jax.lax.dynamic_update_slice_in_dim(
+                                x, jnp.asarray(arrays[f"x{i}"]).astype(x.dtype),
+                                slot, axis=1)
+                            for i, x in enumerate(flat)]
+                    leaf = jax.tree.unflatten(treedef, flat)
+                new_stacks[si][pi] = leaf
+                gi += 1
+        self.cache = dict(self.cache,
+                          stacks=tuple(tuple(r) for r in new_stacks))
+        self.cache["pos"] = self.cache["pos"].at[slot].set(n_kv)
+        self.pool.row_pos[slot] = n_kv
+        self.spill.drop(req.uid)
+        self.eng.stats.restored_pages += self.pool.pages_held(slot)
+        if rec["pending"]:
+            self._hold.add(slot)
+        else:
+            self.logits = self.logits.at[slot].set(
+                jnp.asarray(rec["logits"]))
+
+    # --- admission ---------------------------------------------------------
+    def _admit_into_slot(self, req: Request, slot: int) -> None:
+        rec = self._spilled.pop(req.uid, None)
+        if rec is not None:
+            self._restore_into_slot(req, slot, rec)
+            return
+        assert not req.generated, \
+            "a preempted request must resume from its spill record"
         toks = list(req.prompt_tokens)
-        if req.generated:
-            # preemption resume: prefill the prompt only, then replay every
-            # generated token through the ordinary batched decode (see
-            # run()).  Replaying through decode — not prefill — rebuilds the
-            # cache by the exact code path the uninterrupted run used
-            # (quantized-cache attention), so greedy decoding resumes
-            # identically; prefill's flash attention over raw bf16 K/V
-            # would leave slightly different history entries behind.
-            self._resume_hold[slot] = list(req.generated)
         t = len(toks)
+        ok = self.pool.alloc_row(slot, t)
+        assert ok, "admission checked the pages were free"
         bucket = self._bucket(t)
         ids = np.zeros((1, bucket), np.int64)
         ids[0, :t] = np.asarray(toks)
@@ -323,11 +447,33 @@ class EngineLoop:
             self.eng.params, embeds, self._row_lora(req),
             jnp.asarray(t, jnp.int32), max_seq=self.eng.max_seq)
         self.cache = self._scatter(self.cache, single,
-                                   jnp.asarray(slot, jnp.int32))
+                                   jnp.asarray(slot, jnp.int32),
+                                   jnp.asarray(self.pool.table[slot]))
         self.logits = self.logits.at[slot].set(logits1[0])
         jax.block_until_ready(self.logits)
+        self.pool.row_pos[slot] = t
         self.eng.stats.prefill_tokens += t
         self.eng.stats.prefill_s += time.perf_counter() - t0
+
+    def _pick_page_victim(self, exclude: set) -> Optional[Request]:
+        """Page pressure: evict the row holding the most pool pages (frees
+        the most DRAM per spill), excluding the row asking for the page.
+        Rows restored this very step (``_hold``) only lose their pages as
+        a last resort — re-spilling one before its pending decode would
+        round-trip Flash for zero tokens of progress."""
+        cands = [r for r in self.scheduler.running
+                 if r is not None and r.slot not in exclude]
+        fresh = [r for r in cands if r.slot not in self._hold]
+        cands = fresh or cands
+        if not cands:
+            return None
+        return max(cands, key=lambda r: (self.pool.pages_held(r.slot),
+                                         len(r.generated)))
+
+    def close(self) -> None:
+        """Stop the spill tier's prefetch worker (loops are cheap to build;
+        long-lived processes that rebuild them should close the old one)."""
+        self.spill.close()
 
     # --- the serving loop --------------------------------------------------
     def run(self, requests: Sequence[Request],
@@ -347,11 +493,14 @@ class EngineLoop:
                 f"request {req.uid} cannot fit in max_seq={eng.max_seq}"
             assert need <= sched.token_budget, \
                 f"request {req.uid} exceeds the scheduler token budget"
+            assert self.pool.pages_for(need) <= self.geom.num_pages, \
+                f"request {req.uid} cannot fit in the KV pool"
         pending = sorted(zip(arrivals, requests), key=lambda p: (p[0], p[1].uid))
         pending = list(pending)
 
         t0 = time.perf_counter()
         pf0 = eng.stats.prefill_s
+        self.peak_active = 0
         step = 0
         while pending or sched.has_work():
             sched.step = step
@@ -360,19 +509,20 @@ class EngineLoop:
                 _, req = pending.pop(0)
                 req.arrival_t = now
                 sched.submit(req, arrival_step=step)
-            # replaying rows make no sampling progress, so evicting one
-            # could livelock (replay restarts from scratch every stint)
+            # hold rows owe a pending decode before their logits are valid;
+            # preempting one mid-replay would re-spill an unchanged row
             preempted = sched.maybe_preempt(
-                exclude_slots=set(self._resume_hold),
+                exclude_slots=set(self._hold),
                 sampling_cap=sampling.max_new_tokens)
             if preempted is not None:
-                freed_slot, _ = preempted
-                self.cache = T.free_slots(
-                    self.cache, jnp.asarray([freed_slot], jnp.int32))
+                freed_slot, victim = preempted
+                self._spill_row(freed_slot, victim, pending=False)
             for slot, req in sched.admit():
-                self._prefill_into_slot(req, slot)
+                self._admit_into_slot(req, slot)
             running = list(sched.running)
-            if not any(r is not None for r in running):
+            n_active = sum(r is not None for r in running)
+            self.peak_active = max(self.peak_active, n_active)
+            if n_active == 0:
                 step += 1
                 continue
 
@@ -383,7 +533,7 @@ class EngineLoop:
             tok_np = np.asarray(tok)
             now = time.perf_counter()
             for slot, req in enumerate(running):
-                if req is None or slot in self._resume_hold:
+                if req is None or slot in self._hold:
                     continue
                 t_id = int(tok_np[slot])
                 req.generated.append(t_id)
@@ -394,6 +544,9 @@ class EngineLoop:
                         or len(req.generated) >= cap):
                     req.finish_t = now
                     sched.finish(req)
+                    # copy-free reclaim: the row's pages go straight back
+                    # to the free list (no bytes move)
+                    self.pool.free_row(slot)
                     self.cache = T.free_slots(
                         self.cache, jnp.asarray([slot], jnp.int32))
                     eng.stats.requests.append(RequestStats(
@@ -405,27 +558,38 @@ class EngineLoop:
             if not any(r is not None for r in sched.running):
                 step += 1
                 continue
+            # allocate-on-append: every surviving row appends one token at
+            # its position this decode — rows crossing a page boundary take
+            # a page from the free list, and when the pool runs dry the
+            # biggest page-holder is spilled to Flash to make room
+            for slot, req in enumerate(sched.running):
+                if req is None:
+                    continue
+                while not self.pool.ensure(slot, int(self.pool.row_pos[slot])):
+                    victim = self._pick_page_victim(exclude={slot})
+                    assert victim is not None, \
+                        "pool cannot hold a single request (geometry bug)"
+                    vslot = victim.slot
+                    sched.evict(victim)
+                    self._spill_row(vslot, victim, pending=True)
+
             # batched decode: every occupied row advances at its own pos
+            # (hold rows feed their pending token — same shape, no re-jit)
             ids = np.zeros((self.max_slots, 1), np.int64)
             active = np.zeros((self.max_slots,), bool)
             for slot, req in enumerate(sched.running):
                 if req is None:
                     continue
-                replay = self._resume_hold.get(slot)
-                if replay:
-                    ids[slot, 0] = replay.pop(0)
-                    if not replay:
-                        del self._resume_hold[slot]
-                        # restart the stint clock: preemption patience
-                        # should buy fresh tokens, not replay catch-up
-                        req.admit_step = step
-                else:
-                    ids[slot, 0] = req.generated[-1]
+                ids[slot, 0] = req.generated[-1]
                 active[slot] = True
+            self._hold.clear()
             embeds = eng.embed(ids)
+            self.cache["table"] = self.pool.device_table()
             self.logits, self.cache = self._decode(
                 eng.params, embeds, self.cache, self._slot_lora(),
                 jnp.asarray(active))
+            for slot in np.nonzero(active)[0]:
+                self.pool.row_pos[slot] += 1
             eng.stats.decode_tokens += int(active.sum())
             step += 1
         jax.block_until_ready(self.logits)

@@ -126,18 +126,27 @@ class ContinuousScheduler:
       requests) never exceeds ``token_budget``.
     * Optional preemption: when a request has been waiting longer than
       ``preempt_patience`` steps with no slot free, the longest-running
-      active request is evicted and requeued.  Resume re-prefills
-      prompt+generated into a freed slot, so greedy decoding is unaffected.
+      active request is evicted and requeued.  The engine spills the
+      victim's KV pages to Flash and restores them page-exact on resume,
+      so greedy decoding is unaffected.
+    * Paged admission: with a ``pool`` (kv_pool.KVPoolManager), a request
+      is admitted when the pages its *current* context actually needs are
+      free — not when a worst-case max_seq reservation fits.  Growth
+      beyond the free pool mid-decode is handled by page-pressure
+      preemption in the engine (``evict``), which is what lets the same
+      DRAM budget carry strictly more concurrent requests.
     """
 
     def __init__(self, max_slots: int, max_seq: int,
                  token_budget: Optional[int] = None,
-                 preempt_patience: int = 0):
+                 preempt_patience: int = 0,
+                 pool=None):
         assert max_slots >= 1
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.token_budget = token_budget or max_slots * max_seq
         self.preempt_patience = preempt_patience
+        self.pool = pool           # kv_pool.KVPoolManager (or None: dense)
         self.waiting: List[Request] = []
         self.running: List[Optional[Request]] = [None] * max_slots
         self.step = 0
@@ -154,9 +163,21 @@ class ContinuousScheduler:
         return sum(len(r.context_tokens) + r.max_new_tokens -
                    len(r.generated) for r in self.active)
 
-    def _fits(self, req: Request) -> bool:
+    def need_pages(self, req: Request) -> int:
+        """Pages the request needs *on admission*: its context plus the
+        first decode append — not the worst-case decode budget."""
+        return self.pool.pages_for(len(req.context_tokens) + 1)
+
+    def _fits(self, req: Request, pending_pages: int = 0) -> bool:
+        # legacy worst-case reservation (the explicit token_budget keeps
+        # working — and is the baseline the paged accounting is measured
+        # against in bench_continuous_batching)
         need = len(req.context_tokens) + req.max_new_tokens - len(req.generated)
-        return self._committed_tokens() + need <= self.token_budget
+        if self._committed_tokens() + need > self.token_budget:
+            return False
+        if self.pool is not None:
+            return self.need_pages(req) <= self.pool.free_pages - pending_pages
+        return True
 
     # --- transitions -------------------------------------------------------
     def submit(self, req: Request, arrival_step: Optional[int] = None) -> None:
@@ -169,6 +190,7 @@ class ContinuousScheduler:
         each into its slot."""
         self.waiting.sort(key=lambda r: (r.arrival_step, r.cost, r.uid))
         admitted: List[Tuple[int, Request]] = []
+        pending_pages = 0
         for slot in range(self.max_slots):
             if self.running[slot] is not None or not self.waiting:
                 continue
@@ -180,11 +202,11 @@ class ContinuousScheduler:
                         - len(req.generated))
                 if need > self.max_seq:
                     continue        # can never run; don't block the queue
-                if self._fits(req):
+                if self._fits(req, pending_pages):
                     cand = req
-                # strict FIFO under the token budget: a head that doesn't
-                # fit *yet* blocks later arrivals (letting small requests
-                # slip past would starve a large head indefinitely)
+                # strict FIFO under the budget: a head that doesn't fit
+                # *yet* blocks later arrivals (letting small requests slip
+                # past would starve a large head indefinitely)
                 break
             if cand is None:
                 break
@@ -193,7 +215,24 @@ class ContinuousScheduler:
             cand.admit_step = self.step
             self.running[slot] = cand
             admitted.append((slot, cand))
+            if self.pool is not None:
+                # pages this admission will take before the engine actually
+                # allocates them (multiple admissions per step)
+                pending_pages += self.need_pages(cand)
         return admitted
+
+    def evict(self, victim: Request) -> int:
+        """Evict one running request and requeue it at the back of the
+        FIFO (its early arrival step would otherwise win the very next
+        admission and ping-pong).  Shared by patience preemption and the
+        engine's page-pressure path.  Returns the freed slot."""
+        freed = victim.slot
+        self.running[freed] = None
+        victim.slot = -1
+        victim.preemptions += 1
+        victim.arrival_step = self.step
+        self.waiting.append(victim)
+        return freed
 
     def maybe_preempt(self, exclude_slots: Optional[set] = None,
                       sampling_cap: Optional[int] = None
@@ -230,15 +269,7 @@ class ContinuousScheduler:
         if not victims:
             return None
         victim = max(victims, key=lambda r: len(r.generated))
-        freed = victim.slot
-        self.running[freed] = None
-        victim.slot = -1
-        victim.preemptions += 1
-        # re-enters at the BACK of the FIFO (otherwise the victim's early
-        # arrival step would win the very next admission and ping-pong)
-        victim.arrival_step = self.step
-        self.waiting.append(victim)
-        return freed, victim
+        return self.evict(victim), victim
 
     def finish(self, req: Request) -> None:
         req.done = True

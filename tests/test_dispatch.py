@@ -130,6 +130,34 @@ def test_prefill_attention_parity():
                                rtol=2e-2, atol=2e-2)
 
 
+def test_forced_ineligible_fallback_surfaces_in_bench_rows():
+    """Satellite: a forced-ineligible shape (windowed dense cache on the
+    kernel backend) is recorded on the dispatcher AND surfaced by the
+    benchmark harness into the --json artifact via record_fallbacks — a
+    silent reference fallback can no longer hide in BENCH numbers."""
+    from benchmarks import common
+    B, S, Hkv, D = 1, 32, 2, 64
+    cache = kvc.init_layer_cache(B, S, Hkv, D, window=32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, 16, Hkv, D))
+    cache = kvc.append(cache, k, k, jnp.zeros((), jnp.int32))
+    qh = jax.random.normal(KEY, (B, 1, Hkv, D)) / D ** 0.5
+    disp = RD.Dispatcher(backend="interpret")
+    disp.decode_attention(qh, cache, jnp.asarray(16, jnp.int32),
+                          DEFAULT_POLICY)
+    assert disp.fallbacks
+    n0 = len(common.FALLBACKS)
+    common.record_fallbacks("unit", disp)
+    recorded = common.FALLBACKS[n0:]
+    try:
+        assert any(r["op"] == "decode_attention" and r["bench"] == "unit"
+                   and r["backend"] == "interpret" for r in recorded)
+        # run.py dumps exactly this list into the JSON artifact
+        assert all({"bench", "op", "backend", "reason"} <= set(r)
+                   for r in recorded)
+    finally:
+        del common.FALLBACKS[n0:]
+
+
 def test_env_override(monkeypatch):
     monkeypatch.setenv("REPRO_BACKEND", "interpret")
     assert RD.Dispatcher().backend == "interpret"
