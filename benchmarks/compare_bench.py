@@ -1,15 +1,22 @@
 """CI bench gate: compare the current BENCH summary to the previous run's
-artifact and fail on a tokens/s regression beyond the threshold.
+artifact and fail on metric regressions beyond per-metric thresholds.
 
 The CI bench-smoke job downloads the last successful main run's
 ``bench-results`` artifact (which contains the prior ``BENCH_pr*.json``)
 and runs::
 
     python benchmarks/compare_bench.py --previous prev_bench \
-        --current BENCH_pr3.json --max-regression 0.10
+        --current BENCH_pr4.json
 
-Missing previous artifacts (first run, expired retention) pass with a
-notice — the gate only ever fails on a *measured* regression.
+The default gates are ``tokens_per_s:higher:0.10`` (a >10% throughput drop
+fails) and ``ttft_p95_s:lower:0.15`` (a >15% p95 time-to-first-token
+increase fails — the unified chunked-prefill step exists to protect
+exactly this tail).  Override or extend with repeated
+``--gate key:direction:threshold`` flags.
+
+Missing previous artifacts (first run, expired retention) and metrics
+absent on either side pass with a notice — the gate only ever fails on a
+*measured* regression.
 """
 from __future__ import annotations
 
@@ -19,6 +26,8 @@ import json
 import os
 import re
 import sys
+
+DEFAULT_GATES = ("tokens_per_s:higher:0.10", "ttft_p95_s:lower:0.15")
 
 
 def load_summary(path: str) -> dict:
@@ -43,17 +52,63 @@ def find_bench_json(path: str) -> str | None:
     return None
 
 
+def parse_gate(spec: str) -> tuple[str, str, float]:
+    parts = spec.split(":")
+    if len(parts) != 3 or parts[1] not in ("higher", "lower"):
+        raise SystemExit(f"[compare] bad --gate {spec!r}; expected "
+                         f"key:higher|lower:threshold")
+    return parts[0], parts[1], float(parts[2])
+
+
+def check_gate(prev: dict, cur: dict, key: str, direction: str,
+               threshold: float) -> bool:
+    """Returns True if the gate passes.  ``higher``: higher is better,
+    fail on a fractional drop beyond threshold; ``lower``: lower is
+    better, fail on a fractional increase beyond threshold."""
+    if key not in prev or key not in cur:
+        print(f"[compare] {key!r} missing "
+              f"(prev={sorted(prev)}, cur={sorted(cur)}) — gate passes")
+        return True
+    p, c = float(prev[key]), float(cur[key])
+    if p <= 0:
+        print(f"[compare] previous {key}={p} unusable — gate passes")
+        return True
+    regression = (p - c) / p if direction == "higher" else (c - p) / p
+    print(f"[compare] {key} ({direction} is better): previous={p:.6f} "
+          f"current={c:.6f} regression={regression:+.1%} "
+          f"(limit {threshold:.0%})")
+    if regression > threshold:
+        print(f"[compare] FAIL: {key} regressed {regression:.1%}, beyond "
+              f"the {threshold:.0%} gate", file=sys.stderr)
+        return False
+    return True
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--previous", required=True,
                     help="previous BENCH_pr*.json (file or artifact dir)")
     ap.add_argument("--current", required=True,
                     help="current BENCH_pr*.json")
-    ap.add_argument("--max-regression", type=float, default=0.10,
-                    help="maximum allowed fractional drop (0.10 = 10%%)")
+    ap.add_argument("--gate", action="append", default=None,
+                    metavar="KEY:DIRECTION:THRESHOLD",
+                    help="metric gate, e.g. tokens_per_s:higher:0.10 or "
+                         "ttft_p95_s:lower:0.15 (repeatable; defaults to "
+                         "both of those)")
+    # legacy single-metric flags (kept so old invocations still work)
+    ap.add_argument("--max-regression", type=float, default=None,
+                    help="legacy: threshold for --key (higher-is-better)")
     ap.add_argument("--key", default="tokens_per_s",
-                    help="summary metric to gate on (higher is better)")
+                    help="legacy: summary metric for --max-regression")
     args = ap.parse_args()
+
+    if args.max_regression is not None:
+        # legacy single-metric mode: enforce exactly what was asked for
+        # (explicit --gate flags may still extend it)
+        gates = ([f"{args.key}:higher:{args.max_regression}"]
+                 + list(args.gate or []))
+    else:
+        gates = list(args.gate) if args.gate else list(DEFAULT_GATES)
 
     cur_path = find_bench_json(args.current)
     if cur_path is None:
@@ -68,22 +123,11 @@ def main() -> None:
 
     prev = load_summary(prev_path)
     cur = load_summary(cur_path)
-    if args.key not in prev or args.key not in cur:
-        print(f"[compare] {args.key!r} missing "
-              f"(prev={sorted(prev)}, cur={sorted(cur)}) — gate passes")
-        return
-    p, c = float(prev[args.key]), float(cur[args.key])
-    if p <= 0:
-        print(f"[compare] previous {args.key}={p} unusable — gate passes")
-        return
-    drop = (p - c) / p
-    print(f"[compare] {args.key}: previous={p:.3f} ({prev_path}) "
-          f"current={c:.3f} ({cur_path}) change={-drop:+.1%}")
-    if drop > args.max_regression:
-        print(f"[compare] FAIL: {drop:.1%} regression exceeds the "
-              f"{args.max_regression:.0%} gate", file=sys.stderr)
+    print(f"[compare] previous={prev_path} current={cur_path}")
+    ok = all([check_gate(prev, cur, *parse_gate(g)) for g in gates])
+    if not ok:
         raise SystemExit(1)
-    print("[compare] gate passes")
+    print("[compare] all gates pass")
 
 
 if __name__ == "__main__":

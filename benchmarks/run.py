@@ -74,9 +74,9 @@ def main() -> None:
               f"({len(common.FALLBACKS)} dispatch fallbacks) to {args.json}",
               file=sys.stderr)
         # repo-root trajectory artifact: headline numbers per PR
-        bench_path = os.path.join(_ROOT, "BENCH_pr3.json")
+        bench_path = os.path.join(_ROOT, "BENCH_pr4.json")
         with open(bench_path, "w") as f:
-            json.dump({"suite": "mnn-llm-repro", "pr": 3,
+            json.dump({"suite": "mnn-llm-repro", "pr": 4,
                        "smoke": args.smoke,
                        "summary": common.SUMMARY,
                        "fallbacks": common.FALLBACKS}, f, indent=2)

@@ -136,6 +136,17 @@ def cast_values(v_new: Array, dtype) -> Array:
     return v_new.astype(dtype)
 
 
+def roundtrip_kv(k: Array, v: Array, *, key_bits: int = 8, v_dtype,
+                 dtype=jnp.bfloat16) -> tuple[Array, Array]:
+    """Quantize-then-dequantize a K/V chunk — exactly the values the cache
+    stores and decode reads back.  Prefill attention uses this (instead of
+    the raw projections) so a chunked prefill that re-reads its stored
+    pages is bitwise identical to a monolithic prefill."""
+    kq, ks, kz = quantize_keys(k, bits=key_bits)
+    kd = dequantize_keys(kq, ks, kz, dtype, bits=key_bits)
+    return kd, cast_values(v, v_dtype).astype(dtype)
+
+
 def append(cache: LayerKVCache, k_new: Array, v_new: Array,
            pos: Array) -> LayerKVCache:
     """Append ``t`` new tokens' K/V at positions [pos, pos+t).

@@ -21,7 +21,19 @@ worst case up front.  This module stores KV in fixed-size *pages* instead:
   allocate-on-append at page boundaries, copy-free reclaim (freeing a row
   returns its page ids; no bytes move), and DRAM/Flash residency
   accounting for the spill tier (serving/engine.py spills preempted rows'
-  pages through ``hybrid_storage.PageSpillStore``).
+  pages through ``hybrid_storage.PageSpillStore``).  Pages carry a
+  *refcount*: full prompt-prefix pages are registered in a token-hash
+  chain index after prefill, and later requests with the same prompt
+  prefix adopt those pages copy-free (``alloc_row`` with ``token_ids``).
+  The index holds one pin per registered page, so prefix pages survive
+  EOS (``free_row`` is a refcount decrement) and are evicted lazily when
+  the free list runs short.
+
+Prompt KV is written straight into pages (``append_paged_prompt``) — there
+is no dense ``max_seq`` transient at join time — and chunk prefill
+attention reads the pages back through the table
+(``paged_prefill_attention_ref``), which is what makes chunked prefill
+bitwise identical to a monolithic prefill.
 
 Sliding-window layers need no table at all: their pages are a fixed
 per-row ring — position ``p`` lives in ring page ``(p // page) % ppw`` —
@@ -37,6 +49,7 @@ exactly that).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -214,59 +227,91 @@ def ring_view(pool: PagedLayerKV, pos: Array, batch: int
     return table, base
 
 
-def scatter_pages(pool: PagedLayerKV, dense: "kvc.LayerKVCache", slot: Array,
-                  table_row: Array, valid_len: Array) -> PagedLayerKV:
-    """Write a prefilled single-request *dense* cache (leading scan axis L,
-    batch 1) into the pool pages of decode row ``slot``.
+def append_paged_prompt(pool: PagedLayerKV, k_new: Array, v_new: Array,
+                        pos0: Array, table_row: Optional[Array] = None,
+                        slot: Optional[Array] = None) -> PagedLayerKV:
+    """Append a C-token prompt chunk for ONE row at positions
+    [pos0, pos0 + C) — prompt KV goes straight into pages, no dense
+    transient.  k_new/v_new: [1, C, H, D].
 
-    Full-attention: the dense [L, 1, max_seq, ...] arrays are already in
-    logical page order — reshape and scatter through ``table_row``
-    (trash-filled tail entries absorb the unallocated pages).
-    Windowed: translate the dense ring (slot = pos mod window) into the
-    page ring (page = (pos // page_size) mod ppw); positions outside
-    [valid_len - window, valid_len) zero out, matching a fresh pool.
+    Full-attention pools scatter through ``table_row`` [pages_per_row]
+    (positions past the table land in the trash page, so a padded final
+    chunk needs no masking — distinct in-table positions always hit
+    distinct targets, and colliding trash-page writes don't matter
+    because trash bytes are never read); windowed
+    pools write row ``slot``'s ring pages with explicit winner selection:
+    when the chunk wraps the ring, each ring page receives the *newest*
+    logical page that lands on it (duplicate-index scatter ordering is
+    undefined in XLA, so we never rely on it).  Quantization matches the
+    dense append bit for bit.
     """
+    b, C, h, d = k_new.shape
+    assert b == 1, "prompt chunks are per-row (B=1)"
     ps = pool.page_size
-    if not pool.window:
-        n = table_row.shape[0]
+    kq, ks, kz = kvc.quantize_keys(k_new, bits=pool.key_bits)
+    v_cast = kvc.cast_values(v_new, pool.v.dtype)
+    pos0 = jnp.asarray(pos0, jnp.int32)
+    positions = pos0 + jnp.arange(C, dtype=jnp.int32)
+    if pool.window:
+        ppw = pool.ppw
+        cur = jnp.maximum(pos0 + C - 1, 0) // ps
+        fields = {"k_q": (pool.k_q, kq[0]), "k_scale": (pool.k_scale, ks[0]),
+                  "k_zero": (pool.k_zero, kz[0]), "v": (pool.v, v_cast[0])}
+        out = {}
+        for name, (big, chunk) in fields.items():
+            for r in range(ppw):
+                # newest logical page <= cur on ring slot r; chunk tokens
+                # outside that page keep the slot's existing bytes (they
+                # are masked by the ring view's logical-page bounds)
+                g = cur - jnp.mod(cur - r, ppw)
+                qpos = g * ps + jnp.arange(ps)
+                valid = (qpos >= pos0) & (qpos < pos0 + C)
+                idx = jnp.clip(qpos - pos0, 0, C - 1)
+                page = jnp.asarray(slot, jnp.int32) * ppw + r
+                vals = chunk[idx]
+                m = valid.reshape(-1, *([1] * (vals.ndim - 1)))
+                merged = jnp.where(m, vals, big[page])
+                big = big.at[page].set(merged)
+            out[name] = big
+        return PagedLayerKV(**out, window=pool.window,
+                            key_bits=pool.key_bits, ppw=pool.ppw)
+    logical = positions // ps
+    n_p = table_row.shape[0]
+    trash = pool.num_pages - 1               # pool holds num_pages+1 arrays
+    page = jnp.where(logical < n_p,
+                     table_row[jnp.clip(logical, 0, n_p - 1)], trash)
+    off = jnp.mod(positions, ps)
+    return PagedLayerKV(
+        k_q=pool.k_q.at[page, off].set(kq[0]),
+        k_scale=pool.k_scale.at[page, off].set(ks[0]),
+        k_zero=pool.k_zero.at[page, off].set(kz[0]),
+        v=pool.v.at[page, off].set(v_cast[0]),
+        window=pool.window, key_bits=pool.key_bits, ppw=pool.ppw)
 
-        def put(big, small):
-            L = small.shape[0]
-            pages = small[:, 0].reshape(L, n, ps, *small.shape[3:])
-            return big.at[:, table_row].set(pages)
 
-        return PagedLayerKV(
-            k_q=put(pool.k_q, dense.k_q),
-            k_scale=put(pool.k_scale, dense.k_scale),
-            k_zero=put(pool.k_zero, dense.k_zero),
-            v=put(pool.v, dense.v),
-            window=pool.window, key_bits=pool.key_bits, ppw=pool.ppw)
+def paged_prefill_attention_ref(qh: Array, pool: PagedLayerKV, table: Array,
+                                pos0: Array,
+                                policy: PrecisionPolicy = DEFAULT_POLICY
+                                ) -> Array:
+    """Chunk prefill attention through the page table (pure-JAX reference;
+    kernels/flash_prefill.paged_flash_prefill_attention is the fused TPU
+    path).  qh: [1, C, H, D] pre-scaled queries at absolute positions
+    [pos0, pos0 + C); table: [1, pages_per_row].
 
-    ppw = pool.ppw
-    W = dense.k_q.shape[2]            # dense ring size == window
-    t = jnp.asarray(valid_len, jnp.int32)
-    cur = jnp.maximum(t - 1, 0) // ps
-    k_q, k_scale, k_zero, v = pool.k_q, pool.k_scale, pool.k_zero, pool.v
-    for r in range(ppw):
-        # the newest logical page <= cur that lands on ring slot r
-        g = cur - jnp.mod(cur - r, ppw)
-        qpos = g * ps + jnp.arange(ps)                     # [page] positions
-        valid = (qpos >= 0) & (qpos < t) & (qpos >= t - W)
-        idx = jnp.mod(qpos, W)
-        page = slot * ppw + r
-
-        def pick(small, fill, _valid=valid, _idx=idx):
-            vals = small[:, 0, _idx]                       # [L, page, ...]
-            m = _valid.reshape(1, -1, *([1] * (vals.ndim - 2)))
-            return jnp.where(m, vals, jnp.asarray(fill, vals.dtype))
-
-        k_q = k_q.at[:, page].set(pick(dense.k_q, 0))
-        k_scale = k_scale.at[:, page].set(pick(dense.k_scale, 1.0))
-        k_zero = k_zero.at[:, page].set(pick(dense.k_zero, 0.0))
-        v = v.at[:, page].set(pick(dense.v, 0))
-    return PagedLayerKV(k_q=k_q, k_scale=k_scale, k_zero=k_zero, v=v,
-                        window=pool.window, key_bits=pool.key_bits,
-                        ppw=pool.ppw)
+    Gathers the row's pages into the dense logical layout and runs the
+    SAME blockwise ``flash_attention`` the dense prefill path uses, with
+    the chunk's query offset.  Because per-query online softmax is
+    independent of the query blocking and the gathered view always spans
+    the full table (causally-dead pages mask to exact zeros), a chunked
+    prefill is bitwise identical to a monolithic one.
+    """
+    from repro.models.attention import flash_attention   # lazy: they import us
+    kq, ks, kz, v = gather_pages(pool, table)
+    k = kvc.dequantize_keys(kq, ks, kz, policy.compute_dtype,
+                            bits=pool.key_bits)
+    return flash_attention(qh, k, v.astype(policy.compute_dtype),
+                           causal=True, q_offset=jnp.asarray(pos0, jnp.int32),
+                           policy=policy)
 
 
 def paged_decode_attention_ref(qh: Array, pool: PagedLayerKV, table: Array,
@@ -322,24 +367,59 @@ class KVPoolManager:
     bytes stay where they are until a new allocation overwrites them.
     ``spilled_pages`` counts pages currently resident on Flash (the
     engine moves preempted rows' pages there via PageSpillStore).
+
+    Prefix sharing: every page has a refcount.  After a prompt prefill
+    completes, its *full* pages are registered under a token-hash chain
+    (``register_prefix``) — the index holds one pin (+1) per page, so the
+    pages outlive the request.  A later ``alloc_row`` with ``token_ids``
+    walks the chain and adopts the longest indexed prefix copy-free
+    (+1 per adopted page); adoption is capped at the prompt's second-last
+    page so a request always computes at least its final token.  Rows
+    never write into a page they adopted (chunks start past the shared
+    prefix), so no copy-on-write is ever needed.  Index pins are evicted
+    lazily — newest chains first — when the free list runs short.
     """
 
-    def __init__(self, geom: PoolGeometry, num_slots: int):
+    def __init__(self, geom: PoolGeometry, num_slots: int,
+                 prefix_sharing: bool = True):
         self.geom = geom
         self.num_slots = num_slots
+        self.prefix_sharing = prefix_sharing
         # pop() hands out low page ids first — deterministic allocation
         self._free: List[int] = list(range(geom.num_pages - 1, -1, -1))
         self.table = np.full((num_slots, geom.pages_per_row),
                              geom.trash_page, np.int32)
         self.row_pages: List[List[int]] = [[] for _ in range(num_slots)]
         self.row_pos = np.zeros(num_slots, np.int64)
+        self.refcount = np.zeros(geom.num_pages, np.int64)
+        # prefix index: chain-digest <-> page, pages in registration order
+        self._page_of_chain: Dict[bytes, int] = {}
+        self._chain_of_page: Dict[int, bytes] = {}
+        self._index_order: List[int] = []
+        self.row_shared = np.zeros(num_slots, np.int64)   # adopted tokens
         self.spilled_pages = 0
         self.alloc_failures = 0
+        self.prefix_hits = 0          # pages adopted copy-free (pages saved)
+        self.prefix_misses = 0        # fresh prompt pages that found no match
+        self.prefix_evictions = 0     # index pins dropped under pressure
 
     # --- accounting --------------------------------------------------------
     @property
     def free_pages(self) -> int:
         return len(self._free)
+
+    @property
+    def reclaimable_pages(self) -> int:
+        """Indexed pages held only by their index pin — evictable on
+        demand to replenish the free list."""
+        return sum(1 for p in self._chain_of_page if self.refcount[p] == 1)
+
+    @property
+    def available_pages(self) -> int:
+        """Pages an allocation could obtain right now: free list plus
+        index-only pages (admission accounts against this, so cached
+        prefixes never block new work)."""
+        return len(self._free) + self.reclaimable_pages
 
     @property
     def pages_in_use(self) -> int:
@@ -356,18 +436,142 @@ class KVPoolManager:
                 "free_pages": self.free_pages,
                 "flash_pages": self.spilled_pages}
 
+    # --- prefix index ------------------------------------------------------
+    def _chain_keys(self, token_ids, salt: str) -> List[bytes]:
+        """One index key per full page of the prompt: a chained SHA-256
+        digest of (salt, every token through that page).  The digest
+        commits to the page's entire history at O(page) work and O(1)
+        memory per link, and a collision between different prefixes is
+        cryptographically infeasible — so equal keys imply equal tokens
+        and one prompt's KV pages are never served to another."""
+        ps = self.geom.page_size
+        h = hashlib.sha256(("kv-prefix:" + salt).encode()).digest()
+        out = []
+        for i in range(len(token_ids) // ps):
+            page = np.asarray(token_ids[i * ps:(i + 1) * ps], np.int64)
+            h = hashlib.sha256(h + page.tobytes()).digest()
+            out.append(h)
+        return out
+
+    def _shareable_pages(self, n_tokens: int) -> int:
+        """Adoption cap: full pages covering at most tokens [0, T-1) —
+        the final prompt token is always computed so its logits exist."""
+        return max(0, (int(n_tokens) - 1) // self.geom.page_size)
+
+    def _lookup_chain(self, token_ids, salt: str) -> List[int]:
+        if not self.prefix_sharing:
+            return []
+        pages = []
+        cap = self._shareable_pages(len(token_ids))
+        for key in self._chain_keys(token_ids, salt)[:cap]:
+            p = self._page_of_chain.get(key)
+            if p is None:
+                break
+            pages.append(p)
+        return pages
+
+    def probe_shared_pages(self, token_ids, salt: str = "") -> int:
+        """Pages a fresh prompt would adopt from the index right now."""
+        return len(self._lookup_chain(token_ids, salt))
+
+    def probe_admission_discount(self, token_ids, salt: str = "") -> int:
+        """Adoptable pages that cost the admission nothing: chain pages
+        some *other row still holds* (refcount >= 2).  Index-only pins
+        (refcount == 1) are NOT discounted — they are counted inside
+        ``available_pages`` and adopting one converts it from reclaimable
+        to pinned-in-use, so it must stay charged or two same-step
+        admissions could oversubscribe the pool."""
+        return sum(1 for p in self._lookup_chain(token_ids, salt)
+                   if self.refcount[p] >= 2)
+
+    def retract_prompt_stats(self, row: int, tokens: int) -> None:
+        """Undo a row's adoption-statistics contribution when its prefill
+        is restarted (freed and requeued under page pressure) — the
+        re-admission will count the same prompt again, and the BENCH
+        prefix numbers must not inflate per restart."""
+        if not self.prefix_sharing:
+            return
+        adopted = int(self.row_shared[row]) // self.geom.page_size
+        self.prefix_hits -= adopted
+        self.prefix_misses -= max(0, self._shareable_pages(tokens) - adopted)
+
+    def register_prefix(self, row: int, token_ids, salt: str = "") -> int:
+        """Index the row's full prompt pages (call once its prefill has
+        written them).  Already-indexed chain links — including pages this
+        row itself adopted — are skipped.  Returns pages newly pinned."""
+        if not self.prefix_sharing:
+            return 0
+        pages = self.row_pages[row]
+        pinned = 0
+        for i, key in enumerate(self._chain_keys(token_ids, salt)):
+            if key in self._page_of_chain or i >= len(pages):
+                continue
+            p = pages[i]
+            if p in self._chain_of_page:
+                continue
+            self._page_of_chain[key] = p
+            self._chain_of_page[p] = key
+            self.refcount[p] += 1
+            self._index_order.append(p)
+            pinned += 1
+        return pinned
+
+    def _unpin(self, page: int) -> None:
+        key = self._chain_of_page.pop(page)
+        del self._page_of_chain[key]
+        self.refcount[page] -= 1
+        if self.refcount[page] == 0:
+            self._free.append(page)
+        self.prefix_evictions += 1
+
+    def _reserve(self, need: int) -> bool:
+        """Make ``need`` pages available on the free list, evicting index
+        pins (newest chains first — short prefixes survive longest)."""
+        while len(self._free) < need:
+            victim = next((p for p in reversed(self._index_order)
+                           if p in self._chain_of_page
+                           and self.refcount[p] == 1), None)
+            if victim is None:
+                return False
+            self._index_order.remove(victim)
+            self._unpin(victim)
+        return True
+
     # --- transitions -------------------------------------------------------
-    def alloc_row(self, row: int, tokens: int) -> bool:
+    def alloc_row(self, row: int, tokens: int, token_ids=None,
+                  salt: str = "") -> bool:
         """Allocate the pages holding ``tokens`` for a fresh/restored row.
-        All-or-nothing; fills the row's table prefix."""
+        All-or-nothing; fills the row's table prefix.  With ``token_ids``
+        the longest indexed prompt prefix is adopted copy-free
+        (refcount +1, no bytes move); ``row_shared[row]`` records the
+        adopted token count so the engine starts prefill past it."""
         assert not self.row_pages[row], f"row {row} still holds pages"
         need = self.pages_for(tokens)
-        if need > len(self._free):
+        shared = self._lookup_chain(token_ids, salt) \
+            if token_ids is not None else []
+        # take the adoption references BEFORE reserving: _reserve may evict
+        # index pins, and an adopted page must never reach the free list
+        for p in shared:
+            self.refcount[p] += 1
+        if not self._reserve(need - len(shared)):
+            for p in shared:                  # roll back the adoption refs
+                self.refcount[p] -= 1
+                # an adopted page always keeps its index pin (_reserve only
+                # evicts refcount==1 victims, and ours were >= 2)
+                assert self.refcount[p] >= 1, f"page {p} lost its pin"
             self.alloc_failures += 1
             return False
-        pages = [self._free.pop() for _ in range(need)]
+        fresh = [self._free.pop() for _ in range(need - len(shared))]
+        for p in fresh:
+            assert self.refcount[p] == 0, f"page {p} on free list with refs"
+            self.refcount[p] = 1
+        pages = shared + fresh
         self.row_pages[row] = pages
         self.table[row, :need] = pages
+        self.row_shared[row] = len(shared) * self.geom.page_size
+        self.prefix_hits += len(shared)
+        if token_ids is not None:
+            self.prefix_misses += self._shareable_pages(tokens) - len(shared)
         return True
 
     def ensure(self, row: int, pos: int) -> bool:
@@ -379,24 +583,34 @@ class KVPoolManager:
         if idx < len(held):
             return True
         assert idx == len(held), (row, pos, len(held))
-        if not self._free:
+        if not self._reserve(1):
             self.alloc_failures += 1
             return False
         page = self._free.pop()
+        self.refcount[page] = 1
         held.append(page)
         self.table[row, idx] = page
         return True
 
     def free_row(self, row: int) -> int:
-        """Copy-free reclaim: return the row's pages to the free list and
-        point its table at the trash page.  Returns pages freed."""
+        """Refcount-decrement reclaim: each of the row's pages loses one
+        reference; pages reaching zero return to the free list (indexed
+        prefix pages hold a pin, so they survive EOS and stay adoptable).
+        Copy-free either way — no bytes move.  Returns pages actually
+        freed."""
         pages = self.row_pages[row]
+        freed = 0
         for p in reversed(pages):
-            self._free.append(p)
+            self.refcount[p] -= 1
+            assert self.refcount[p] >= 0, f"double free of page {p}"
+            if self.refcount[p] == 0:
+                self._free.append(p)
+                freed += 1
         self.row_pages[row] = []
         self.table[row, :] = self.geom.trash_page
         self.row_pos[row] = 0
-        return len(pages)
+        self.row_shared[row] = 0
+        return freed
 
     def device_table(self) -> Array:
         return jnp.asarray(self.table)

@@ -8,6 +8,15 @@ softmax state (m, l, acc) is fp32 scratch.
 Grid (B, Hkv, nQ, nK), K innermost; the causal mask lets fully-masked
 K blocks short-circuit (pl.when) — the TPU analogue of skipping upper
 triangle tiles.
+
+``paged_flash_prefill_attention`` is the unified-prefill variant: a
+prompt *chunk*'s queries (absolute positions pos0 + arange) attend over
+the row's quantized KV pool pages through a scalar-prefetched page table
+— the same BlockSpec gather scheme as quant_attention's paged decode
+kernel, with this module's online-softmax body and the decode kernel's
+fused int8-key dequant.  Causally-dead pages (page start beyond the
+chunk's last query) short-circuit, so a chunk early in a long prompt
+touches only the pages it can see.
 """
 from __future__ import annotations
 
@@ -18,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.quant_attention import dequant_keys_block
 
 NEG_INF = -1e30
 
@@ -121,3 +132,119 @@ def flash_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     )(qg, k, v)
     out = out.transpose(0, 2, 1, 3, 4).reshape(B, Tp, H, D)
     return out[:, :T]
+
+
+def _paged_prefill_kernel(table_ref, pos0_ref, q_ref, kq_ref, ks_ref, kz_ref,
+                          v_ref, o_ref, m_ref, l_ref, acc_ref,
+                          *, n_p: int, bq: int, ps: int):
+    b_idx = pl.program_id(0)
+    qi = pl.program_id(2)
+    pi = pl.program_id(3)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = pos0_ref[b_idx] + qi * bq       # absolute chunk positions
+    k_start = pi * ps                          # logical page positions
+    # causally dead iff the page starts beyond the chunk's last query
+    needed = k_start <= q_start + bq - 1
+
+    @pl.when(needed)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)                  # [bq, G, D]
+        kq = kq_ref[0, :, 0]                                 # [ps, D] int8
+        ks = ks_ref[0, :, 0]
+        kz = kz_ref[0, :, 0]
+        v = v_ref[0, :, 0].astype(jnp.float32)               # [ps, D]
+        k = dequant_keys_block(kq, ks, kz)
+        G = q.shape[1]
+        s = jax.lax.dot_general(
+            q.reshape(bq * G, -1), k,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)              # [bq*G, ps]
+        qpos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, G, ps), 0).reshape(bq * G, ps)
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (bq * G, ps), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]                                  # [bq*G, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)              # [bq*G, D]
+
+    @pl.when(pi == n_p - 1)
+    def _done():
+        G = q_ref.shape[3]
+        D = acc_ref.shape[-1]
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.reshape(bq, G, D).astype(o_ref.dtype)
+
+
+def paged_flash_prefill_attention(q: jax.Array, k_q: jax.Array,
+                                  k_scale: jax.Array, k_zero: jax.Array,
+                                  v: jax.Array, table: jax.Array,
+                                  pos0: jax.Array, *, bq: int = 128,
+                                  interpret: bool = True) -> jax.Array:
+    """Prompt-chunk attention over the paged quantized KV pool.
+
+    q: [B, C, H, D] PRE-SCALED queries at absolute positions
+    pos0[b] + arange(C) — the chunk's K/V must already be appended to the
+    pool.  Pool arrays: k_q int8 [P, page, Hkv, D], k_scale/k_zero f32
+    [P, page, Hkv], v fp8/bf16 [P, page, Hkv, D]; table: int32
+    [B, pages_per_row] (unallocated entries point at the trash page —
+    they are causally masked).  The table rides in scalar-prefetch SMEM
+    so each grid step's K/V DMA is page-gathered, exactly like the paged
+    decode kernel.  Returns [B, C, H, D] f32.
+    """
+    B, C, H, D = q.shape
+    ps, Hkv = k_q.shape[1], k_q.shape[2]
+    G = H // Hkv
+    n_p = table.shape[1]
+    bq = min(bq, C)
+    padq = (-C) % bq
+    if padq:            # padded queries attend real keys; outputs sliced off
+        q = jnp.pad(q, ((0, 0), (0, padq), (0, 0), (0, 0)))
+    Cp = q.shape[1]
+    nq = Cp // bq
+    qg = q.reshape(B, Cp, Hkv, G, D).transpose(0, 2, 1, 3, 4)
+    table = jnp.asarray(table, jnp.int32)
+    pos0 = jnp.broadcast_to(jnp.asarray(pos0, jnp.int32).reshape(-1), (B,))
+
+    kernel = functools.partial(_paged_prefill_kernel, n_p=n_p, bq=bq, ps=ps)
+    page_idx = lambda b, h, i, j, tbl, p0: (tbl[b, j], 0, h, 0)
+    scale_idx = lambda b, h, i, j, tbl, p0: (tbl[b, j], 0, h)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, nq, n_p),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, G, D),
+                         lambda b, h, i, j, tbl, p0: (b, h, i, 0, 0)),
+            pl.BlockSpec((1, ps, 1, D), page_idx),
+            pl.BlockSpec((1, ps, 1), scale_idx),
+            pl.BlockSpec((1, ps, 1), scale_idx),
+            pl.BlockSpec((1, ps, 1, D), page_idx),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, G, D),
+                               lambda b, h, i, j, tbl, p0: (b, h, i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq * G, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq * G, 1), jnp.float32),   # running denom
+            pltpu.VMEM((bq * G, D), jnp.float32),   # running numerator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, nq * bq, G, D), jnp.float32),
+        interpret=interpret,
+    )(table, pos0, qg, k_q, k_scale, k_zero, v)
+    out = out.transpose(0, 2, 1, 3, 4).reshape(B, Cp, H, D)
+    return out[:, :C]

@@ -34,6 +34,14 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def dequant_keys_block(kq, ks, kz):
+    """Fused in-kernel key dequantization: int8 block [bs, D] + per-token
+    asymmetric (scale, zero) [bs] -> f32 keys.  Shared by the decode
+    kernels here and the paged prefill kernel (flash_prefill) so every
+    kernel reads the quantized bytes identically."""
+    return (kq.astype(jnp.float32) - kz[:, None]) * ks[:, None]
+
+
 def _kernel(len_ref, q_ref, kq_ref, ks_ref, kz_ref, v_ref, o_ref,
             m_ref, l_ref, acc_ref, *, n_s: int, bs: int):
     b_idx = pl.program_id(0)
@@ -50,7 +58,7 @@ def _kernel(len_ref, q_ref, kq_ref, ks_ref, kz_ref, v_ref, o_ref,
     ks = ks_ref[0, :, 0]                           # [bs]
     kz = kz_ref[0, :, 0]
     v = v_ref[0, :, 0].astype(jnp.float32)         # [bs, D]
-    k = (kq.astype(jnp.float32) - kz[:, None]) * ks[:, None]
+    k = dequant_keys_block(kq, ks, kz)
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # [G, bs]
     pos = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
     valid = pos < len_ref[b_idx]
@@ -129,7 +137,7 @@ def _paged_kernel(table_ref, base_ref, len_ref, q_ref, kq_ref, ks_ref,
     ks = ks_ref[0, :, 0]                           # [ps]
     kz = kz_ref[0, :, 0]
     v = v_ref[0, :, 0].astype(jnp.float32)         # [ps, D]
-    k = (kq.astype(jnp.float32) - kz[:, None]) * ks[:, None]
+    k = dequant_keys_block(kq, ks, kz)
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # [G, ps]
     # logical position of each key in this page (the index map already
     # translated logical page base_ref[b] + p_idx to its physical page)

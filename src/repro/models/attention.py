@@ -33,6 +33,10 @@ from repro.runtime import dispatch as D
 
 Array = jax.Array
 NEG_INF = -1e30
+# flash_attention's default K-block; attention_prefill slices the cache
+# view on THIS granularity, which is only bitwise-free because whole
+# trailing k-blocks are exact no-ops — keep the two coupled
+FLASH_BK = 1024
 
 
 def attn_params(b: L.ParamBuilder, cfg: ModelConfig, cross: bool = False) -> dict:
@@ -99,7 +103,7 @@ def _pad_to(x: Array, mult: int, axis: int) -> Array:
 def flash_attention(qh: Array, kh: Array, vh: Array, *, causal: bool,
                     window: int = 0, kv_valid: Optional[Array] = None,
                     q_offset: Array | int = 0,
-                    bq: int = 512, bk: int = 1024,
+                    bq: int = 512, bk: int = FLASH_BK,
                     policy: PrecisionPolicy = DEFAULT_POLICY) -> Array:
     """Blockwise attention with online softmax (fp32 states).
 
@@ -230,7 +234,17 @@ def attention_prefill(x: Array, p: dict, cfg: ModelConfig, pat: LayerPattern,
                       lora: 'Optional[dict]' = None,
                       dispatch: Optional[D.Dispatcher] = None
                       ) -> Tuple[Array, kvc.LayerKVCache]:
-    """Prefill: full-sequence attention + build the quantized cache."""
+    """Prefill: full-sequence attention + build the quantized cache.
+
+    Attention runs over the quantization-roundtripped K/V — exactly the
+    bytes the cache stores and every later decode reads.  This makes the
+    prefill self-consistent with decode AND bitwise-reproducible by the
+    chunked paged prefill (``attention_prefill_paged``), which re-reads
+    the same bytes through the page table.  Full-attention layers attend
+    over the whole [B, max_seq] cache view (the causal mask zeroes the
+    unwritten tail exactly), matching the paged path's full-table gather;
+    windowed layers attend over the roundtripped chunk directly (their
+    ring cannot reconstruct overwritten mid-prompt history)."""
     B, T = x.shape[:2]
     qh, kh, vh = _project_qkv(x, p, cfg, lora=lora, dispatch=dispatch)
     qh = L.positional(qh, cfg, positions)
@@ -241,10 +255,64 @@ def attention_prefill(x: Array, p: dict, cfg: ModelConfig, pat: LayerPattern,
                                  value_fp8=cfg.quant.kv_value_fp8)
     cache = kvc.append(cache, kh, vh, jnp.zeros((), jnp.int32))
     qh = _prescale(qh, cfg.resolved_head_dim, policy)
+    if pat.window:
+        k_rt, v_rt = kvc.roundtrip_kv(kh, vh, key_bits=cache.key_bits,
+                                      v_dtype=cache.v.dtype,
+                                      dtype=policy.compute_dtype)
+    else:
+        # slice the view to whole flash k-blocks past the prompt: a fully
+        # causal-masked k-block is an exact no-op in the online softmax
+        # (p == 0, corr == 1), so dropping trailing BLOCKS is bitwise-free
+        # while partial-block slicing would change the reduction shape
+        s_eff = min(cache.max_seq, -(-T // FLASH_BK) * FLASH_BK)
+        k_rt = kvc.dequantize_keys(cache.k_q[:, :s_eff],
+                                   cache.k_scale[:, :s_eff],
+                                   cache.k_zero[:, :s_eff],
+                                   policy.compute_dtype, bits=cache.key_bits)
+        v_rt = cache.v[:, :s_eff].astype(policy.compute_dtype)
     out = D.resolve(dispatch).prefill_attention(
-        qh, kh, vh, causal=True, window=pat.window, policy=policy)
+        qh, k_rt, v_rt, causal=True, window=pat.window, policy=policy)
     out = out.reshape(B, T, -1)
     return L.apply_linear(out, p["wo"], cfg.quant, dispatch=dispatch), cache
+
+
+def attention_prefill_paged(x: Array, p: dict, cfg: ModelConfig,
+                            pat: LayerPattern, pool: KP.PagedLayerKV,
+                            table_row: Array, slot: Array, positions: Array,
+                            policy: PrecisionPolicy = DEFAULT_POLICY,
+                            lora: 'Optional[dict]' = None,
+                            dispatch: Optional[D.Dispatcher] = None
+                            ) -> Tuple[Array, KP.PagedLayerKV]:
+    """One prompt chunk for decode row ``slot``, straight into the paged
+    pool: quantize + append the chunk's K/V into pages (no dense
+    transient), then attend the chunk's queries over the stored history
+    through the page table.
+
+    Full-attention layers go through the ``paged_prefill_attention``
+    dispatch op (prefix pages adopted from other requests are read
+    exactly like pages this row wrote).  Windowed layers attend over the
+    roundtripped chunk directly — they always receive the whole prompt as
+    one chunk (the engine disables multi-chunk when windowed layers
+    exist), so no ring history is needed."""
+    B, C = x.shape[:2]
+    qh, kh, vh = _project_qkv(x, p, cfg, lora=lora, dispatch=dispatch)
+    qh = L.positional(qh, cfg, positions)
+    kh = L.positional(kh, cfg, positions)
+    pos0 = positions[0, 0]
+    pool = KP.append_paged_prompt(pool, kh, vh, pos0,
+                                  table_row=table_row, slot=slot)
+    qh = _prescale(qh, cfg.resolved_head_dim, policy)
+    if pool.window:
+        k_rt, v_rt = kvc.roundtrip_kv(kh, vh, key_bits=pool.key_bits,
+                                      v_dtype=pool.v.dtype,
+                                      dtype=policy.compute_dtype)
+        out = D.resolve(dispatch).prefill_attention(
+            qh, k_rt, v_rt, causal=True, window=pat.window, policy=policy)
+    else:
+        out = D.resolve(dispatch).paged_prefill_attention(
+            qh, pool, table_row[None], pos0, policy)
+    out = out.reshape(B, C, -1)
+    return L.apply_linear(out, p["wo"], cfg.quant, dispatch=dispatch), pool
 
 
 def attention_decode(x: Array, p: dict, cfg: ModelConfig, pat: LayerPattern,

@@ -243,65 +243,6 @@ def init_paged_cache(cfg: ModelConfig, batch: int, max_seq: int,
                               jnp.int32)}
 
 
-def scatter_request_paged(cfg: ModelConfig, cache: dict, single: dict,
-                          slot: Array, table_row: Array) -> dict:
-    """Paged analogue of ``scatter_request``: write a prefilled
-    single-request dense cache into decode row ``slot``'s pool pages
-    (``table_row``: the row's physical page ids, trash-filled tail) and
-    into its SSM state rows.  ``slot``/``table_row`` may be traced — one
-    compiled scatter serves every slot and allocation."""
-    def upd(big, small):
-        small = small.astype(big.dtype)
-        if big.ndim == small.ndim:
-            return jax.lax.dynamic_update_slice_in_dim(big, small, slot,
-                                                       axis=1)
-        return jax.lax.dynamic_update_index_in_dim(big, small, slot, axis=1)
-
-    new_stacks = []
-    for si, (patterns, _count) in enumerate(cfg.layer_plan()):
-        row = []
-        for pi, _pat in enumerate(patterns):
-            big = cache["stacks"][si][pi]
-            small = single["stacks"][si][pi]
-            if isinstance(big, KP.PagedLayerKV):
-                row.append(KP.scatter_pages(big, small, slot, table_row,
-                                            single["pos"]))
-            else:
-                row.append(jax.tree.map(upd, big, small))
-        new_stacks.append(tuple(row))
-    new = dict(cache)
-    new["stacks"] = tuple(new_stacks)
-    new["pos"] = cache["pos"].at[slot].set(
-        jnp.asarray(single["pos"], jnp.int32))
-    new["table"] = cache["table"].at[slot].set(
-        jnp.asarray(table_row, jnp.int32))
-    return new
-
-
-def scatter_request(cache: dict, single: dict, slot: Array) -> dict:
-    """Write a freshly prefilled single-request cache (batch=1) into row
-    ``slot`` of a shared per-row decode cache (continuous batching).
-
-    The freed slot's stale KV/state is simply overwritten for positions
-    [0, T) and masked beyond (per-row ``pos`` governs validity), so slot
-    reuse needs no zeroing and no re-jit.  ``slot`` may be a traced int32 —
-    one compiled scatter serves every slot.
-    """
-    def upd(big, small):
-        small = small.astype(big.dtype)
-        if big.ndim == small.ndim:          # [L, 1, ...] into [L, B, ...]
-            return jax.lax.dynamic_update_slice_in_dim(big, small, slot,
-                                                       axis=1)
-        # per-layer scalar (e.g. LayerKVCache.length [L] into [L, B])
-        return jax.lax.dynamic_update_index_in_dim(big, small, slot, axis=1)
-
-    new = dict(cache)
-    new["stacks"] = jax.tree.map(upd, cache["stacks"], single["stacks"])
-    new["pos"] = cache["pos"].at[slot].set(
-        jnp.asarray(single["pos"], jnp.int32))
-    return new
-
-
 def free_slots(cache: dict, rows: Array) -> dict:
     """Reset the positions of finished/preempted rows to zero. The KV bytes
     stay in place; per-row masks make them unreachable until the next
@@ -342,11 +283,25 @@ def _constrain(x: Array, ctx: StepCtx) -> Array:
     return x
 
 
+def _row_state(state: Any, slot: Array) -> Any:
+    """Slice one row of a per-row SSM state tree ([B, ...] leaves)."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0), state)
+
+
+def _put_row_state(state: Any, row: Any, slot: Array) -> Any:
+    return jax.tree.map(
+        lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+            big, small.astype(big.dtype), slot, axis=0), state, row)
+
+
 def _apply_pattern(x: Array, pp: dict, cfg: ModelConfig, pat: LayerPattern,
                    mode: str, positions, cache, cross_cache, pos, table,
-                   ctx: StepCtx) -> Tuple[Array, Any, Array]:
+                   ctx: StepCtx, slot=None) -> Tuple[Array, Any, Array]:
     """One layer. Returns (x, new_cache, moe_aux).  ``table``: the shared
-    page table when the decode cache is paged (kv_pool), else None."""
+    page table when the decode cache is paged (kv_pool), else None; in
+    ``prefill_paged`` mode it is the single row's table and ``slot`` the
+    decode row receiving the prompt chunk."""
     aux = jnp.zeros((2,), jnp.float32)
     dsp = ctx.dispatch
     h = L.rms_norm(x, pp["ln1"], cfg.rms_eps, dispatch=dsp)
@@ -359,6 +314,10 @@ def _apply_pattern(x: Array, pp: dict, cfg: ModelConfig, pat: LayerPattern,
             att, new_cache = A.attention_prefill(
                 h, pp["attn"], cfg, pat, positions, cache.max_seq, ctx.policy,
                 lora=ctx.lora, dispatch=dsp)
+        elif mode == "prefill_paged":
+            att, new_cache = A.attention_prefill_paged(
+                h, pp["attn"], cfg, pat, cache, table, slot, positions,
+                ctx.policy, lora=ctx.lora, dispatch=dsp)
         elif isinstance(cache, KP.PagedLayerKV):
             att, new_cache = A.attention_decode_paged(
                 h, pp["attn"], cfg, pat, cache, table, pos, positions,
@@ -383,6 +342,13 @@ def _apply_pattern(x: Array, pp: dict, cfg: ModelConfig, pat: LayerPattern,
             st = S.init_mamba_state(x.shape[0], cfg)
             y, _ = S.mamba_forward(h, pp["mamba"], cfg, st)
             new_cache = cache          # None in train mode
+        elif mode == "prefill_paged":
+            # one chunk == the whole prompt (the engine disables
+            # multi-chunk for SSM stacks), so the row starts from a fresh
+            # state — exactly the dense prefill's initial condition
+            y, st1 = S.mamba_forward(h, pp["mamba"], cfg,
+                                     S.init_mamba_state(1, cfg))
+            new_cache = _put_row_state(cache, st1, slot)
         else:
             y, new_cache = S.mamba_forward(h, pp["mamba"], cfg, cache)
         x = x + y
@@ -395,6 +361,8 @@ def _apply_pattern(x: Array, pp: dict, cfg: ModelConfig, pat: LayerPattern,
     elif pat.kind == "rwkv":
         if mode == "train":
             st = S.init_rwkv_state(x.shape[0], cfg)
+        elif mode == "prefill_paged":
+            st = S.init_rwkv_state(1, cfg)     # whole prompt in one chunk
         else:
             st = cache
         y, st = S.rwkv_time_mix(h, pp["tm"], cfg, st)
@@ -402,20 +370,28 @@ def _apply_pattern(x: Array, pp: dict, cfg: ModelConfig, pat: LayerPattern,
         h2 = L.rms_norm(x, pp["ln2"], cfg.rms_eps, dispatch=dsp)
         y2, st = S.rwkv_channel_mix(h2, pp["tm"], cfg, st)
         x = x + y2
-        new_cache = cache if mode == "train" else st
+        if mode == "train":
+            new_cache = cache
+        elif mode == "prefill_paged":
+            new_cache = _put_row_state(cache, st, slot)
+        else:
+            new_cache = st
     else:
         raise ValueError(pat.kind)
     return _constrain(x, ctx), new_cache, aux
 
 
 def _run_stacks(x: Array, params: dict, cfg: ModelConfig, mode: str,
-                positions, cache: Optional[dict], ctx: StepCtx
-                ) -> Tuple[Array, Optional[dict], Array]:
-    """Scan every stack; returns (x, new_cache, moe_aux_sum)."""
+                positions, cache: Optional[dict], ctx: StepCtx,
+                slot=None) -> Tuple[Array, Optional[dict], Array]:
+    """Scan every stack; returns (x, new_cache, moe_aux_sum).  ``slot``:
+    the decode row a ``prefill_paged`` chunk targets."""
     new_stacks = []
     aux_total = jnp.zeros((2,), jnp.float32)
     pos = None if cache is None else cache["pos"]
     table = None if cache is None else cache.get("table")
+    if mode == "prefill_paged":
+        table = table[slot]              # [pages_per_row] — this row's pages
     for si, (patterns, count) in enumerate(cfg.layer_plan()):
         sp = params["stacks"][si]
         scache = None if cache is None else cache["stacks"][si]
@@ -433,7 +409,7 @@ def _run_stacks(x: Array, params: dict, cfg: ModelConfig, mode: str,
                 cr = None if crslice is None else crslice[pi]
                 xx, nc, aux = _apply_pattern(
                     xx, pslice[pi], cfg, pat, mode, positions, cc, cr, pos,
-                    table, ctx)
+                    table, ctx, slot=slot)
                 new_cs.append(nc)
                 auxc = auxc + aux
             return (xx, auxc), tuple(new_cs)
@@ -621,6 +597,40 @@ def prefill(params: dict, cfg: ModelConfig, embeds: Array, max_seq: int,
         vl = jnp.asarray(valid_len, jnp.int32)
         cache["pos"] = vl
         last = jax.lax.dynamic_slice_in_dim(x, vl - 1, 1, axis=1)
+    logits = _logits(last, params, cfg, ctx.dispatch)[:, 0]
+    return logits, cache
+
+
+def prefill_chunk_paged(params: dict, cfg: ModelConfig, embeds: Array,
+                        cache: dict, slot: Array, pos0: Array,
+                        last_idx: Array,
+                        ctx: Optional[StepCtx] = None,
+                        lora: Optional[dict] = None) -> Tuple[Array, dict]:
+    """One prompt chunk for decode row ``slot``, written straight into the
+    paged pool — the unified prefill path (no dense ``max_seq`` transient,
+    no scatter).  embeds: [1, C, d] at absolute positions [pos0, pos0+C);
+    ``pos0`` > 0 either continues an earlier chunk or skips a prefix
+    adopted from the page index.  ``last_idx``: chunk-local index of the
+    prompt's final token (its logits are returned; mid-prompt chunks just
+    ignore them).  The final chunk may be padded past the prompt — padded
+    keys land in causally-dead positions and padded queries' outputs are
+    never read.
+
+    ``slot``/``pos0``/``last_idx`` are traced: one compilation per chunk
+    *size* serves every row, offset and allocation.  The engine advances
+    ``cache["pos"]`` itself once the whole prompt is in."""
+    ctx = ctx or StepCtx(cfg)
+    if lora is not None:
+        ctx = dataclasses.replace(ctx, lora=lora)
+    x = embeds.astype(jnp.bfloat16)
+    B, C = x.shape[:2]
+    assert B == 1, "prompt chunks are per-row"
+    positions = (jnp.asarray(pos0, jnp.int32)
+                 + jnp.arange(C, dtype=jnp.int32))[None]
+    x, cache, _ = _run_stacks(x, params, cfg, "prefill_paged", positions,
+                              cache, ctx, slot=slot)
+    last = jax.lax.dynamic_slice_in_dim(x, jnp.asarray(last_idx, jnp.int32),
+                                        1, axis=1)
     logits = _logits(last, params, cfg, ctx.dispatch)[:, 0]
     return logits, cache
 

@@ -140,6 +140,14 @@ class Dispatcher:
         return self._call("prefill_attention", "*", qh, kh, vh,
                           causal, window, policy)
 
+    def paged_prefill_attention(self, qh: Array, pool, table, pos0,
+                                policy) -> Array:
+        """Prompt-chunk attention over the paged KV pool (core/kv_pool.py):
+        the chunk's queries (absolute positions pos0 + arange) attend over
+        the row's stored pages through ``table`` [1, pages_per_row]."""
+        return self._call("paged_prefill_attention", "*", qh, pool, table,
+                          pos0, policy)
+
 
 # one default (reference-or-env) dispatcher per backend value, for call
 # sites that don't thread an engine dispatcher (training, tests, examples)
@@ -196,6 +204,13 @@ def _prefill_attention_reference(disp, qh, kh, vh, causal, window, policy):
     from repro.models import attention as A     # lazy: models import us
     return A.flash_attention(qh, kh, vh, causal=causal, window=window,
                              policy=policy)
+
+
+@register("paged_prefill_attention", "reference")
+def _paged_prefill_attention_reference(disp, qh, pool, table, pos0, policy):
+    from repro.core import kv_pool as KP
+    return KP.paged_prefill_attention_ref(qh, pool, table, pos0,
+                                          policy=policy)
 
 
 # ===========================================================================
@@ -285,6 +300,21 @@ def _kernel_prefill_attention(disp, qh, kh, vh, causal, window, policy, *,
     return out.astype(policy.compute_dtype)
 
 
+def _kernel_paged_prefill_attention(disp, qh, pool, table, pos0, policy, *,
+                                    interpret):
+    from repro.kernels import flash_prefill as FP
+    _platform_ok(interpret)
+    _require(pool.key_bits == 8, "int4 keys: reference path")
+    _require(pool.window == 0,
+             "windowed layers prefill chunk-locally, not via the table")
+    B = qh.shape[0]
+    pos0_arr = jnp.broadcast_to(jnp.asarray(pos0, jnp.int32).reshape(-1), (B,))
+    out = FP.paged_flash_prefill_attention(
+        qh, pool.k_q, pool.k_scale, pool.k_zero, pool.v, table, pos0_arr,
+        interpret=interpret)
+    return out.astype(policy.compute_dtype)
+
+
 for _be, _interp in (("interpret", True), ("tpu", False)):
     for _tag in ("W4A8", "W8A8"):
         register("matmul", _be, _tag)(
@@ -303,3 +333,7 @@ for _be, _interp in (("interpret", True), ("tpu", False)):
     register("prefill_attention", _be)(
         lambda d, qh, kh, vh, ca, w, pol, _i=_interp: _kernel_prefill_attention(
             d, qh, kh, vh, ca, w, pol, interpret=_i))
+    register("paged_prefill_attention", _be)(
+        lambda d, qh, c, t, p, pol, _i=_interp:
+            _kernel_paged_prefill_attention(d, qh, c, t, p, pol,
+                                            interpret=_i))

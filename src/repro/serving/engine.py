@@ -67,6 +67,10 @@ class EngineStats:
     # paged-KV spill tier: pool pages moved to / back from Flash
     spilled_pages: int = 0
     restored_pages: int = 0
+    # prefix sharing: prompt tokens adopted from the page index (never
+    # recomputed) and prompt chunks run by the unified step
+    shared_prompt_tokens: int = 0
+    prefill_chunks: int = 0
     # continuous batching: per-request TTFT/TPOT records
     requests: List[RequestStats] = dataclasses.field(default_factory=list)
 
@@ -232,25 +236,35 @@ class Engine:
 
 
 class EngineLoop:
-    """Step-driven continuous-batching serving loop on the paged KV pool.
+    """Step-driven continuous-batching serving loop on the paged KV pool —
+    one *unified step* runs pending prompt chunks and the decode batch
+    together.
 
     One decode batch of ``max_slots`` rows over a block-paged pool
     (core/kv_pool.py) whose geometry the ExecutionPlan owns:
 
-      * a request joins the moment a slot frees (prefill-on-join): its
-        prompt is prefilled alone, then scattered into freshly allocated
-        pool pages — no re-jit, decode shapes never change (the page
-        table is an ordinary array input);
-      * every step advances all occupied rows by one token at their own
+      * a request joins the moment a slot frees; its prompt KV is written
+        *straight into freshly allocated pool pages* in chunks
+        (``transformer.prefill_chunk_paged``) — no dense ``max_seq``
+        transient, no prefill-then-scatter.  Chunks across all prefilling
+        rows share a per-step token budget, so a long prompt trickles in
+        over several steps while the decode batch keeps advancing;
+      * prompt prefixes already in the pool's token-hash index (same
+        tokens, same adapter) are adopted copy-free: the row's page table
+        points at the shared refcounted pages and prefill starts past
+        them — the many-users/shared-system-prompt workload;
+      * every step advances all decodable rows by one token at their own
         per-row positions; pages are allocated on append at page
-        boundaries and returned to the free list on EOS (copy-free);
-      * admission accounts the pages a request *actually* needs now, not
-        a max_seq reservation — the same DRAM budget carries strictly
-        more concurrent requests;
+        boundaries, and EOS is a refcount decrement (indexed prefix pages
+        survive for the next request);
+      * admission accounts the *non-shared* pages a request actually
+        needs now, not a max_seq reservation;
       * preemption (queue patience, or page pressure when the pool runs
         dry mid-decode) spills the victim's pages to Flash
         (hybrid_storage.PageSpillStore) and restores them page-exact on
-        resume, so greedy decoding is bitwise-unaffected.
+        resume, so greedy decoding is bitwise-unaffected.  A row evicted
+        *mid-prefill* is simply freed and requeued (recomputing a partial
+        prompt is cheaper than round-tripping it through Flash).
 
     Per-request TTFT/TPOT/latency land in ``engine.stats.requests``.
     """
@@ -258,8 +272,10 @@ class EngineLoop:
     def __init__(self, engine: Engine, max_slots: int = 4,
                  token_budget: Optional[int] = None,
                  preempt_patience: int = 0,
-                 prefill_buckets: bool = True,
-                 dram_budget_bytes: Optional[int] = None):
+                 dram_budget_bytes: Optional[int] = None,
+                 prefill_chunk: int = 64,
+                 prefill_token_budget: Optional[int] = None,
+                 prefix_sharing: bool = True):
         cfg = engine.cfg
         assert not cfg.is_encdec, "continuous batching: decoder-only models"
         self.eng = engine
@@ -268,54 +284,68 @@ class EngineLoop:
         self.geom = engine.plan.kv_pool_geometry(
             cfg, engine.max_seq, max_slots,
             dram_budget_bytes=dram_budget_bytes)
-        self.pool = KP.KVPoolManager(self.geom, max_slots)
+        # multi-chunk prefill (and the pow2 chunk grid with its padded
+        # final chunk) is only sound for full-cache attention stacks:
+        # ring pages could recycle history a later chunk still needs, and
+        # SSM prefill scans are not chunk-invariant.  Other stacks take
+        # the same paged path with one exact whole-prompt chunk.
+        self._uniform = all(pat.kind == "attn" and pat.window == 0
+                            for pats, _ in cfg.layer_plan() for pat in pats)
+        self.prefill_chunk = prefill_chunk if self._uniform else None
+        self.prefill_token_budget = (prefill_token_budget
+                                     if prefill_token_budget is not None
+                                     else max(prefill_chunk, 64))
+        self.pool = KP.KVPoolManager(
+            self.geom, max_slots,
+            prefix_sharing=prefix_sharing and self._uniform)
         self.spill = HS.PageSpillStore(engine.flash)
         self.scheduler = ContinuousScheduler(
             max_slots, engine.max_seq, token_budget=token_budget,
             preempt_patience=preempt_patience, pool=self.pool)
-        # padding prompts to pow2 buckets caps prefill recompiles, but is
-        # only sound for full-cache attention (padded tails would wrap ring
-        # buffers / corrupt sequential SSM state)
-        self._can_bucket = prefill_buckets and all(
-            pat.kind == "attn" and pat.window == 0
-            for pats, _ in cfg.layer_plan() for pat in pats)
         self.cache = T.init_paged_cache(cfg, max_slots, engine.max_seq,
                                         self.geom)
         self.logits = jnp.zeros((max_slots, cfg.padded_vocab_size),
                                 jnp.float32)
         # uid -> spill record of a preempted request (pages on Flash)
         self._spilled: Dict[int, dict] = {}
+        # slot -> in-flight prompt state (chunked prefill across steps)
+        self._prefilling: Dict[int, dict] = {}
+        self._prefill_rr = 0          # round-robin cursor across steps
         # slots whose restored request still owes one decode of its last
         # generated token before sampling may continue (mid-step eviction
         # caught them between sampling and KV append)
         self._hold: set = set()
         self.peak_active = 0
-        self._prefill = jax.jit(
-            functools.partial(self._prefill_impl, cfg, engine._ctx),
-            static_argnames=("max_seq",))
         self._decode = jax.jit(
             functools.partial(self._decode_impl, cfg, engine._ctx))
-        self._scatter = jax.jit(
-            functools.partial(T.scatter_request_paged, cfg))
-
-    @staticmethod
-    def _prefill_impl(cfg, ctx, params, embeds, lora, valid_len, *, max_seq):
-        return T.prefill(params, cfg, embeds, max_seq=max_seq, ctx=ctx,
-                         lora=lora, valid_len=valid_len)
+        self._chunk = jax.jit(
+            functools.partial(self._chunk_impl, cfg, engine._ctx))
 
     @staticmethod
     def _decode_impl(cfg, ctx, params, embeds, cache, lora, active):
         return T.decode_step(params, cfg, embeds, cache, ctx=ctx, lora=lora,
                              active=active)
 
+    @staticmethod
+    def _chunk_impl(cfg, ctx, params, embeds, cache, slot, pos0, last_idx,
+                    lora):
+        return T.prefill_chunk_paged(params, cfg, embeds, cache, slot, pos0,
+                                     last_idx, ctx=ctx, lora=lora)
+
     # --- helpers -----------------------------------------------------------
-    def _bucket(self, t: int) -> int:
-        if not self._can_bucket:
-            return t
-        b = 8
-        while b < t:
-            b *= 2
-        return min(b, self.eng.max_seq)
+    def _next_chunk(self, remaining: int) -> int:
+        """Chunk-size schedule: full ``prefill_chunk`` slabs, then one
+        pow2 final chunk (padded; min 8) — one jit compilation per size.
+        Non-uniform stacks take the whole prompt as one exact chunk."""
+        cap = self.prefill_chunk
+        if cap is None:
+            return remaining
+        if remaining >= cap:
+            return cap
+        c = 8
+        while c < remaining:
+            c *= 2
+        return c
 
     def _slot_lora(self) -> Optional[dict]:
         return self.eng._lora_for(self.scheduler.running)
@@ -426,7 +456,7 @@ class EngineLoop:
             self.logits = self.logits.at[slot].set(
                 jnp.asarray(rec["logits"]))
 
-    # --- admission ---------------------------------------------------------
+    # --- admission + the unified prefill step ------------------------------
     def _admit_into_slot(self, req: Request, slot: int) -> None:
         rec = self._spilled.pop(req.uid, None)
         if rec is not None:
@@ -436,33 +466,104 @@ class EngineLoop:
             "a preempted request must resume from its spill record"
         toks = list(req.prompt_tokens)
         t = len(toks)
-        ok = self.pool.alloc_row(slot, t)
+        sharing = self.pool.prefix_sharing
+        ok = self.pool.alloc_row(slot, t,
+                                 token_ids=toks if sharing else None,
+                                 salt=req.adapter or "")
         assert ok, "admission checked the pages were free"
-        bucket = self._bucket(t)
-        ids = np.zeros((1, bucket), np.int64)
-        ids[0, :t] = np.asarray(toks)
+        shared = int(self.pool.row_shared[slot])
+        self.eng.stats.shared_prompt_tokens += shared
+        # prompt KV goes straight into the allocated pages, chunk by
+        # chunk, starting past any adopted prefix — _run_prefill_chunks
+        # does the work under the per-step token budget
+        self._prefilling[slot] = {"req": req, "tokens": toks, "t": t,
+                                  "next": shared}
+
+    def _run_prefill_chunks(self) -> None:
+        """Advance prefilling rows by whole chunks until the per-step
+        token budget runs out — ROUND-ROBIN, one chunk per row per pass,
+        so a long prompt in a low slot can never head-of-line-block other
+        rows' first chunks (that wait is exactly the TTFT tail the CI
+        gate protects).  A row whose final chunk lands here becomes
+        decodable this very step (its first token samples immediately —
+        TTFT is unchanged for prompts that fit the budget)."""
+        if not self._prefilling:
+            return
+        budget = self.prefill_token_budget
         t0 = time.perf_counter()
-        embeds = self.eng.embed(ids)
-        logits1, single = self._prefill(
-            self.eng.params, embeds, self._row_lora(req),
-            jnp.asarray(t, jnp.int32), max_seq=self.eng.max_seq)
-        self.cache = self._scatter(self.cache, single,
-                                   jnp.asarray(slot, jnp.int32),
-                                   jnp.asarray(self.pool.table[slot]))
-        self.logits = self.logits.at[slot].set(logits1[0])
-        jax.block_until_ready(self.logits)
-        self.pool.row_pos[slot] = t
-        self.eng.stats.prefill_tokens += t
-        self.eng.stats.prefill_s += time.perf_counter() - t0
+        ran = False
+        # allocation only happens at admission, so the table is constant
+        # for the whole chunk phase — upload it once
+        self.cache["table"] = self.pool.device_table()
+        while budget > 0 and self._prefilling:
+            advanced = False
+            order = sorted(self._prefilling)
+            # the rotation cursor persists ACROSS steps: when the budget
+            # only covers one chunk per step, consecutive steps still
+            # serve different rows instead of always restarting at the
+            # lowest slot
+            pivot = sum(1 for s in order if s < self._prefill_rr)
+            for slot in order[pivot:] + order[:pivot]:
+                if budget <= 0:
+                    break
+                st = self._prefilling[slot]
+                req, toks, t = st["req"], st["tokens"], st["t"]
+                self._prefill_rr = slot + 1
+                c = self._next_chunk(t - st["next"])
+                valid = min(c, t - st["next"])
+                ids = np.zeros((1, c), np.int64)
+                ids[0, :valid] = np.asarray(toks[st["next"]:st["next"] + valid])
+                embeds = self.eng.embed(ids)
+                logits1, self.cache = self._chunk(
+                    self.eng.params, embeds, self.cache,
+                    jnp.asarray(slot, jnp.int32),
+                    jnp.asarray(st["next"], jnp.int32),
+                    jnp.asarray(t - 1 - st["next"]
+                                if st["next"] + c >= t else c - 1, jnp.int32),
+                    self._row_lora(req))
+                st["next"] += valid
+                budget -= valid
+                ran = advanced = True
+                self.eng.stats.prefill_tokens += valid
+                self.eng.stats.prefill_chunks += 1
+                if st["next"] >= t:     # prompt complete: row is decodable
+                    self.logits = self.logits.at[slot].set(logits1[0])
+                    self.cache["pos"] = self.cache["pos"].at[slot].set(t)
+                    self.pool.row_pos[slot] = t
+                    self.pool.register_prefix(slot, toks,
+                                              salt=req.adapter or "")
+                    del self._prefilling[slot]
+            if not advanced:
+                break
+        if ran:
+            jax.block_until_ready(self.logits)
+            self.eng.stats.prefill_s += time.perf_counter() - t0
+
+    def _restart_prefilling_row(self, victim: Request) -> None:
+        """Evict a mid-prefill row under page pressure: free its pages and
+        requeue the request (no spill — a partial prompt is cheaper to
+        recompute than to round-trip through Flash).  The adoption stats
+        recorded at admission are retracted so a restart never inflates
+        the prefix-cache numbers."""
+        vslot = victim.slot
+        st = self._prefilling[vslot]
+        self.eng.stats.shared_prompt_tokens -= int(self.pool.row_shared[vslot])
+        self.pool.retract_prompt_stats(vslot, st["t"])
+        self.scheduler.evict(victim)
+        del self._prefilling[vslot]
+        self.pool.free_row(vslot)
+        self.cache = T.free_slots(self.cache, jnp.asarray([vslot], jnp.int32))
 
     def _pick_page_victim(self, exclude: set) -> Optional[Request]:
         """Page pressure: evict the row holding the most pool pages (frees
-        the most DRAM per spill), excluding the row asking for the page.
+        the most DRAM per spill), excluding the row asking for the page
+        and rows still prefilling (those restart instead of spilling).
         Rows restored this very step (``_hold``) only lose their pages as
         a last resort — re-spilling one before its pending decode would
         round-trip Flash for zero tokens of progress."""
         cands = [r for r in self.scheduler.running
-                 if r is not None and r.slot not in exclude]
+                 if r is not None and r.slot not in exclude
+                 and r.slot not in self._prefilling]
         fresh = [r for r in cands if r.slot not in self._hold]
         cands = fresh or cands
         if not cands:
@@ -512,13 +613,17 @@ class EngineLoop:
             # hold rows owe a pending decode before their logits are valid;
             # preempting one mid-replay would re-spill an unchanged row
             preempted = sched.maybe_preempt(
-                exclude_slots=set(self._hold),
+                exclude_slots=set(self._hold) | set(self._prefilling),
                 sampling_cap=sampling.max_new_tokens)
             if preempted is not None:
                 freed_slot, victim = preempted
                 self._spill_row(freed_slot, victim, pending=False)
             for slot, req in sched.admit():
                 self._admit_into_slot(req, slot)
+            # the unified step, phase 1: pending prompt chunks go straight
+            # into pool pages under the per-step token budget (rows whose
+            # final chunk lands here decode below, in the same step)
+            self._run_prefill_chunks()
             running = list(sched.running)
             n_active = sum(r is not None for r in running)
             self.peak_active = max(self.peak_active, n_active)
@@ -526,14 +631,16 @@ class EngineLoop:
                 step += 1
                 continue
 
-            # one token for every occupied slot (newly admitted rows sample
-            # from their prefill logits — TTFT is measured right here)
+            # one token for every decodable slot (rows that just finished
+            # prefilling sample from their final chunk's logits — TTFT is
+            # measured right here)
             key, sub = jax.random.split(key)
             tok = SM.sample(self.logits, sampling, cfg.vocab_size, sub)
             tok_np = np.asarray(tok)
             now = time.perf_counter()
             for slot, req in enumerate(running):
-                if req is None or slot in self._hold:
+                if req is None or slot in self._hold \
+                        or slot in self._prefilling:
                     continue
                 t_id = int(tok_np[slot])
                 req.generated.append(t_id)
@@ -544,8 +651,9 @@ class EngineLoop:
                         or len(req.generated) >= cap):
                     req.finish_t = now
                     sched.finish(req)
-                    # copy-free reclaim: the row's pages go straight back
-                    # to the free list (no bytes move)
+                    # refcount-decrement reclaim: private pages return to
+                    # the free list; indexed prefix pages survive EOS for
+                    # the next request with the same prompt head
                     self.pool.free_row(slot)
                     self.cache = T.free_slots(
                         self.cache, jnp.asarray([slot], jnp.int32))
@@ -558,33 +666,52 @@ class EngineLoop:
             if not any(r is not None for r in sched.running):
                 step += 1
                 continue
-            # allocate-on-append: every surviving row appends one token at
-            # its position this decode — rows crossing a page boundary take
-            # a page from the free list, and when the pool runs dry the
-            # biggest page-holder is spilled to Flash to make room
+            # allocate-on-append: every surviving decodable row appends one
+            # token at its position this decode — rows crossing a page
+            # boundary take a page from the free list (index pins are
+            # evicted first), and when the pool still runs dry the biggest
+            # page-holder is spilled to Flash (mid-prefill rows restart
+            # instead — cheaper than a Flash round trip)
             for slot, req in enumerate(sched.running):
-                if req is None:
+                if req is None or slot in self._prefilling:
                     continue
                 while not self.pool.ensure(slot, int(self.pool.row_pos[slot])):
                     victim = self._pick_page_victim(exclude={slot})
-                    assert victim is not None, \
-                        "pool cannot hold a single request (geometry bug)"
+                    if victim is None:
+                        pref = [r for r in sched.running
+                                if r is not None and r.slot != slot
+                                and r.slot in self._prefilling]
+                        assert pref, \
+                            "pool cannot hold a single request (geometry bug)"
+                        self._restart_prefilling_row(max(
+                            pref, key=lambda r: self.pool.pages_held(r.slot)))
+                        continue
                     vslot = victim.slot
                     sched.evict(victim)
                     self._spill_row(vslot, victim, pending=True)
 
-            # batched decode: every occupied row advances at its own pos
-            # (hold rows feed their pending token — same shape, no re-jit)
+            # the unified step, phase 2 — batched decode: every decodable
+            # row advances at its own pos (hold rows feed their pending
+            # token — same shape, no re-jit).  Rows still mid-prefill ride
+            # along inactive; their table rows are masked to the trash
+            # page so the decode append cannot touch their prompt pages.
             ids = np.zeros((self.max_slots, 1), np.int64)
             active = np.zeros((self.max_slots,), bool)
             for slot, req in enumerate(sched.running):
-                if req is None:
+                if req is None or slot in self._prefilling:
                     continue
                 ids[slot, 0] = req.generated[-1]
                 active[slot] = True
             self._hold.clear()
+            if not active.any():
+                step += 1
+                continue
             embeds = eng.embed(ids)
-            self.cache["table"] = self.pool.device_table()
+            table = self.pool.table
+            if self._prefilling:
+                table = table.copy()
+                table[sorted(self._prefilling)] = self.geom.trash_page
+            self.cache["table"] = jnp.asarray(table)
             self.logits, self.cache = self._decode(
                 eng.params, embeds, self.cache, self._slot_lora(),
                 jnp.asarray(active))

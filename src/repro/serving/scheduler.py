@@ -164,9 +164,18 @@ class ContinuousScheduler:
                    len(r.generated) for r in self.active)
 
     def need_pages(self, req: Request) -> int:
-        """Pages the request needs *on admission*: its context plus the
-        first decode append — not the worst-case decode budget."""
-        return self.pool.pages_for(len(req.context_tokens) + 1)
+        """Pages of *availability* the request consumes on admission: its
+        context plus the first decode append — not the worst-case decode
+        budget.  Fresh requests are charged only their non-shared pages:
+        prefix pages another running row still holds (refcount >= 2) are
+        adopted copy-free and cost the admission nothing.  Index-only
+        pins stay charged — they sit inside ``available_pages``, and
+        adoption makes them non-reclaimable."""
+        need = self.pool.pages_for(len(req.context_tokens) + 1)
+        if not req.generated:
+            need -= self.pool.probe_admission_discount(
+                req.prompt_tokens, salt=req.adapter or "")
+        return need
 
     def _fits(self, req: Request, pending_pages: int = 0) -> bool:
         # legacy worst-case reservation (the explicit token_budget keeps
@@ -176,7 +185,10 @@ class ContinuousScheduler:
         if self._committed_tokens() + need > self.token_budget:
             return False
         if self.pool is not None:
-            return self.need_pages(req) <= self.pool.free_pages - pending_pages
+            # available = free list + evictable index pins: cached
+            # prefixes are dropped before they ever block new work
+            return (self.need_pages(req)
+                    <= self.pool.available_pages - pending_pages)
         return True
 
     # --- transitions -------------------------------------------------------
@@ -216,8 +228,8 @@ class ContinuousScheduler:
             self.running[slot] = cand
             admitted.append((slot, cand))
             if self.pool is not None:
-                # pages this admission will take before the engine actually
-                # allocates them (multiple admissions per step)
+                # availability this admission will consume before the
+                # engine actually allocates (multiple admissions per step)
                 pending_pages += self.need_pages(cand)
         return admitted
 
