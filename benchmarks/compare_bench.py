@@ -9,10 +9,15 @@ and runs::
         --current BENCH_pr4.json
 
 The default gates are ``tokens_per_s:higher:0.10`` (a >10% throughput drop
-fails) and ``ttft_p95_s:lower:0.15`` (a >15% p95 time-to-first-token
+fails), ``ttft_p95_s:lower:0.15`` (a >15% p95 time-to-first-token
 increase fails — the unified chunked-prefill step exists to protect
-exactly this tail).  Override or extend with repeated
-``--gate key:direction:threshold`` flags.
+exactly this tail), ``oversub_equal_output:min:1.0`` (the
+oversubscribed Flash-spill decode must stay bitwise-equal to all-DRAM —
+an ABSOLUTE invariant, enforced even when no previous artifact exists)
+and ``flash_hit_rate:min:0.9`` (the staging prefetch must keep hiding
+the Flash reads).  Override or extend with repeated
+``--gate key:direction:threshold`` flags (directions: higher/lower are
+relative to the previous run, min is an absolute floor).
 
 Missing previous artifacts (first run, expired retention) and metrics
 absent on either side pass with a notice — the gate only ever fails on a
@@ -27,7 +32,13 @@ import os
 import re
 import sys
 
-DEFAULT_GATES = ("tokens_per_s:higher:0.10", "ttft_p95_s:lower:0.15")
+DEFAULT_GATES = ("tokens_per_s:higher:0.10", "ttft_p95_s:lower:0.15",
+                 # proactive spill: absolute invariants, not relative to
+                 # the previous run — bitwise equality of the
+                 # oversubscribed decode and the Fig. 2 "hidden" staging
+                 # regime must hold even when no previous artifact exists
+                 "oversub_equal_output:min:1.0",
+                 "flash_hit_rate:min:0.9")
 
 
 def load_summary(path: str) -> dict:
@@ -54,9 +65,9 @@ def find_bench_json(path: str) -> str | None:
 
 def parse_gate(spec: str) -> tuple[str, str, float]:
     parts = spec.split(":")
-    if len(parts) != 3 or parts[1] not in ("higher", "lower"):
+    if len(parts) != 3 or parts[1] not in ("higher", "lower", "min"):
         raise SystemExit(f"[compare] bad --gate {spec!r}; expected "
-                         f"key:higher|lower:threshold")
+                         f"key:higher|lower|min:threshold")
     return parts[0], parts[1], float(parts[2])
 
 
@@ -64,7 +75,23 @@ def check_gate(prev: dict, cur: dict, key: str, direction: str,
                threshold: float) -> bool:
     """Returns True if the gate passes.  ``higher``: higher is better,
     fail on a fractional drop beyond threshold; ``lower``: lower is
-    better, fail on a fractional increase beyond threshold."""
+    better, fail on a fractional increase beyond threshold; ``min``: an
+    ABSOLUTE floor on the current value — no previous artifact needed,
+    and a missing current metric fails (invariants like bitwise equality
+    must never slip through an expired-artifact notice)."""
+    if direction == "min":
+        if key not in cur:
+            print(f"[compare] FAIL: required metric {key!r} missing from "
+                  f"the current summary", file=sys.stderr)
+            return False
+        c = float(cur[key])
+        print(f"[compare] {key} (absolute floor): current={c:.6f} "
+              f"required >= {threshold:.6f}")
+        if c < threshold:
+            print(f"[compare] FAIL: {key}={c} below the absolute floor "
+                  f"{threshold}", file=sys.stderr)
+            return False
+        return True
     if key not in prev or key not in cur:
         print(f"[compare] {key!r} missing "
               f"(prev={sorted(prev)}, cur={sorted(cur)}) — gate passes")

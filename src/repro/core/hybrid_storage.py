@@ -203,6 +203,13 @@ class _FlashPrefetcher:
         self.prefetch_misses += 1
         return self._load(key)
 
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of fetches served through the prefetch pipeline
+        (requested before they were needed); 1.0 before any traffic."""
+        total = self.prefetch_hits + self.prefetch_misses
+        return self.prefetch_hits / total if total else 1.0
+
     def close(self) -> None:
         self._q.put(None)
         self._thread.join(timeout=5)
@@ -277,7 +284,9 @@ class KVSpillManager(_FlashPrefetcher):
 
 
 class PageSpillStore(_FlashPrefetcher):
-    """Row-granular paged-KV spill tier (kv_pool + §4.1 Flash overlap).
+    """Paged-KV spill tier (kv_pool + §4.1 Flash overlap) — row-granular
+    snapshots for preempted rows AND page-granular blobs for the
+    proactive spill of *running* rows.
 
     When the serving engine preempts a request, the request's pool pages —
     every layer group's quantized K/V bytes plus scale planes — move to
@@ -285,34 +294,56 @@ class PageSpillStore(_FlashPrefetcher):
     they come back *page-exact* (int8/fp8 bytes round-trip losslessly, so
     resumed greedy decoding is bitwise-identical to an uninterrupted run).
 
-    Restore uses the same group-ahead prefetch overlap as KVSpillManager:
-    while the engine writes group i's pages back to the device, the
-    background thread is already reading group i+1 from Flash.
+    ``put_page``/``fetch_page`` store one logical page of one layer group
+    under ``(uid, "p<idx>/<group>")`` — the unit of the decode-time
+    staging gather.  The decode loop prefetches layer group i+1's blob
+    (and the next page's first group) while group i's bytes install on
+    the device: the same layer-ahead overlap ``KVSpillManager
+    .prefetch_async`` gives the dense spill tier, at page granularity.
+
+    Restore uses the same group-ahead prefetch overlap: while the engine
+    writes group i's pages back to the device, the background thread is
+    already reading group i+1 from Flash.
     """
 
     def __init__(self, flash: FlashStore):
         self.flash = flash
         # (uid, group) -> [(flash_key, array_name)]
         self._meta: Dict[tuple, list] = {}
-        self._uid_pages: Dict[int, int] = {}
+        self._key_pages: Dict[tuple, int] = {}
         self.pages_on_flash = 0
         super().__init__()
 
     # -- spill ----------------------------------------------------------------
     def put(self, uid: int, group: str, arrays: Dict[str, np.ndarray], *,
             pages: int = 0) -> None:
-        """Write one layer group's row snapshot; ``pages`` counts the pool
+        """Write one layer group's snapshot; ``pages`` counts the pool
         pages this call moves to Flash (residency accounting — pass it on
-        one group per row, the bytes are per-group either way)."""
+        one group per row/page, the bytes are per-group either way)."""
         names = []
         for name, arr in arrays.items():
-            key = f"pspill_u{uid}_{group}_{name}"
+            key = f"pspill_u{uid}_{group}_{name}".replace("/", "-")
             self.flash.put(key, np.ascontiguousarray(arr))
             names.append((key, name))
         with self._lock:
-            self._meta[(uid, group)] = names
-            self._uid_pages[uid] = self._uid_pages.get(uid, 0) + pages
-            self.pages_on_flash += pages
+            k = (uid, group)
+            self._meta[k] = names
+            self.pages_on_flash += pages - self._key_pages.get(k, 0)
+            self._key_pages[k] = pages
+            self._cache.pop(k, None)   # stale
+
+    @staticmethod
+    def _page_group(page_idx: int, group: str) -> str:
+        return f"p{page_idx}/{group}"
+
+    def put_page(self, uid: int, page_idx: int, group: str,
+                 arrays: Dict[str, np.ndarray], *,
+                 count_page: bool = False) -> None:
+        """One logical page of one layer group (proactive cold spill).
+        ``count_page``: count this page once in ``pages_on_flash`` (pass
+        True on one group per page)."""
+        self.put(uid, self._page_group(page_idx, group), arrays,
+                 pages=1 if count_page else 0)
 
     # -- restore ---------------------------------------------------------------
     def _load(self, key: tuple) -> Dict[str, np.ndarray]:
@@ -330,14 +361,38 @@ class PageSpillStore(_FlashPrefetcher):
         synchronous Flash read on a miss)."""
         return self._obtain((uid, group))
 
-    def drop(self, uid: int) -> None:
-        """Forget a request's spilled pages (restored or abandoned)."""
+    def prefetch_page(self, uid: int, page_idx: int, group: str) -> None:
+        self.prefetch_async(uid, self._page_group(page_idx, group))
+
+    def fetch_page(self, uid: int, page_idx: int, group: str
+                   ) -> Dict[str, np.ndarray]:
+        return self.fetch(uid, self._page_group(page_idx, group))
+
+    def has_page(self, uid: int, page_idx: int, group: str) -> bool:
         with self._lock:
-            self.pages_on_flash -= self._uid_pages.pop(uid, 0)
+            return (uid, self._page_group(page_idx, group)) in self._meta
+
+    def _drop_key(self, key: tuple) -> None:
+        for fkey, _ in self._meta.pop(key):
+            self.flash.delete(fkey)
+        self._cache.pop(key, None)
+        self.pages_on_flash -= self._key_pages.pop(key, 0)
+
+    def drop(self, uid: int) -> None:
+        """Forget a request's spilled pages — row snapshots and
+        page-granular cold blobs alike (restored or abandoned)."""
+        with self._lock:
             for key in [k for k in self._meta if k[0] == uid]:
-                for fkey, _ in self._meta.pop(key):
-                    self.flash.delete(fkey)
-                self._cache.pop(key, None)
+                self._drop_key(key)
+
+    def drop_groups(self, uid: int, groups) -> None:
+        """Forget specific groups of one request (a restore that brings
+        the row-snapshot groups back but leaves cold page blobs on
+        Flash)."""
+        with self._lock:
+            for group in groups:
+                if (uid, group) in self._meta:
+                    self._drop_key((uid, group))
 
 
 def plan_embedding_placement(param_sizes: Dict[str, int],

@@ -73,14 +73,29 @@ class PoolGeometry:
     """Pool shape decided once by the ExecutionPlan (runtime/plan.py):
     ``page_size`` tokens per page, ``num_pages`` allocatable device pages
     (the trash page is extra), ``pages_per_row`` table width
-    (= max_seq / page_size)."""
+    (= max_seq / page_size).  ``staging_pages`` is the DRAM staging
+    reserve for the proactive Flash spill tier: extra device pages —
+    beyond the trash page — that Flash-resident cold pages are gathered
+    into before the paged kernels run, so the kernels themselves never
+    know a page was ever cold."""
     page_size: int
     num_pages: int
     pages_per_row: int
+    staging_pages: int = 0
 
     @property
     def trash_page(self) -> int:
         return self.num_pages
+
+    @property
+    def staging_base(self) -> int:
+        """First staging physical page id (staging sits past the trash
+        page: [staging_base, staging_base + staging_pages))."""
+        return self.num_pages + 1
+
+    @property
+    def total_device_pages(self) -> int:
+        return self.num_pages + 1 + self.staging_pages
 
     @property
     def max_seq(self) -> int:
@@ -88,6 +103,34 @@ class PoolGeometry:
 
     def pages_for(self, tokens: int) -> int:
         return -(-int(tokens) // self.page_size)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpillPolicy:
+    """Proactive-spill knobs the ExecutionPlan owns (runtime/plan.py
+    ``kv_spill_policy``), next to the pool geometry:
+
+    * ``staging_pages``     — DRAM staging reserve size (mirrors the
+      geometry; the per-row Flash residency cap, since a row must be able
+      to stage every cold page for one decode wave).
+    * ``hot_pages``         — trailing full pages per row that never
+      spill (the paper's "window" of hot context near the tail).
+    * ``low_watermark``     — free-page level below which the engine
+      proactively spills cold pages of running rows.
+    * ``high_watermark``    — free-page target the proactive spill
+      refills to.
+    * ``flash_budget_pages``— cap on total pages resident on Flash
+      (admission may oversubscribe DRAM up to this).
+    """
+    staging_pages: int
+    hot_pages: int
+    low_watermark: int
+    high_watermark: int
+    flash_budget_pages: int
+
+
+# Per-(row, logical page) residency states for the proactive spill tier.
+RES_DRAM, RES_FLASH, RES_INFLIGHT, RES_STAGED = range(4)
 
 
 def pages_per_window(window: int, page_size: int) -> int:
@@ -124,16 +167,18 @@ class PagedLayerKV:
     window: int = 0
     key_bits: int = 8
     ppw: int = 0                      # pages per window ring (window > 0)
+    staging: int = 0                  # staging pages past the trash page
 
     def tree_flatten(self):
         return ((self.k_q, self.k_scale, self.k_zero, self.v),
-                (self.window, self.key_bits, self.ppw))
+                (self.window, self.key_bits, self.ppw, self.staging))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         k_q, k_scale, k_zero, v = children
         return cls(k_q, k_scale, k_zero, v,
-                   window=aux[0], key_bits=aux[1], ppw=aux[2])
+                   window=aux[0], key_bits=aux[1], ppw=aux[2],
+                   staging=aux[3])
 
     @property
     def page_size(self) -> int:
@@ -149,12 +194,13 @@ def init_paged_layer(geom: PoolGeometry, kv_heads: int, head_dim: int, *,
                      key_bits: int = 8, value_fp8: bool = True
                      ) -> PagedLayerKV:
     """Zero-initialized pool.  Full-attention pools hold
-    ``geom.num_pages + 1`` pages (the +1 is the trash page); windowed
-    pools hold a fixed ``batch * ppw`` ring.  ``layers`` > 0 stacks a
-    leading scan axis."""
+    ``geom.num_pages + 1 + geom.staging_pages`` pages (the +1 is the
+    trash page; staging pages sit past it and receive cold pages gathered
+    back from Flash); windowed pools hold a fixed ``batch * ppw`` ring.
+    ``layers`` > 0 stacks a leading scan axis."""
     ps = geom.page_size
     ppw = pages_per_window(window, ps) if window else 0
-    pages = batch * ppw if window else geom.num_pages + 1
+    pages = batch * ppw if window else geom.total_device_pages
     vdt = q.FP8_DTYPE if value_fp8 else jnp.bfloat16
     kd = head_dim // 2 if key_bits == 4 else head_dim
     lead = (layers,) if layers else ()
@@ -163,7 +209,8 @@ def init_paged_layer(geom: PoolGeometry, kv_heads: int, head_dim: int, *,
         k_scale=jnp.ones((*lead, pages, ps, kv_heads), jnp.float32),
         k_zero=jnp.zeros((*lead, pages, ps, kv_heads), jnp.float32),
         v=jnp.zeros((*lead, pages, ps, kv_heads, head_dim), vdt),
-        window=window, key_bits=key_bits, ppw=ppw)
+        window=window, key_bits=key_bits, ppw=ppw,
+        staging=0 if window else geom.staging_pages)
 
 
 def append_paged(pool: PagedLayerKV, k_new: Array, v_new: Array, pos: Array,
@@ -193,7 +240,8 @@ def append_paged(pool: PagedLayerKV, k_new: Array, v_new: Array, pos: Array,
         k_scale=pool.k_scale.at[page, off].set(ks[:, 0]),
         k_zero=pool.k_zero.at[page, off].set(kz[:, 0]),
         v=pool.v.at[page, off].set(v_cast[:, 0]),
-        window=pool.window, key_bits=pool.key_bits, ppw=pool.ppw)
+        window=pool.window, key_bits=pool.key_bits, ppw=pool.ppw,
+        staging=pool.staging)
 
 
 def gather_pages(pool: PagedLayerKV, table: Array
@@ -274,10 +322,13 @@ def append_paged_prompt(pool: PagedLayerKV, k_new: Array, v_new: Array,
                 big = big.at[page].set(merged)
             out[name] = big
         return PagedLayerKV(**out, window=pool.window,
-                            key_bits=pool.key_bits, ppw=pool.ppw)
+                            key_bits=pool.key_bits, ppw=pool.ppw,
+                            staging=pool.staging)
     logical = positions // ps
     n_p = table_row.shape[0]
-    trash = pool.num_pages - 1               # pool holds num_pages+1 arrays
+    # pool arrays hold num_pages + 1 + staging pages; trash sits right
+    # before the staging reserve
+    trash = pool.num_pages - 1 - pool.staging
     page = jnp.where(logical < n_p,
                      table_row[jnp.clip(logical, 0, n_p - 1)], trash)
     off = jnp.mod(positions, ps)
@@ -286,7 +337,8 @@ def append_paged_prompt(pool: PagedLayerKV, k_new: Array, v_new: Array,
         k_scale=pool.k_scale.at[page, off].set(ks[0]),
         k_zero=pool.k_zero.at[page, off].set(kz[0]),
         v=pool.v.at[page, off].set(v_cast[0]),
-        window=pool.window, key_bits=pool.key_bits, ppw=pool.ppw)
+        window=pool.window, key_bits=pool.key_bits, ppw=pool.ppw,
+        staging=pool.staging)
 
 
 def paged_prefill_attention_ref(qh: Array, pool: PagedLayerKV, table: Array,
@@ -378,6 +430,21 @@ class KVPoolManager:
     never write into a page they adopted (chunks start past the shared
     prefix), so no copy-on-write is ever needed.  Index pins are evicted
     lazily — newest chains first — when the free list runs short.
+
+    Proactive spill (running rows): every (row, logical page) carries a
+    residency state — RES_DRAM (owns a pool page; ``row_pages`` holds its
+    id), RES_FLASH (bytes live only on Flash; ``row_pages`` holds -1 and
+    the table entry points at the trash page so dispatch never sees it),
+    RES_INFLIGHT (a staging fetch is in flight; still invisible to
+    dispatch) or RES_STAGED (bytes gathered into one of the
+    ``geom.staging_pages`` staging device pages; the table entry points
+    there, so the kernels read it like any other page).  Cold candidates
+    (``cold_pages``) are oldest-first: only *full*, single-owner pages
+    outside the trailing hot window — a page adopted by another row or
+    pinned by the prefix index is never spilled.  Cold pages are
+    immutable (decode only appends at the tail), so the Flash copy is
+    authoritative: staging is a cache and eviction from it (``unstage``)
+    needs no writeback.
     """
 
     def __init__(self, geom: PoolGeometry, num_slots: int,
@@ -402,6 +469,15 @@ class KVPoolManager:
         self.prefix_hits = 0          # pages adopted copy-free (pages saved)
         self.prefix_misses = 0        # fresh prompt pages that found no match
         self.prefix_evictions = 0     # index pins dropped under pressure
+        # proactive spill: per-(row, logical page) residency + the staging
+        # reserve (LIFO free list of staging device pages; LRU over staged)
+        self.row_res: List[List[int]] = [[] for _ in range(num_slots)]
+        self._staging_free: List[int] = list(
+            range(geom.staging_base + geom.staging_pages - 1,
+                  geom.staging_base - 1, -1))
+        self._staged: Dict[Tuple[int, int], int] = {}   # (row, idx) -> page
+        self._stage_lru: List[Tuple[int, int]] = []     # oldest first
+        self.cold_spills = 0          # pages of running rows moved to Flash
 
     # --- accounting --------------------------------------------------------
     @property
@@ -429,12 +505,40 @@ class KVPoolManager:
         return self.geom.pages_for(tokens)
 
     def pages_held(self, row: int) -> int:
+        """Logical pages the row holds (DRAM + Flash-resident)."""
         return len(self.row_pages[row])
+
+    def dram_pages_held(self, row: int) -> int:
+        return sum(1 for p in self.row_pages[row] if p >= 0)
+
+    def flash_idxs(self, row: int) -> List[int]:
+        """Logical page indices of the row living off-DRAM (FLASH,
+        IN_FLIGHT or STAGED) — the pages a decode step must stage."""
+        return [i for i, s in enumerate(self.row_res[row])
+                if s != RES_DRAM]
+
+    def flash_pages_of(self, row: int) -> int:
+        return len(self.flash_idxs(row))
+
+    @property
+    def flash_page_count(self) -> int:
+        """Cold pages of *running* rows currently off-DRAM (preempted
+        rows' pages are tracked by the spill store, not here)."""
+        return sum(self.flash_pages_of(r) for r in range(self.num_slots))
+
+    @property
+    def staged_count(self) -> int:
+        return len(self._staged)
+
+    @property
+    def staging_free(self) -> int:
+        return len(self._staging_free)
 
     def residency(self) -> Dict[str, int]:
         return {"dram_pages": self.pages_in_use,
                 "free_pages": self.free_pages,
-                "flash_pages": self.spilled_pages}
+                "flash_pages": self.spilled_pages + self.flash_page_count,
+                "staged_pages": self.staged_count}
 
     # --- prefix index ------------------------------------------------------
     def _chain_keys(self, token_ids, salt: str) -> List[bytes]:
@@ -507,8 +611,8 @@ class KVPoolManager:
             if key in self._page_of_chain or i >= len(pages):
                 continue
             p = pages[i]
-            if p in self._chain_of_page:
-                continue
+            if p < 0 or p in self._chain_of_page:
+                continue          # Flash-resident pages are never indexed
             self._page_of_chain[key] = p
             self._chain_of_page[p] = key
             self.refcount[p] += 1
@@ -539,16 +643,24 @@ class KVPoolManager:
 
     # --- transitions -------------------------------------------------------
     def alloc_row(self, row: int, tokens: int, token_ids=None,
-                  salt: str = "") -> bool:
+                  salt: str = "", flash_idxs=()) -> bool:
         """Allocate the pages holding ``tokens`` for a fresh/restored row.
         All-or-nothing; fills the row's table prefix.  With ``token_ids``
         the longest indexed prompt prefix is adopted copy-free
         (refcount +1, no bytes move); ``row_shared[row]`` records the
-        adopted token count so the engine starts prefill past it."""
+        adopted token count so the engine starts prefill past it.
+        ``flash_idxs``: logical pages that stay Flash-resident (a
+        preempted row resuming with its cold pages left in Flash) — no
+        DRAM page is allocated for them and their table entries stay on
+        the trash page until staged."""
         assert not self.row_pages[row], f"row {row} still holds pages"
-        need = self.pages_for(tokens)
+        total = self.pages_for(tokens)
+        flash = set(int(i) for i in flash_idxs)
+        assert all(0 <= i < total for i in flash), (flash, total)
         shared = self._lookup_chain(token_ids, salt) \
             if token_ids is not None else []
+        assert not (shared and flash), "adoption and Flash restore never mix"
+        need = total - len(flash)
         # take the adoption references BEFORE reserving: _reserve may evict
         # index pins, and an adopted page must never reach the free list
         for p in shared:
@@ -565,9 +677,20 @@ class KVPoolManager:
         for p in fresh:
             assert self.refcount[p] == 0, f"page {p} on free list with refs"
             self.refcount[p] = 1
-        pages = shared + fresh
+        it = iter(shared + fresh)
+        pages, res = [], []
+        for i in range(total):
+            if i in flash:
+                pages.append(-1)
+                res.append(RES_FLASH)
+                self.table[row, i] = self.geom.trash_page
+            else:
+                p = next(it)
+                pages.append(p)
+                res.append(RES_DRAM)
+                self.table[row, i] = p
         self.row_pages[row] = pages
-        self.table[row, :need] = pages
+        self.row_res[row] = res
         self.row_shared[row] = len(shared) * self.geom.page_size
         self.prefix_hits += len(shared)
         if token_ids is not None:
@@ -577,7 +700,7 @@ class KVPoolManager:
     def ensure(self, row: int, pos: int) -> bool:
         """Allocate-on-append: make sure the page for an append at
         position ``pos`` exists.  False <=> the pool is out of pages (the
-        engine preempts a victim and retries)."""
+        engine spills cold pages / preempts a victim and retries)."""
         idx = int(pos) // self.geom.page_size
         held = self.row_pages[row]
         if idx < len(held):
@@ -589,28 +712,143 @@ class KVPoolManager:
         page = self._free.pop()
         self.refcount[page] = 1
         held.append(page)
+        self.row_res[row].append(RES_DRAM)
         self.table[row, idx] = page
         return True
 
     def free_row(self, row: int) -> int:
-        """Refcount-decrement reclaim: each of the row's pages loses one
-        reference; pages reaching zero return to the free list (indexed
-        prefix pages hold a pin, so they survive EOS and stay adoptable).
-        Copy-free either way — no bytes move.  Returns pages actually
-        freed."""
+        """Refcount-decrement reclaim: each of the row's DRAM pages loses
+        one reference; pages reaching zero return to the free list
+        (indexed prefix pages hold a pin, so they survive EOS and stay
+        adoptable).  Staged/in-flight pages release their staging slot;
+        Flash-resident pages are simply forgotten here — the engine drops
+        their blobs from the spill store by uid.  Copy-free either way —
+        no bytes move.  Returns pages actually freed."""
         pages = self.row_pages[row]
         freed = 0
-        for p in reversed(pages):
+        for i in reversed(range(len(pages))):
+            p = pages[i]
+            if p < 0:
+                if self.row_res[row][i] in (RES_STAGED, RES_INFLIGHT):
+                    key = (row, i)
+                    self._staging_free.append(self._staged.pop(key))
+                    self._stage_lru.remove(key)
+                continue
             self.refcount[p] -= 1
             assert self.refcount[p] >= 0, f"double free of page {p}"
             if self.refcount[p] == 0:
                 self._free.append(p)
                 freed += 1
         self.row_pages[row] = []
+        self.row_res[row] = []
         self.table[row, :] = self.geom.trash_page
         self.row_pos[row] = 0
         self.row_shared[row] = 0
         return freed
+
+    # --- proactive spill: residency transitions ----------------------------
+    def cold_pages(self, row: int, hot_pages: int = 1) -> List[int]:
+        """Spill candidates for one row, oldest first: *full* pages (the
+        partially-written tail never spills) outside the trailing
+        ``hot_pages`` window, owned by exactly this row (refcount 1 — a
+        page adopted by another row or pinned by the prefix index is
+        never spilled), currently DRAM-resident."""
+        ps = self.geom.page_size
+        full = int(self.row_pos[row]) // ps
+        out = []
+        for i in range(min(full - hot_pages, len(self.row_pages[row]))):
+            if self.row_res[row][i] != RES_DRAM:
+                continue
+            p = self.row_pages[row][i]
+            if self.refcount[p] != 1 or p in self._chain_of_page:
+                continue
+            out.append(i)
+        return out
+
+    def spill_page(self, row: int, idx: int) -> int:
+        """DRAM -> FLASH for one cold page.  The caller must have written
+        the page's bytes to the spill store already (the DRAM page is
+        reusable the moment this returns).  The table entry flips to the
+        trash page — a Flash-resident page is never visible to dispatch.
+        Returns the freed physical page id."""
+        assert self.row_res[row][idx] == RES_DRAM, (row, idx)
+        p = self.row_pages[row][idx]
+        assert self.refcount[p] == 1 and p not in self._chain_of_page, \
+            f"page {p} is shared/pinned — never spilled while adopted"
+        self.refcount[p] = 0
+        self._free.append(p)
+        self.row_pages[row][idx] = -1
+        self.row_res[row][idx] = RES_FLASH
+        self.table[row, idx] = self.geom.trash_page
+        self.cold_spills += 1
+        return p
+
+    def begin_stage(self, row: int, idx: int) -> Optional[int]:
+        """FLASH -> IN_FLIGHT: claim a staging device page for a cold
+        page (None <=> staging reserve exhausted — evict via
+        ``stage_victim``/``unstage`` first).  The table entry stays on the
+        trash page until ``commit_stage``: an in-flight page is never
+        visible to dispatch.  Re-staging an already-STAGED page is an LRU
+        touch and returns its staging page."""
+        key = (row, idx)
+        if self.row_res[row][idx] == RES_STAGED:
+            self._stage_lru.remove(key)
+            self._stage_lru.append(key)
+            return self._staged[key]
+        assert self.row_res[row][idx] == RES_FLASH, (row, idx)
+        if not self._staging_free:
+            return None
+        sid = self._staging_free.pop()
+        self._staged[key] = sid
+        self._stage_lru.append(key)
+        self.row_res[row][idx] = RES_INFLIGHT
+        return sid
+
+    def commit_stage(self, row: int, idx: int) -> None:
+        """IN_FLIGHT -> STAGED: the bytes landed in the staging page —
+        only now does the table entry point at it."""
+        assert self.row_res[row][idx] == RES_INFLIGHT, (row, idx)
+        self.row_res[row][idx] = RES_STAGED
+        self.table[row, idx] = self._staged[(row, idx)]
+
+    def unstage(self, row: int, idx: int) -> None:
+        """STAGED -> FLASH: evict a page from the staging cache.  No
+        writeback — cold pages are immutable, the Flash copy is the
+        authority."""
+        key = (row, idx)
+        assert self.row_res[row][idx] == RES_STAGED, \
+            f"cannot evict in-flight page {key}"
+        self._staging_free.append(self._staged.pop(key))
+        self._stage_lru.remove(key)
+        self.row_res[row][idx] = RES_FLASH
+        self.table[row, idx] = self.geom.trash_page
+
+    def stage_victim(self, protect) -> Optional[Tuple[int, int]]:
+        """LRU-oldest staged page not in ``protect`` (the set of pages
+        the current decode wave needs resident)."""
+        for key in self._stage_lru:
+            if key not in protect \
+                    and self.row_res[key[0]][key[1]] == RES_STAGED:
+                return key
+        return None
+
+    def restore_page(self, row: int, idx: int) -> int:
+        """FLASH/STAGED -> DRAM: give the page a pool page again (the
+        caller writes the bytes back after).  -1 <=> no DRAM page could
+        be reserved."""
+        st = self.row_res[row][idx]
+        assert st in (RES_FLASH, RES_STAGED), (row, idx, st)
+        if st == RES_STAGED:
+            self.unstage(row, idx)
+        if not self._reserve(1):
+            self.alloc_failures += 1
+            return -1
+        p = self._free.pop()
+        self.refcount[p] = 1
+        self.row_pages[row][idx] = p
+        self.row_res[row][idx] = RES_DRAM
+        self.table[row, idx] = p
+        return p
 
     def device_table(self) -> Array:
         return jnp.asarray(self.table)

@@ -262,12 +262,20 @@ class ExecutionPlan:
         return self.matmuls[key]
 
     def kv_pool_geometry(self, cfg, max_seq: int, max_slots: int,
-                         dram_budget_bytes: Optional[int] = None
+                         dram_budget_bytes: Optional[int] = None,
+                         staging_pages: Optional[int] = None
                          ) -> kv_pool.PoolGeometry:
         """Paged-KV pool geometry (the plan owns it, like tile shapes):
         page size from the lane grid, page inventory from the DRAM budget
         — clamped to [one full row, full per-slot reservation].  Pages
-        beyond the budget live on Flash via the engine's spill tier."""
+        beyond the budget live on Flash via the engine's spill tier.
+
+        ``staging_pages`` (None => plan default) sizes the DRAM staging
+        reserve for the proactive spill tier: big enough that any single
+        row can stage all its spillable cold pages for one decode wave
+        (``pages_per_row - 2``: the tail page and one hot page never
+        spill), floored at 2 so even tiny tables stage with overlap.
+        Pass 0 to disable the reserve (no proactive spill)."""
         ps = kv_page_size(max_seq)
         ppr = -(-max_seq // ps)
         if dram_budget_bytes is None:
@@ -276,8 +284,34 @@ class ExecutionPlan:
             pb = kv_page_bytes(cfg, ps)
             num = dram_budget_bytes // pb if pb else max_slots * ppr
         num = max(min(int(num), max_slots * ppr), ppr)
+        if staging_pages is None:
+            staging_pages = max(2, ppr - 2)
         return kv_pool.PoolGeometry(page_size=ps, num_pages=num,
-                                    pages_per_row=ppr)
+                                    pages_per_row=ppr,
+                                    staging_pages=int(staging_pages))
+
+    def kv_spill_policy(self, cfg, geom: kv_pool.PoolGeometry,
+                        max_slots: int,
+                        flash_budget_bytes: Optional[int] = None
+                        ) -> kv_pool.SpillPolicy:
+        """Proactive-spill watermarks + budgets, owned by the plan next to
+        the pool geometry.  The engine spills cold pages of running rows
+        when the free list drops below ``low_watermark`` (refilling to
+        ``high_watermark``), keeps the last ``hot_pages`` full pages of
+        every row in DRAM, and never puts more than
+        ``flash_budget_pages`` on Flash (default: the full per-slot
+        reservation — Flash is the cheap tier)."""
+        if flash_budget_bytes is None:
+            budget = max_slots * geom.pages_per_row
+        else:
+            pb = kv_page_bytes(cfg, geom.page_size)
+            budget = flash_budget_bytes // pb if pb else 0
+        low = max(1, geom.num_pages // 8)
+        high = max(low, geom.num_pages // 4)
+        return kv_pool.SpillPolicy(
+            staging_pages=geom.staging_pages, hot_pages=1,
+            low_watermark=low, high_watermark=high,
+            flash_budget_pages=int(budget))
 
 
 def placement_for(cfg, dram_budget_bytes: Optional[int] = None

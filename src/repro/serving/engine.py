@@ -67,6 +67,14 @@ class EngineStats:
     # paged-KV spill tier: pool pages moved to / back from Flash
     spilled_pages: int = 0
     restored_pages: int = 0
+    # proactive spill of running rows: cold pages moved to Flash while the
+    # row keeps decoding, and the staging-gather accounting (a "hit" is a
+    # needed cold page already staged or served through the prefetch
+    # pipeline; a "miss" is a synchronous Flash read)
+    cold_spilled_pages: int = 0
+    flash_page_hits: int = 0
+    flash_page_misses: int = 0
+    flash_hit_rates: List[float] = dataclasses.field(default_factory=list)
     # prefix sharing: prompt tokens adopted from the page index (never
     # recomputed) and prompt chunks run by the unified step
     shared_prompt_tokens: int = 0
@@ -81,6 +89,13 @@ class EngineStats:
     @property
     def decode_tps(self) -> float:
         return self.decode_tokens / self.decode_s if self.decode_s else 0.0
+
+    @property
+    def flash_hit_rate(self) -> float:
+        """Aggregate staging hit rate for the proactive spill tier (1.0
+        when no page was ever cold)."""
+        total = self.flash_page_hits + self.flash_page_misses
+        return self.flash_page_hits / total if total else 1.0
 
     def ttft(self, p: float = 50.0) -> float:
         return percentile([r.ttft_s for r in self.requests], p)
@@ -264,7 +279,19 @@ class EngineLoop:
         (hybrid_storage.PageSpillStore) and restores them page-exact on
         resume, so greedy decoding is bitwise-unaffected.  A row evicted
         *mid-prefill* is simply freed and requeued (recomputing a partial
-        prompt is cheaper than round-tripping it through Flash).
+        prompt is cheaper than round-tripping it through Flash);
+      * proactive spill (paper Fig. 2 at page granularity): *running*
+        rows' cold prompt pages — oldest, single-owner, outside the hot
+        tail — move to Flash under page pressure while the row keeps
+        decoding.  Before the paged kernels run, each decode step gathers
+        the Flash-resident pages of the rows it advances into a small
+        DRAM *staging reserve* (plan-owned geometry), with layer-ahead
+        prefetch overlapping the Flash reads against the device writes;
+        the kernels only ever see DRAM page ids, and a page whose fetch
+        is still in flight is never visible to dispatch.  Admission may
+        oversubscribe DRAM by the spillable-cold headroom up to a
+        plan-owned Flash budget — the same DRAM pool carries strictly
+        longer total context.
 
     Per-request TTFT/TPOT/latency land in ``engine.stats.requests``.
     """
@@ -275,15 +302,14 @@ class EngineLoop:
                  dram_budget_bytes: Optional[int] = None,
                  prefill_chunk: int = 64,
                  prefill_token_budget: Optional[int] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 proactive_spill: bool = True,
+                 flash_budget_bytes: Optional[int] = None):
         cfg = engine.cfg
         assert not cfg.is_encdec, "continuous batching: decoder-only models"
         self.eng = engine
         self.cfg = cfg
         self.max_slots = max_slots
-        self.geom = engine.plan.kv_pool_geometry(
-            cfg, engine.max_seq, max_slots,
-            dram_budget_bytes=dram_budget_bytes)
         # multi-chunk prefill (and the pow2 chunk grid with its padded
         # final chunk) is only sound for full-cache attention stacks:
         # ring pages could recycle history a later chunk still needs, and
@@ -291,6 +317,20 @@ class EngineLoop:
         # the same paged path with one exact whole-prompt chunk.
         self._uniform = all(pat.kind == "attn" and pat.window == 0
                             for pats, _ in cfg.layer_plan() for pat in pats)
+        # proactive spill runs the decode in staging waves; recurrent
+        # (SSM/RWKV) state would advance once per wave, so those stacks
+        # keep the preempt-only spill tier (windowed ring appends are
+        # last-write-wins and masked, so attention-only stacks are safe)
+        self.proactive = proactive_spill and all(
+            pat.kind == "attn"
+            for pats, _ in cfg.layer_plan() for pat in pats)
+        self.geom = engine.plan.kv_pool_geometry(
+            cfg, engine.max_seq, max_slots,
+            dram_budget_bytes=dram_budget_bytes,
+            staging_pages=None if self.proactive else 0)
+        self.spill_policy = engine.plan.kv_spill_policy(
+            cfg, self.geom, max_slots,
+            flash_budget_bytes=flash_budget_bytes)
         self.prefill_chunk = prefill_chunk if self._uniform else None
         self.prefill_token_budget = (prefill_token_budget
                                      if prefill_token_budget is not None
@@ -301,7 +341,8 @@ class EngineLoop:
         self.spill = HS.PageSpillStore(engine.flash)
         self.scheduler = ContinuousScheduler(
             max_slots, engine.max_seq, token_budget=token_budget,
-            preempt_patience=preempt_patience, pool=self.pool)
+            preempt_patience=preempt_patience, pool=self.pool,
+            spill_headroom=self._spill_headroom if self.proactive else None)
         self.cache = T.init_paged_cache(cfg, max_slots, engine.max_seq,
                                         self.geom)
         self.logits = jnp.zeros((max_slots, cfg.padded_vocab_size),
@@ -316,6 +357,11 @@ class EngineLoop:
         # caught them between sampling and KV append)
         self._hold: set = set()
         self.peak_active = 0
+        # peak total KV pages held by running rows (DRAM + Flash): the
+        # oversubscription headline is peak_kv_pages > geom.num_pages
+        self.peak_kv_pages = 0
+        self._step_hits = 0
+        self._step_misses = 0
         self._decode = jax.jit(
             functools.partial(self._decode_impl, cfg, engine._ctx))
         self._chunk = jax.jit(
@@ -354,11 +400,14 @@ class EngineLoop:
         return self.eng._lora_for([req])
 
     # --- row snapshot / restore (the spill tier) ---------------------------
-    def _row_groups(self, slot: int, n_pages: int):
+    _KV_FIELDS = ("k_q", "k_scale", "k_zero", "v")
+
+    def _row_groups(self, slot: int, phys: np.ndarray):
         """Yield (group_name, leaf, snapshot_arrays) for every per-row
-        piece of decode state: pooled pages for full-attention layers, the
-        fixed ring for windowed layers, the row slice for SSM states."""
-        phys = np.asarray(self.pool.row_pages[slot][:n_pages], np.int64)
+        piece of decode state: pooled pages for full-attention layers
+        (only the DRAM-resident physical pages in ``phys`` — cold pages
+        already live on Flash), the fixed ring for windowed layers, the
+        row slice for SSM states."""
         for si, (patterns, _count) in enumerate(self.cfg.layer_plan()):
             for pi, _pat in enumerate(patterns):
                 leaf = self.cache["stacks"][si][pi]
@@ -367,49 +416,79 @@ class EngineLoop:
                     if leaf.window:
                         sl = slice(slot * leaf.ppw, (slot + 1) * leaf.ppw)
                         arrays = {f: np.asarray(getattr(leaf, f)[:, sl])
-                                  for f in ("k_q", "k_scale", "k_zero", "v")}
+                                  for f in self._KV_FIELDS}
                     else:
                         arrays = {f: np.asarray(getattr(leaf, f)[:, phys])
-                                  for f in ("k_q", "k_scale", "k_zero", "v")}
+                                  for f in self._KV_FIELDS}
                 else:
                     leaves = jax.tree.leaves(leaf)
                     arrays = {f"x{i}": np.asarray(x[:, slot:slot + 1])
                               for i, x in enumerate(leaves)}
                 yield group, leaf, arrays
 
+    def _pooled_groups(self):
+        """(stack, pattern, group_name, leaf) for every full-attention
+        page pool — the layer groups that carry per-page bytes (windowed
+        rings and SSM states are per-slot, never per-page)."""
+        for si, (patterns, _count) in enumerate(self.cfg.layer_plan()):
+            for pi, _pat in enumerate(patterns):
+                leaf = self.cache["stacks"][si][pi]
+                if isinstance(leaf, KP.PagedLayerKV) and not leaf.window:
+                    yield si, pi, f"s{si}p{pi}", leaf
+
     def _spill_row(self, slot: int, req: Request, pending: bool) -> None:
-        """Move a preempted row's pages to Flash and free its DRAM pages.
-        ``pending``: the row was evicted mid-step, after sampling but
-        before its token's KV append — the token replays through decode on
-        resume instead of carrying saved logits."""
+        """Move a preempted row's DRAM pages to Flash and free them.
+        Pages the proactive tier already spilled stay where they are —
+        their blobs are keyed by uid and survive the preemption; the
+        restore leaves them on Flash.  ``pending``: the row was evicted
+        mid-step, after sampling but before its token's KV append — the
+        token replays through decode on resume instead of carrying saved
+        logits."""
         n_kv = int(self.pool.row_pos[slot])
         n_pages = self.pool.pages_for(n_kv)
+        held = self.pool.row_pages[slot]
+        dram_idxs = [i for i in range(n_pages) if held[i] >= 0]
+        flash_idxs = [i for i in range(n_pages) if held[i] < 0]
+        phys = np.asarray([held[i] for i in dram_idxs], np.int64)
         groups = []
         for gi, (group, _leaf, arrays) in enumerate(
-                self._row_groups(slot, n_pages)):
+                self._row_groups(slot, phys)):
             self.spill.put(req.uid, group, arrays,
-                           pages=n_pages if gi == 0 else 0)
+                           pages=len(dram_idxs) if gi == 0 else 0)
             groups.append(group)
         self._spilled[req.uid] = {
             "n_kv": n_kv, "pending": pending, "groups": groups,
+            "dram_idxs": dram_idxs, "flash_idxs": flash_idxs,
             "logits": None if pending else np.asarray(self.logits[slot])}
+        req.spilled_flash_pages = len(flash_idxs)
         self.pool.free_row(slot)
         # count the pages written to Flash (free_row may also return a
         # boundary page ensure() pre-allocated this step but never filled)
-        self.eng.stats.spilled_pages += n_pages
+        self.eng.stats.spilled_pages += len(dram_idxs)
+        # residency accounting: the whole row now lives on Flash (its cold
+        # pages left flash_page_count when free_row cleared the row)
+        self.pool.spilled_pages += n_pages
         self.cache = T.free_slots(self.cache,
                                   jnp.asarray([slot], jnp.int32))
         self._hold.discard(slot)
 
     def _restore_into_slot(self, req: Request, slot: int, rec: dict) -> None:
-        """Bring a spilled row back page-exact: allocate fresh pages, read
-        each layer group from Flash (group-ahead prefetch overlapping the
-        device writes), and resume sampling from the saved logits — or
+        """Bring a spilled row back page-exact: allocate fresh DRAM pages
+        for the snapshot part (cold pages the proactive tier had already
+        spilled STAY on Flash — they rejoin through the staging reserve),
+        read each layer group from Flash (group-ahead prefetch overlapping
+        the device writes), and resume sampling from the saved logits — or
         hold the slot one step to replay a pending token through decode."""
         n_kv = rec["n_kv"]
-        ok = self.pool.alloc_row(slot, n_kv)
-        assert ok, "admission checked the pages were free"
-        phys = np.asarray(self.pool.row_pages[slot], np.int64)
+        flash_idxs = rec["flash_idxs"]
+        ok = self.pool.alloc_row(slot, n_kv, flash_idxs=flash_idxs)
+        while not ok and self._spill_one_cold(exclude={slot}):
+            ok = self.pool.alloc_row(slot, n_kv, flash_idxs=flash_idxs)
+        assert ok, "admission checked the pages were free/spillable"
+        req.spilled_flash_pages = 0
+        self.pool.spilled_pages -= self.pool.pages_for(n_kv)
+        phys = np.asarray([self.pool.row_pages[slot][i]
+                           for i in rec["dram_idxs"]], np.int64)
         groups = rec["groups"]
         self.spill.prefetch_async(req.uid, groups[0])
         gi = 0
@@ -422,7 +501,7 @@ class EngineLoop:
                 leaf = self.cache["stacks"][si][pi]
                 if isinstance(leaf, KP.PagedLayerKV):
                     fields = {}
-                    for f in ("k_q", "k_scale", "k_zero", "v"):
+                    for f in self._KV_FIELDS:
                         big = getattr(leaf, f)
                         val = jnp.asarray(arrays[f]).astype(big.dtype)
                         if leaf.window:
@@ -434,7 +513,7 @@ class EngineLoop:
                         fields[f] = big
                     leaf = KP.PagedLayerKV(**fields, window=leaf.window,
                                            key_bits=leaf.key_bits,
-                                           ppw=leaf.ppw)
+                                           ppw=leaf.ppw, staging=leaf.staging)
                 else:
                     flat, treedef = jax.tree.flatten(leaf)
                     flat = [jax.lax.dynamic_update_slice_in_dim(
@@ -448,13 +527,199 @@ class EngineLoop:
                           stacks=tuple(tuple(r) for r in new_stacks))
         self.cache["pos"] = self.cache["pos"].at[slot].set(n_kv)
         self.pool.row_pos[slot] = n_kv
-        self.spill.drop(req.uid)
-        self.eng.stats.restored_pages += self.pool.pages_held(slot)
+        # the row snapshot is consumed; page-granular cold blobs stay on
+        # Flash (the row's Flash-resident pages stage on demand)
+        self.spill.drop_groups(req.uid, groups)
+        self.eng.stats.restored_pages += len(rec["dram_idxs"])
         if rec["pending"]:
             self._hold.add(slot)
         else:
             self.logits = self.logits.at[slot].set(
                 jnp.asarray(rec["logits"]))
+
+    # --- proactive spill: cold pages of running rows -----------------------
+    def _cold_candidates(self) -> List:
+        """(logical_idx, slot) spill candidates over running decode rows,
+        oldest page first: DRAM-resident, full, single-owner pages outside
+        the hot tail, from rows with staging room left (a row's Flash
+        pages must fit the staging reserve for one decode wave), capped by
+        the plan's Flash budget."""
+        if not self.proactive:
+            return []
+        pol = self.spill_policy
+        budget_left = pol.flash_budget_pages - self.spill.pages_on_flash
+        if budget_left <= 0:
+            return []
+        out = []
+        for slot, req in enumerate(self.scheduler.running):
+            if req is None or slot in self._prefilling:
+                continue
+            room = pol.staging_pages - self.pool.flash_pages_of(slot)
+            if room <= 0:
+                continue
+            idxs = self.pool.cold_pages(slot, pol.hot_pages)[:room]
+            out.extend((i, slot) for i in idxs)
+        out.sort()
+        return out[:budget_left]
+
+    def _spill_headroom(self) -> int:
+        """Pages admission may oversubscribe DRAM by right now (the
+        scheduler calls this through ``_fits``)."""
+        return len(self._cold_candidates())
+
+    def _spill_cold_page(self, slot: int, idx: int) -> None:
+        """One cold page of a running row: snapshot every pooled layer
+        group's page bytes to Flash, then release the DRAM page.  The row
+        keeps decoding — the page rejoins each step through the staging
+        reserve."""
+        req = self.scheduler.running[slot]
+        phys = self.pool.row_pages[slot][idx]
+        for gi, (_si, _pi, group, leaf) in enumerate(self._pooled_groups()):
+            arrays = {f: np.asarray(getattr(leaf, f)[:, phys])
+                      for f in self._KV_FIELDS}
+            self.spill.put_page(req.uid, idx, group, arrays,
+                                count_page=(gi == 0))
+        self.pool.spill_page(slot, idx)
+        self.eng.stats.cold_spilled_pages += 1
+
+    def _spill_one_cold(self, exclude: set = frozenset()) -> bool:
+        """Spill the globally-oldest cold candidate; False when none is
+        eligible (callers fall back to full-row preemption)."""
+        for idx, slot in self._cold_candidates():
+            if slot not in exclude:
+                self._spill_cold_page(slot, idx)
+                return True
+        return False
+
+    def _proactive_spill(self) -> None:
+        """Watermark pump: when the free list drops below the plan's low
+        watermark, spill cold pages of running rows until the high
+        watermark (or the candidates run out)."""
+        if not self.proactive \
+                or self.pool.free_pages >= self.spill_policy.low_watermark:
+            return
+        while self.pool.free_pages < self.spill_policy.high_watermark \
+                and self._spill_one_cold():
+            pass
+
+    # --- decode-time staging: gather Flash pages for a wave ----------------
+    def _stage_wave(self, needed: List) -> None:
+        """Make every (slot, idx) in ``needed`` kernel-visible: already
+        STAGED pages are LRU-touched (staging-cache hits); FLASH pages
+        claim a staging device page (evicting LRU pages the wave doesn't
+        need), then their layer-group blobs stream in from Flash with
+        layer-ahead prefetch — while group g's bytes install on the
+        device, the worker is already reading group g+1 (and the next
+        page's first group).  Table entries flip to the staging page only
+        at commit: an in-flight page is never visible to dispatch."""
+        to_fetch = []
+        for slot, idx in needed:
+            if self.pool.row_res[slot][idx] == KP.RES_STAGED:
+                self.pool.begin_stage(slot, idx)       # LRU touch
+                self._step_hits += 1
+                self.eng.stats.flash_page_hits += 1
+            else:
+                to_fetch.append((slot, idx))
+        if not to_fetch:
+            return
+        groups = [g for _si, _pi, g, _leaf in self._pooled_groups()]
+        uid_of = {slot: self.scheduler.running[slot].uid
+                  for slot, _ in to_fetch}
+        # page-ahead: the first group of every needed page is requested up
+        # front, so the worker reads while we claim staging slots
+        for slot, idx in to_fetch:
+            self.spill.prefetch_page(uid_of[slot], idx, groups[0])
+        protect = set(needed)
+        updates: Dict[tuple, list] = {}
+        for n, (slot, idx) in enumerate(to_fetch):
+            sid = self.pool.begin_stage(slot, idx)
+            while sid is None:
+                victim = self.pool.stage_victim(protect)
+                assert victim is not None, \
+                    "staging reserve cannot hold the wave (planner bug)"
+                self.pool.unstage(*victim)
+                sid = self.pool.begin_stage(slot, idx)
+            uid = uid_of[slot]
+            m0 = self.spill.prefetch_misses
+            for gi, group in enumerate(groups):
+                # layer-ahead: while this group's blob is consumed, the
+                # worker already reads group g+1 (every page's group 0 was
+                # requested up front)
+                if gi + 1 < len(groups):
+                    self.spill.prefetch_page(uid, idx, groups[gi + 1])
+                arrays = self.spill.fetch_page(uid, idx, group)
+                updates.setdefault(group, []).append((sid, arrays))
+            # page-granular accounting: a page whose every blob came
+            # through the prefetch pipeline is a hit; any synchronous
+            # Flash read makes it a miss
+            if self.spill.prefetch_misses > m0:
+                self._step_misses += 1
+                self.eng.stats.flash_page_misses += 1
+            else:
+                self._step_hits += 1
+                self.eng.stats.flash_page_hits += 1
+        new_stacks = [list(row) for row in self.cache["stacks"]]
+        for si, pi, group, leaf in list(self._pooled_groups()):
+            if group not in updates:
+                continue
+            # one batched scatter per field (not one whole-array copy per
+            # staged page): all the wave's pages land in a single .set
+            sids = jnp.asarray([sid for sid, _ in updates[group]], jnp.int32)
+            fields = {}
+            for f in self._KV_FIELDS:
+                big = getattr(leaf, f)
+                vals = np.stack([np.asarray(arrays[f])
+                                 for _, arrays in updates[group]], axis=1)
+                fields[f] = big.at[:, sids].set(
+                    jnp.asarray(vals).astype(big.dtype))
+            new_stacks[si][pi] = KP.PagedLayerKV(
+                **fields, window=leaf.window, key_bits=leaf.key_bits,
+                ppw=leaf.ppw, staging=leaf.staging)
+        self.cache = dict(self.cache,
+                          stacks=tuple(tuple(r) for r in new_stacks))
+        for slot, idx in to_fetch:
+            self.pool.commit_stage(slot, idx)
+
+    def _plan_waves(self, slots: List[int]) -> List[List[int]]:
+        """Partition the decodable slots into staging waves: each wave's
+        total Flash-resident pages fit the staging reserve at once.  Rows
+        with no Flash pages ride along in the first wave for free — the
+        no-spill steady state is exactly one wave (one decode call, as
+        before)."""
+        flashy = {s: self.pool.flash_pages_of(s) for s in slots}
+        plain = [s for s in slots if not flashy[s]]
+        cap = max(1, self.spill_policy.staging_pages)
+        waves: List[List[int]] = []
+        cur: List[int] = []
+        load = 0
+        for s in sorted(s for s in slots if flashy[s]):
+            n = flashy[s]
+            assert n <= cap, \
+                f"row {s} holds {n} Flash pages > staging reserve {cap}"
+            if cur and load + n > cap:
+                waves.append(cur)
+                cur, load = [], 0
+            cur.append(s)
+            load += n
+        if cur:
+            waves.append(cur)
+        if not waves:
+            return [plain]
+        waves[0] = plain + waves[0]
+        return waves
+
+    def _upload_table(self, visible) -> None:
+        """Upload the page table with every slot OUTSIDE ``visible``
+        masked to the trash page: rows mid-prefill, rows waiting for a
+        later staging wave (their Flash pages are not resident yet) and
+        empty rows are never visible to dispatch, and their ride-along
+        appends land in the trash."""
+        table = self.pool.table
+        hidden = [s for s in range(self.max_slots) if s not in visible]
+        if hidden:
+            table = table.copy()
+            table[hidden] = self.geom.trash_page
+        self.cache["table"] = jnp.asarray(table)
 
     # --- admission + the unified prefill step ------------------------------
     def _admit_into_slot(self, req: Request, slot: int) -> None:
@@ -470,7 +735,14 @@ class EngineLoop:
         ok = self.pool.alloc_row(slot, t,
                                  token_ids=toks if sharing else None,
                                  salt=req.adapter or "")
-        assert ok, "admission checked the pages were free"
+        while not ok and self._spill_one_cold(exclude={slot}):
+            # admission oversubscribed DRAM against the spillable-cold
+            # headroom — deliver it: cold pages of running rows move to
+            # Flash until the prompt's pages fit
+            ok = self.pool.alloc_row(slot, t,
+                                     token_ids=toks if sharing else None,
+                                     salt=req.adapter or "")
+        assert ok, "admission checked the pages were free/spillable"
         shared = int(self.pool.row_shared[slot])
         self.eng.stats.shared_prompt_tokens += shared
         # prompt KV goes straight into the allocated pages, chunk by
@@ -555,12 +827,12 @@ class EngineLoop:
         self.cache = T.free_slots(self.cache, jnp.asarray([vslot], jnp.int32))
 
     def _pick_page_victim(self, exclude: set) -> Optional[Request]:
-        """Page pressure: evict the row holding the most pool pages (frees
-        the most DRAM per spill), excluding the row asking for the page
-        and rows still prefilling (those restart instead of spilling).
-        Rows restored this very step (``_hold``) only lose their pages as
-        a last resort — re-spilling one before its pending decode would
-        round-trip Flash for zero tokens of progress."""
+        """Page pressure: evict the row holding the most DRAM pool pages
+        (frees the most DRAM per spill), excluding the row asking for the
+        page and rows still prefilling (those restart instead of
+        spilling).  Rows restored this very step (``_hold``) only lose
+        their pages as a last resort — re-spilling one before its pending
+        decode would round-trip Flash for zero tokens of progress."""
         cands = [r for r in self.scheduler.running
                  if r is not None and r.slot not in exclude
                  and r.slot not in self._prefilling]
@@ -568,7 +840,7 @@ class EngineLoop:
         cands = fresh or cands
         if not cands:
             return None
-        return max(cands, key=lambda r: (self.pool.pages_held(r.slot),
+        return max(cands, key=lambda r: (self.pool.dram_pages_held(r.slot),
                                          len(r.generated)))
 
     def close(self) -> None:
@@ -618,8 +890,15 @@ class EngineLoop:
             if preempted is not None:
                 freed_slot, victim = preempted
                 self._spill_row(freed_slot, victim, pending=False)
+            # proactive spill ahead of demand: keep the free list above
+            # the plan's low watermark by moving running rows' cold pages
+            # to Flash (decode stages them back page-granularly)
+            self._proactive_spill()
             for slot, req in sched.admit():
                 self._admit_into_slot(req, slot)
+            self.peak_kv_pages = max(
+                self.peak_kv_pages,
+                sum(self.pool.pages_held(s) for s in range(self.max_slots)))
             # the unified step, phase 1: pending prompt chunks go straight
             # into pool pages under the per-step token budget (rows whose
             # final chunk lands here decode below, in the same step)
@@ -653,8 +932,11 @@ class EngineLoop:
                     sched.finish(req)
                     # refcount-decrement reclaim: private pages return to
                     # the free list; indexed prefix pages survive EOS for
-                    # the next request with the same prompt head
+                    # the next request with the same prompt head.  Cold
+                    # blobs the proactive tier parked on Flash are dropped
+                    # with the request.
                     self.pool.free_row(slot)
+                    self.spill.drop(req.uid)
                     self.cache = T.free_slots(
                         self.cache, jnp.asarray([slot], jnp.int32))
                     eng.stats.requests.append(RequestStats(
@@ -669,13 +951,18 @@ class EngineLoop:
             # allocate-on-append: every surviving decodable row appends one
             # token at its position this decode — rows crossing a page
             # boundary take a page from the free list (index pins are
-            # evicted first), and when the pool still runs dry the biggest
-            # page-holder is spilled to Flash (mid-prefill rows restart
-            # instead — cheaper than a Flash round trip)
+            # evicted first).  When the pool still runs dry, cold pages of
+            # running rows spill FIRST (the row keeps decoding through the
+            # staging reserve — no token of progress is lost), then the
+            # biggest page-holder is preempted wholesale, and only then do
+            # mid-prefill rows restart (cheaper than a Flash round trip,
+            # but it does forfeit their partial prompt work)
             for slot, req in enumerate(sched.running):
                 if req is None or slot in self._prefilling:
                     continue
                 while not self.pool.ensure(slot, int(self.pool.row_pos[slot])):
+                    if self._spill_one_cold():
+                        continue
                     victim = self._pick_page_victim(exclude={slot})
                     if victim is None:
                         pref = [r for r in sched.running
@@ -690,11 +977,15 @@ class EngineLoop:
                     sched.evict(victim)
                     self._spill_row(vslot, victim, pending=True)
 
-            # the unified step, phase 2 — batched decode: every decodable
-            # row advances at its own pos (hold rows feed their pending
-            # token — same shape, no re-jit).  Rows still mid-prefill ride
-            # along inactive; their table rows are masked to the trash
-            # page so the decode append cannot touch their prompt pages.
+            # the unified step, phase 2 — batched decode in staging waves:
+            # every decodable row advances at its own pos (hold rows feed
+            # their pending token — same shape, no re-jit).  Rows whose
+            # cold pages sit on Flash first gather them into the staging
+            # reserve (layer-ahead prefetch); when the reserve cannot hold
+            # everyone's cold pages at once the decode runs in waves, each
+            # wave's rows active while the others ride along masked to the
+            # trash page (mid-prefill rows always are) — one wave, one
+            # decode call, in the no-spill steady state.
             ids = np.zeros((self.max_slots, 1), np.int64)
             active = np.zeros((self.max_slots,), bool)
             for slot, req in enumerate(sched.running):
@@ -707,15 +998,34 @@ class EngineLoop:
                 step += 1
                 continue
             embeds = eng.embed(ids)
-            table = self.pool.table
-            if self._prefilling:
-                table = table.copy()
-                table[sorted(self._prefilling)] = self.geom.trash_page
-            self.cache["table"] = jnp.asarray(table)
-            self.logits, self.cache = self._decode(
-                eng.params, embeds, self.cache, self._slot_lora(),
-                jnp.asarray(active))
-            for slot in np.nonzero(active)[0]:
+            act_slots = [int(s) for s in np.nonzero(active)[0]]
+            flash_needs = sum(self.pool.flash_pages_of(s) for s in act_slots)
+            self._step_hits = self._step_misses = 0
+            waves = self._plan_waves(act_slots)
+            for wave in waves:
+                needed = [(s, i) for s in wave
+                          for i in self.pool.flash_idxs(s)]
+                if needed:
+                    self._stage_wave(needed)
+                self._upload_table(visible=set(wave))
+                wmask = np.zeros((self.max_slots,), bool)
+                wmask[wave] = True
+                am = jnp.asarray(wmask)
+                logits_w, self.cache = self._decode(
+                    eng.params, embeds, self.cache, self._slot_lora(), am)
+                if len(waves) == 1:
+                    # the no-spill steady state: one wave covers every
+                    # active row — keep the old direct assignment (empty
+                    # rows' logits are never read)
+                    self.logits = logits_w
+                else:
+                    self.logits = jnp.where(am[:, None], logits_w,
+                                            self.logits)
+            if flash_needs:
+                total = self._step_hits + self._step_misses
+                eng.stats.flash_hit_rates.append(
+                    self._step_hits / total if total else 1.0)
+            for slot in act_slots:
                 self.pool.row_pos[slot] += 1
             eng.stats.decode_tokens += int(active.sum())
             step += 1

@@ -39,6 +39,10 @@ class Request:
     admit_step: int = -1               # step of (latest) admission
     finish_step: int = -1              # step the request completed
     preemptions: int = 0               # times evicted and requeued
+    # pages a preempted request left Flash-resident: its resume allocates
+    # DRAM only for the rest (cold pages stay on Flash and are staged on
+    # demand), so admission must not charge them
+    spilled_flash_pages: int = 0
     # per-request latency stats (wall-clock, filled by EngineLoop)
     arrival_t: float = 0.0
     first_token_t: float = 0.0
@@ -140,13 +144,18 @@ class ContinuousScheduler:
     def __init__(self, max_slots: int, max_seq: int,
                  token_budget: Optional[int] = None,
                  preempt_patience: int = 0,
-                 pool=None):
+                 pool=None, spill_headroom=None):
         assert max_slots >= 1
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.token_budget = token_budget or max_slots * max_seq
         self.preempt_patience = preempt_patience
         self.pool = pool           # kv_pool.KVPoolManager (or None: dense)
+        # proactive spill: callable -> pages the engine could free right
+        # now by spilling cold pages of running rows to Flash (bounded by
+        # the plan's Flash budget).  Admission may oversubscribe DRAM by
+        # this much — the engine spills before it allocates.
+        self.spill_headroom = spill_headroom
         self.waiting: List[Request] = []
         self.running: List[Optional[Request]] = [None] * max_slots
         self.step = 0
@@ -170,12 +179,16 @@ class ContinuousScheduler:
         prefix pages another running row still holds (refcount >= 2) are
         adopted copy-free and cost the admission nothing.  Index-only
         pins stay charged — they sit inside ``available_pages``, and
-        adoption makes them non-reclaimable."""
+        adoption makes them non-reclaimable.  A resumed request's pages
+        still on Flash are not charged either: its restore allocates DRAM
+        only for the rest."""
         need = self.pool.pages_for(len(req.context_tokens) + 1)
         if not req.generated:
             need -= self.pool.probe_admission_discount(
                 req.prompt_tokens, salt=req.adapter or "")
-        return need
+        else:
+            need -= req.spilled_flash_pages
+        return max(need, 0)
 
     def _fits(self, req: Request, pending_pages: int = 0) -> bool:
         # legacy worst-case reservation (the explicit token_budget keeps
@@ -185,10 +198,15 @@ class ContinuousScheduler:
         if self._committed_tokens() + need > self.token_budget:
             return False
         if self.pool is not None:
-            # available = free list + evictable index pins: cached
-            # prefixes are dropped before they ever block new work
-            return (self.need_pages(req)
-                    <= self.pool.available_pages - pending_pages)
+            # available = free list + evictable index pins (cached
+            # prefixes are dropped before they ever block new work) +
+            # cold pages of running rows the engine can spill to Flash
+            # (admission oversubscribes DRAM up to the plan's Flash
+            # budget; the engine spills before it allocates)
+            avail = self.pool.available_pages - pending_pages
+            if self.spill_headroom is not None:
+                avail += self.spill_headroom()
+            return self.need_pages(req) <= avail
         return True
 
     # --- transitions -------------------------------------------------------

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.configs import registry
 from repro.core import hybrid_storage as HS
@@ -73,7 +74,125 @@ def test_manager_alloc_ensure_free_reclaim():
     assert (mgr.table[1] == geom.trash_page).all()
     assert mgr.ensure(0, 48)
     assert mgr.residency() == {"dram_pages": 4, "free_pages": 2,
-                               "flash_pages": 0}
+                               "flash_pages": 0, "staged_pages": 0}
+
+
+# ---------------------------------------------------------------------------
+# residency random walk (refcounts + DRAM/FLASH/IN_FLIGHT/STAGED states)
+# ---------------------------------------------------------------------------
+
+def _check_residency_invariants(mgr: KP.KVPoolManager):
+    """The full allocator contract: exact refcounts (no double-free, no
+    leak), one residency state per logical page (never DRAM *and* Flash),
+    staging slots conserved, and FLASH/IN_FLIGHT pages invisible to
+    dispatch (table on trash)."""
+    geom = mgr.geom
+    free = set(mgr._free)
+    assert len(free) == len(mgr._free), "free list holds a duplicate page"
+    held = [p for row in mgr.row_pages for p in row if p >= 0]
+    indexed = set(mgr._chain_of_page)
+    for p in range(geom.num_pages):
+        refs = held.count(p) + (1 if p in indexed else 0)
+        assert mgr.refcount[p] == refs, (p, mgr.refcount[p], refs)
+        assert (mgr.refcount[p] == 0) == (p in free)
+    # staging reserve never leaks and never double-books a slot
+    assert mgr.staging_free + mgr.staged_count == geom.staging_pages
+    slots = set(mgr._staged.values()) | set(mgr._staging_free)
+    assert len(slots) == geom.staging_pages
+    assert all(geom.staging_base <= s < geom.staging_base + geom.staging_pages
+               for s in slots)
+    assert sorted(mgr._stage_lru) == sorted(mgr._staged)
+    for row in range(mgr.num_slots):
+        pages, res = mgr.row_pages[row], mgr.row_res[row]
+        assert len(pages) == len(res)
+        for i, (p, state) in enumerate(zip(pages, res)):
+            if state == KP.RES_DRAM:
+                # a DRAM page never has a second (Flash/staged) residency
+                assert p >= 0 and mgr.table[row, i] == p
+                assert (row, i) not in mgr._staged
+            else:
+                assert p == -1, "off-DRAM page still owns a pool page"
+                if state == KP.RES_STAGED:
+                    assert mgr.table[row, i] == mgr._staged[(row, i)]
+                else:
+                    # FLASH / IN_FLIGHT: never visible to dispatch
+                    assert mgr.table[row, i] == geom.trash_page
+                    if state == KP.RES_FLASH:
+                        assert (row, i) not in mgr._staged
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_residency_invariants_random_walk(seed):
+    """Property: random alloc/adopt/register/ensure/free interleaved with
+    spill/stage/commit/unstage/restore/stage-evict sequences never
+    double-free a page, never give a page two residencies, never spill a
+    pinned/adopted page, and never leak a staging slot."""
+    rng = np.random.default_rng(seed)
+    geom = KP.PoolGeometry(page_size=4, num_pages=12, pages_per_row=6,
+                           staging_pages=3)
+    mgr = KP.KVPoolManager(geom, num_slots=4)
+    prompts = {}
+    vocab = [list(rng.integers(1, 50, int(rng.integers(1, 20))))
+             for _ in range(3)]       # small prompt set => real collisions
+    for _ in range(200):
+        op = rng.integers(0, 8)
+        row = int(rng.integers(0, 4))
+        if op == 0 and not mgr.row_pages[row]:            # alloc (maybe adopt)
+            toks = vocab[int(rng.integers(0, len(vocab)))]
+            if mgr.alloc_row(row, len(toks), token_ids=toks):
+                prompts[row] = toks
+                mgr.row_pos[row] = len(toks)
+        elif op == 1 and mgr.row_pages[row]:              # register prefix
+            mgr.register_prefix(row, prompts[row])
+        elif op == 2 and 0 < len(mgr.row_pages[row]) < geom.pages_per_row:
+            if mgr.ensure(row, len(mgr.row_pages[row]) * geom.page_size):
+                mgr.row_pos[row] = len(mgr.row_pages[row]) * geom.page_size
+        elif op == 3 and mgr.row_pages[row]:              # free (refcount dec)
+            mgr.free_row(row)
+            prompts.pop(row, None)
+        elif op == 4 and mgr.row_pages[row]:              # cold spill
+            cold = mgr.cold_pages(row, hot_pages=1)
+            # the selector never offers a pinned or adopted page
+            for i in cold:
+                p = mgr.row_pages[row][i]
+                assert mgr.refcount[p] == 1
+                assert p not in mgr._chain_of_page
+            if cold:
+                mgr.spill_page(row, cold[0])
+        elif op == 5:                                     # stage (+ commit)
+            flash = [i for i, s in enumerate(mgr.row_res[row])
+                     if s == KP.RES_FLASH]
+            if flash:
+                idx = flash[0]
+                sid = mgr.begin_stage(row, idx)
+                if sid is None:
+                    victim = mgr.stage_victim(protect=set())
+                    if victim is None:
+                        continue
+                    mgr.unstage(*victim)
+                    sid = mgr.begin_stage(row, idx)
+                # in-flight window: the table must still hide the page
+                assert mgr.table[row, idx] == geom.trash_page
+                _check_residency_invariants(mgr)
+                mgr.commit_stage(row, idx)
+        elif op == 6 and mgr._staged:                     # stage-evict
+            victim = mgr.stage_victim(protect=set())
+            if victim is not None:
+                mgr.unstage(*victim)
+        elif op == 7:                                     # restore to DRAM
+            off = [i for i, s in enumerate(mgr.row_res[row])
+                   if s in (KP.RES_FLASH, KP.RES_STAGED)]
+            if off:
+                mgr.restore_page(row, off[0])
+        _check_residency_invariants(mgr)
+    for row in range(4):
+        if mgr.row_pages[row]:
+            mgr.free_row(row)
+        _check_residency_invariants(mgr)
+    # all rows gone: the staging reserve is whole, only index pins remain
+    assert mgr.staging_free == geom.staging_pages
+    assert mgr.pages_in_use == len(mgr._chain_of_page)
 
 
 # ---------------------------------------------------------------------------
@@ -278,11 +397,15 @@ def _reference(ref_engine, req):
 def test_preemption_under_page_pressure_matches_reference(engine, ref_engine):
     """Satellite: when the *pool* (not the slot count) is the binding
     constraint, preempt-and-resume via the Flash spill tier stays
-    bitwise-equal to uninterrupted greedy decoding."""
+    bitwise-equal to uninterrupted greedy decoding.  (Proactive cold-page
+    spill is pinned off: it would sidestep the full-row preemption this
+    test exists to exercise — tests/test_proactive_spill.py covers the
+    cold-page path.)"""
     cfg = engine.cfg
     pb = RP.kv_page_bytes(cfg, RP.kv_page_size(engine.max_seq))
     # 5 pages: two requests peak at 3 pages each -> pressure mid-decode
-    loop = E.EngineLoop(engine, max_slots=2, dram_budget_bytes=5 * pb)
+    loop = E.EngineLoop(engine, max_slots=2, dram_budget_bytes=5 * pb,
+                        proactive_spill=False)
     assert loop.geom.num_pages == 5
     rng = np.random.default_rng(12)
     reqs = [Request(uid=i, prompt_tokens=list(rng.integers(1, 400, 8)),
