@@ -1,0 +1,127 @@
+"""Gateway goodput under Poisson arrivals: the streaming serving stack
+end-to-end (EngineService thread + incremental submit/step EngineLoop),
+driven by an open-loop load generator.
+
+Two scenarios:
+
+  * moderate load — Poisson arrivals sized well under engine capacity.
+    Figures of merit: *goodput* (new tokens of requests that finished
+    within the SLO, per wall second) and *SLO attainment* (fraction of
+    accepted requests meeting the SLO).  Both land in the BENCH summary
+    and are gated by compare_bench in CI.
+  * overload — a burst far beyond the bounded queue.  The gateway must
+    shed load with typed backpressure (QueueFullError -> the HTTP 429)
+    instead of queueing unboundedly; the figure of merit is that every
+    accepted request still finishes while the burst's overflow is
+    rejected at submit time, leaving no engine state behind.
+
+The SLO is per-request wall-clock completion latency (submit -> last
+token), measured on the request records the EngineLoop stamps — the same
+numbers the /v1/stats endpoint serves.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, is_smoke, record_fallbacks, summary
+from repro.configs import registry
+from repro.serving import engine as E
+from repro.serving import gateway as G
+from repro.serving import sampling as SM
+from repro.serving.scheduler import AdmissionError
+
+
+def poisson_gaps(rng, n, rate_rps):
+    return rng.exponential(1.0 / rate_rps, size=n)
+
+
+def drive(svc, prompts, sp, gaps, slo_s):
+    """Open-loop load gen: submit on the Poisson clock regardless of
+    completion progress, then collect every accepted stream.  Returns
+    (accepted request list, rejected count, wall seconds)."""
+    streams, rejected = [], 0
+    t0 = time.perf_counter()
+    for prompt, gap in zip(prompts, gaps):
+        time.sleep(gap)
+        try:
+            streams.append(svc.submit(prompt, sp, deadline_s=slo_s))
+        except AdmissionError:          # includes QueueFullError
+            rejected += 1
+    for st in streams:
+        st.collect(timeout=600.0)
+    wall = time.perf_counter() - t0
+    return [st.request for st in streams], rejected, wall
+
+
+def main() -> None:
+    smoke = is_smoke()
+    n, slots = (10, 2) if smoke else (24, 4)
+    d_new = 8 if smoke else 12
+    max_seq = 96 if smoke else 128
+    slo_s = 60.0                        # generous: CPU CI boxes jitter hard
+    rate_rps = 1.2 if smoke else 2.0    # moderate: well under capacity
+
+    cfg = registry.reduced(registry.get("qwen2-7b"))
+    eng = E.build_engine(cfg, key=jax.random.PRNGKey(0), max_seq=max_seq)
+    sp = SM.SamplingParams(temperature=0.0, max_new_tokens=d_new)
+    rng = np.random.default_rng(13)
+    prompts = [list(int(t) for t in rng.integers(1, cfg.vocab_size,
+                                                 int(rng.integers(4, 17))))
+               for _ in range(n)]
+
+    # --- moderate load: goodput under SLO ----------------------------------
+    with G.EngineService(E.EngineLoop(eng, max_slots=slots,
+                                      max_queue=4 * n)) as svc:
+        # warmup: same prompt shapes once, so jit compiles (per prefill
+        # bucket) stay out of the measured window
+        drive(svc, prompts, sp, [0.0] * n, slo_s)
+        n0 = len(eng.stats.requests)
+        reqs, rejected, wall = drive(
+            svc, prompts, sp, poisson_gaps(rng, n, rate_rps), slo_s)
+    lats = [r.finish_t - r.arrival_t for r in reqs]
+    good = [r for r, lat in zip(reqs, lats) if lat <= slo_s]
+    good_toks = sum(len(r.generated) for r in good)
+    all_toks = sum(len(r.generated) for r in reqs)
+    attainment = len(good) / max(len(reqs), 1)
+    p = E.percentile
+    emit("gateway_goodput", 1e6 / max(good_toks / wall, 1e-9),
+         f"{good_toks / wall:.1f} good tok/s @ rate={rate_rps}/s "
+         f"slo={slo_s}s attainment={attainment:.2f} rejected={rejected}")
+    emit("gateway_latency_p50", p(lats, 50) * 1e6,
+         f"p95={p(lats, 95):.3f}s over {len(reqs)} reqs")
+    summary("gateway_goodput_tps", good_toks / wall)
+    summary("gateway_throughput_tps", all_toks / wall)
+    summary("gateway_slo_attainment", attainment)
+    summary("gateway_latency_p95_s", p(lats, 95))
+    ttfts = [r.ttft_s for r in eng.stats.requests[n0:]
+             if r.ttft_s > 0] or [0.0]
+    summary("gateway_ttft_p95_s", p(ttfts, 95))
+
+    # --- overload: bounded-queue backpressure ------------------------------
+    # a burst of 3x the queue bound lands at once; the overflow must be
+    # rejected at submit (the HTTP 429), and every accepted request must
+    # still finish
+    q_bound = 2 if smoke else 4
+    with G.EngineService(E.EngineLoop(eng, max_slots=slots,
+                                      max_queue=q_bound)) as svc:
+        burst = prompts * 3
+        reqs_o, rejected_o, wall_o = drive(
+            svc, burst, sp, [0.0] * len(burst), slo_s)
+    all_done = all(r.done for r in reqs_o)
+    emit("gateway_overload", wall_o * 1e6 / max(len(reqs_o), 1),
+         f"accepted={len(reqs_o)} rejected={rejected_o} of {len(burst)} "
+         f"burst @ queue_bound={q_bound}; all_accepted_finished={all_done}")
+    summary("gateway_overload_accepted", len(reqs_o))
+    summary("gateway_rejected", rejected_o)
+    summary("gateway_overload_all_finished", 1.0 if all_done else 0.0)
+
+    record_fallbacks("gateway", eng.dispatch)
+
+
+if __name__ == "__main__":
+    main()

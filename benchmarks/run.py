@@ -10,6 +10,7 @@ Each emits ``name,us_per_call,derived`` CSV rows:
   bench_quant_accuracy       — §4.2 (quantization error by scheme)
   bench_geometry             — §5.4 (Region fusion memory-op reduction)
   bench_continuous_batching  — continuous vs slot-synchronous serving
+  bench_gateway              — streaming gateway goodput under Poisson load
 
 Flags:
   --smoke        reduced configurations (CI benchmark-smoke job)
@@ -20,6 +21,7 @@ import argparse
 import importlib
 import json
 import os
+import platform
 import sys
 import traceback
 
@@ -37,6 +39,7 @@ MODULES = [
     "benchmarks.bench_quant_accuracy",
     "benchmarks.bench_prefill_decode",
     "benchmarks.bench_continuous_batching",
+    "benchmarks.bench_gateway",
     # last: the oversubscribed-decode scenario builds whole engines, and
     # its jit/alloc churn must not perturb the throughput numbers above
     "benchmarks.bench_kv_flash",
@@ -68,18 +71,22 @@ def main() -> None:
             failed.append(mod)
             traceback.print_exc()
     if args.json:
+        # wall-clock numbers are only comparable across runs on similar
+        # hosts; record enough to tell a hardware delta from a regression
+        host = {"cpus": os.cpu_count(), "machine": platform.machine(),
+                "python": platform.python_version()}
         with open(args.json, "w") as f:
             json.dump({"smoke": args.smoke, "failed": failed,
-                       "rows": common.ROWS,
+                       "host": host, "rows": common.ROWS,
                        "fallbacks": common.FALLBACKS}, f, indent=2)
         print(f"[run] wrote {len(common.ROWS)} rows "
               f"({len(common.FALLBACKS)} dispatch fallbacks) to {args.json}",
               file=sys.stderr)
         # repo-root trajectory artifact: headline numbers per PR
-        bench_path = os.path.join(_ROOT, "BENCH_pr5.json")
+        bench_path = os.path.join(_ROOT, "BENCH_pr6.json")
         with open(bench_path, "w") as f:
-            json.dump({"suite": "mnn-llm-repro", "pr": 5,
-                       "smoke": args.smoke,
+            json.dump({"suite": "mnn-llm-repro", "pr": 6,
+                       "smoke": args.smoke, "host": host,
                        "summary": common.SUMMARY,
                        "fallbacks": common.FALLBACKS}, f, indent=2)
         print(f"[run] wrote summary to {bench_path}", file=sys.stderr)

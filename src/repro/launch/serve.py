@@ -1,10 +1,21 @@
-"""Serving driver: batched requests against a quantized engine.
+"""Serving driver: batched requests against a quantized engine — or the
+streaming HTTP gateway.
 
 Continuous batching (default): step-driven EngineLoop with per-slot KV
 management — requests join/leave the decode batch without draining it.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
       --requests 8 --max-new 16 --slots 4
+
+HTTP gateway mode (--http PORT): OpenAI-style ``POST /v1/completions``
+with ``"stream": true`` SSE token streaming, ``GET /healthz`` and
+``GET /v1/stats``, over the incremental submit/step EngineLoop API:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
+      --http 8080 --slots 4 --max-queue 64
+
+  curl -N http://127.0.0.1:8080/v1/completions -d \
+      '{"prompt": "hello", "max_tokens": 16, "stream": true}'
 
 Legacy slot-synchronous path: --no-continuous (the paper's two-phase
 generate; kept as the benchmark baseline).
@@ -41,6 +52,14 @@ def main() -> None:
     ap.add_argument("--preempt-patience", type=int, default=0,
                     help=">0: evict the longest-running request after a "
                          "queued request waits this many steps")
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="serve the streaming HTTP gateway on PORT "
+                         "instead of replaying a trace")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="gateway bind address (with --http)")
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="gateway backpressure: waiting requests beyond "
+                         "this bound are rejected with HTTP 429")
     args = ap.parse_args()
 
     cfg = registry.get(args.arch)
@@ -50,6 +69,22 @@ def main() -> None:
           f"(embedding on Flash, int8-K/fp8-V KV cache)")
     eng = E.build_engine(cfg, key=jax.random.PRNGKey(args.seed),
                          max_seq=args.max_seq)
+
+    if args.http is not None:
+        from repro.data.tokenizer import ByteTokenizer
+        from repro.serving import gateway as G
+        assert not cfg.is_encdec, "gateway serves decoder-only models"
+        loop = E.EngineLoop(eng, max_slots=args.slots,
+                            preempt_patience=args.preempt_patience,
+                            max_queue=args.max_queue)
+        tok = ByteTokenizer(cfg.vocab_size) if cfg.vocab_size >= 258 else None
+        print(f"[serve] gateway on http://{args.host}:{args.http} "
+              f"({args.slots} slots, queue bound {args.max_queue}, "
+              f"{'byte tokenizer' if tok else 'token-id prompts only'})")
+        G.serve(G.EngineService(loop), host=args.host, port=args.http,
+                tokenizer=tok, model_name=cfg.name)
+        return
+
     rng = np.random.default_rng(args.seed)
     reqs = [Request(uid=i,
                     prompt_tokens=list(rng.integers(

@@ -23,7 +23,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Dict, List, Optional, Sequence
+import warnings
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +38,12 @@ from repro.models import transformer as T
 from repro.runtime import dispatch as RD
 from repro.runtime import plan as RP
 from repro.serving import sampling as SM
-from repro.serving.scheduler import ContinuousScheduler, Request
+from repro.serving.scheduler import (AdmissionError, ContinuousScheduler,
+                                     QueueFullError, Request)
+
+__all__ = ["AdmissionError", "QueueFullError", "Engine", "EngineLoop",
+           "EngineStats", "RequestStats", "Request", "TokenEvent",
+           "build_engine", "percentile"]
 
 
 @dataclasses.dataclass
@@ -55,6 +61,18 @@ def percentile(xs: Sequence[float], p: float) -> float:
     if not xs:
         return 0.0
     return float(np.percentile(np.asarray(xs, np.float64), p))
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One committed token, emitted by ``EngineLoop.step()`` the moment the
+    sampling phase appends it to its request — before the step's decode
+    compute even launches.  ``done`` marks the request's final token."""
+    uid: int
+    token: int
+    index: int            # 0-based position in the request's completion
+    done: bool
+    request: Request = dataclasses.field(repr=False, compare=False)
 
 
 @dataclasses.dataclass
@@ -250,10 +268,27 @@ class Engine:
         return list(requests)
 
 
+# one-shot notice for the run(sampling=...) default-for-all shim
+_WARNED_RUN_SAMPLING_SHIM = False
+
+
 class EngineLoop:
     """Step-driven continuous-batching serving loop on the paged KV pool —
     one *unified step* runs pending prompt chunks and the decode batch
     together.
+
+    The serving API is *incremental*: ``submit(req)`` enqueues a request
+    at any time (admission-checked — a request that can never fit raises
+    ``AdmissionError``, a full bounded queue raises ``QueueFullError``),
+    ``step()`` advances the whole loop by one unified step and emits a
+    ``TokenEvent`` for every token it commits (also delivered through the
+    optional ``on_token`` callback the moment the sampling phase appends
+    it — a streaming consumer sees the first token while the rest of the
+    completion is still decoding), ``poll(uid)`` drains a request's
+    tokens cursor-style, and ``drain()`` steps until idle.  Requests
+    carry their own ``SamplingParams`` plus QoS fields (``priority``,
+    ``deadline_s``) the scheduler orders admission by.  ``run()`` remains
+    as a thin batch-mode compatibility wrapper over submit/step/drain.
 
     One decode batch of ``max_slots`` rows over a block-paged pool
     (core/kv_pool.py) whose geometry the ExecutionPlan owns:
@@ -304,7 +339,11 @@ class EngineLoop:
                  prefill_token_budget: Optional[int] = None,
                  prefix_sharing: bool = True,
                  proactive_spill: bool = True,
-                 flash_budget_bytes: Optional[int] = None):
+                 flash_budget_bytes: Optional[int] = None,
+                 default_sampling: Optional[SM.SamplingParams] = None,
+                 max_queue: Optional[int] = None,
+                 on_token: Optional[Callable[[Request, int, bool], None]]
+                 = None):
         cfg = engine.cfg
         assert not cfg.is_encdec, "continuous batching: decoder-only models"
         self.eng = engine
@@ -362,6 +401,22 @@ class EngineLoop:
         self.peak_kv_pages = 0
         self._step_hits = 0
         self._step_misses = 0
+        # --- incremental serving API state ---------------------------------
+        # sampling applied to requests submitted without their own params
+        self.default_sampling = default_sampling
+        # bounded submit queue: submit() raises QueueFullError once this
+        # many requests are waiting (None = unbounded, the batch-mode
+        # default).  This is the gateway's backpressure signal (HTTP 429).
+        self.max_queue = max_queue
+        # per-token emission: called as on_token(request, token, done) the
+        # moment step()'s sampling phase commits a token
+        self.on_token = on_token
+        self._step_no = 0             # monotonic unified-step counter
+        self._key = jax.random.PRNGKey(0)
+        # uid -> {"toks": [...], "cursor": consumed, "done": bool} for
+        # poll(); entries drop once done AND fully consumed
+        self._streams: Dict[int, dict] = {}
+        self.rejected = 0             # submits refused by backpressure
         self._decode = jax.jit(
             functools.partial(self._decode_impl, cfg, engine._ctx))
         self._chunk = jax.jit(
@@ -848,190 +903,328 @@ class EngineLoop:
         long-lived processes that rebuild them should close the old one)."""
         self.spill.close()
 
-    # --- the serving loop --------------------------------------------------
+    # --- the incremental serving API ---------------------------------------
+    def _validate(self, req: Request) -> None:
+        """Static admissibility — a request this loop can never serve is
+        refused up front with a typed error (the gateway's HTTP 400)."""
+        need = req.length + req.max_new_tokens
+        if need > self.eng.max_seq:
+            raise AdmissionError(
+                f"request {req.uid}: prompt+decode budget {need} exceeds "
+                f"max_seq={self.eng.max_seq}", uid=req.uid)
+        if need > self.scheduler.token_budget:
+            raise AdmissionError(
+                f"request {req.uid}: {need} tokens exceed the scheduler "
+                f"token budget {self.scheduler.token_budget}", uid=req.uid)
+        if self.pool.pages_for(need) > self.geom.num_pages:
+            raise AdmissionError(
+                f"request {req.uid}: needs {self.pool.pages_for(need)} KV "
+                f"pages, pool holds {self.geom.num_pages}", uid=req.uid)
+
+    def submit(self, req: Request,
+               arrival_step: Optional[int] = None) -> int:
+        """Enqueue one request; callable at any time, including between
+        steps while other requests decode.  Resolves the request's
+        sampling params (falling back to ``default_sampling``), checks
+        static admissibility (``AdmissionError``) and the bounded queue
+        (``QueueFullError``) — a rejected request touches no pool, slot,
+        or prefix-index state.  Returns the uid."""
+        if req.sampling is None:
+            if self.default_sampling is None:
+                raise ValueError(
+                    f"request {req.uid} has no SamplingParams and the loop "
+                    f"has no default_sampling")
+            req.sampling = self.default_sampling
+        self._validate(req)
+        if self.max_queue is not None \
+                and len(self.scheduler.waiting) >= self.max_queue:
+            self.rejected += 1
+            raise QueueFullError(
+                f"request {req.uid}: submit queue full "
+                f"({len(self.scheduler.waiting)} waiting, "
+                f"bound {self.max_queue})", uid=req.uid)
+        if req.arrival_t == 0.0:
+            req.arrival_t = time.perf_counter()
+        self.scheduler.submit(
+            req, arrival_step=self._step_no if arrival_step is None
+            else arrival_step)
+        self._streams[req.uid] = {"toks": [], "cursor": 0, "done": False}
+        return req.uid
+
+    def poll(self, uid: int):
+        """Tokens committed for ``uid`` since the last poll, plus the done
+        flag.  The stream record drops once the request is done and fully
+        consumed (a later poll raises KeyError)."""
+        st = self._streams[uid]
+        new = st["toks"][st["cursor"]:]
+        st["cursor"] = len(st["toks"])
+        if st["done"] and st["cursor"] == len(st["toks"]):
+            del self._streams[uid]
+        return new, st["done"]
+
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    def _emit(self, req: Request, token: int, done: bool,
+              events: List[TokenEvent]) -> None:
+        ev = TokenEvent(uid=req.uid, token=token,
+                        index=len(req.generated) - 1, done=done, request=req)
+        events.append(ev)
+        st = self._streams.get(req.uid)
+        if st is not None:
+            st["toks"].append(token)
+            st["done"] = done
+        if self.on_token is not None:
+            self.on_token(req, token, done)
+
+    def _sample(self, sub: jax.Array) -> np.ndarray:
+        """One sampled token per slot, honoring per-request sampling
+        params.  Rows are grouped by their request's ``SamplingParams``;
+        each distinct group samples the full logits matrix (a row's draw
+        never depends on which other rows are active) and contributes its
+        own rows.  A single group consumes ``sub`` directly, so uniform
+        traces are bit-identical to the old loop-wide-sampling path."""
+        groups: Dict[SM.SamplingParams, List[int]] = {}
+        for slot, req in enumerate(self.scheduler.running):
+            if req is None or slot in self._prefilling \
+                    or slot in self._hold:
+                continue
+            groups.setdefault(req.sampling, []).append(slot)
+        tok = np.zeros((self.max_slots,), np.int64)
+        for gi, (sp, slots) in enumerate(
+                sorted(groups.items(), key=lambda kv: kv[1][0])):
+            k = sub if len(groups) == 1 else jax.random.fold_in(sub, gi)
+            t = np.asarray(SM.sample(self.logits, sp, self.cfg.vocab_size,
+                                     k))
+            tok[slots] = t[slots]
+        return tok
+
+    def step(self) -> List[TokenEvent]:
+        """Advance the loop by ONE unified step: preempt/spill under
+        pressure, admit from the queue (priority + deadline order), run
+        prompt chunks under the token budget, sample one token for every
+        decodable row (committed tokens are emitted HERE — streaming
+        consumers see them before the decode compute below even runs),
+        then the batched decode in staging waves."""
+        eng, sched, cfg = self.eng, self.scheduler, self.cfg
+        events: List[TokenEvent] = []
+        sched.step = self._step_no
+        t_step = time.perf_counter()
+        pf0 = eng.stats.prefill_s
+        # hold rows owe a pending decode before their logits are valid;
+        # preempting one mid-replay would re-spill an unchanged row
+        preempted = sched.maybe_preempt(
+            exclude_slots=set(self._hold) | set(self._prefilling))
+        if preempted is not None:
+            freed_slot, victim = preempted
+            self._spill_row(freed_slot, victim, pending=False)
+        # proactive spill ahead of demand: keep the free list above
+        # the plan's low watermark by moving running rows' cold pages
+        # to Flash (decode stages them back page-granularly)
+        self._proactive_spill()
+        for slot, req in sched.admit():
+            self._admit_into_slot(req, slot)
+        self.peak_kv_pages = max(
+            self.peak_kv_pages,
+            sum(self.pool.pages_held(s) for s in range(self.max_slots)))
+        # the unified step, phase 1: pending prompt chunks go straight
+        # into pool pages under the per-step token budget (rows whose
+        # final chunk lands here decode below, in the same step)
+        self._run_prefill_chunks()
+        running = list(sched.running)
+        n_active = sum(r is not None for r in running)
+        self.peak_active = max(self.peak_active, n_active)
+        if n_active == 0:
+            self._step_no += 1
+            return events
+
+        # one token for every decodable slot (rows that just finished
+        # prefilling sample from their final chunk's logits — TTFT is
+        # measured right here)
+        self._key, sub = jax.random.split(self._key)
+        tok_np = self._sample(sub)
+        now = time.perf_counter()
+        for slot, req in enumerate(running):
+            if req is None or slot in self._hold \
+                    or slot in self._prefilling:
+                continue
+            t_id = int(tok_np[slot])
+            req.generated.append(t_id)
+            if req.first_token_t == 0.0:
+                req.first_token_t = now
+            sp = req.sampling
+            finished = ((sp.eos_token >= 0 and t_id == sp.eos_token)
+                        or len(req.generated) >= req.decode_cap)
+            self._emit(req, t_id, finished, events)
+            if finished:
+                req.finish_t = now
+                sched.finish(req)
+                # refcount-decrement reclaim: private pages return to
+                # the free list; indexed prefix pages survive EOS for
+                # the next request with the same prompt head.  Cold
+                # blobs the proactive tier parked on Flash are dropped
+                # with the request.
+                self.pool.free_row(slot)
+                self.spill.drop(req.uid)
+                self.cache = T.free_slots(
+                    self.cache, jnp.asarray([slot], jnp.int32))
+                eng.stats.requests.append(RequestStats(
+                    uid=req.uid, ttft_s=req.ttft, tpot_s=req.tpot,
+                    latency_s=req.finish_t - req.arrival_t,
+                    new_tokens=len(req.generated),
+                    preemptions=req.preemptions))
+
+        if not any(r is not None for r in sched.running):
+            self._step_no += 1
+            eng.stats.decode_s += (time.perf_counter() - t_step) \
+                - (eng.stats.prefill_s - pf0)
+            return events
+
+        # allocate-on-append: every surviving decodable row appends one
+        # token at its position this decode — rows crossing a page
+        # boundary take a page from the free list (index pins are
+        # evicted first).  When the pool still runs dry, cold pages of
+        # running rows spill FIRST (the row keeps decoding through the
+        # staging reserve — no token of progress is lost), then the
+        # biggest page-holder is preempted wholesale, and only then do
+        # mid-prefill rows restart (cheaper than a Flash round trip,
+        # but it does forfeit their partial prompt work)
+        for slot, req in enumerate(sched.running):
+            if req is None or slot in self._prefilling:
+                continue
+            while not self.pool.ensure(slot, int(self.pool.row_pos[slot])):
+                if self._spill_one_cold():
+                    continue
+                victim = self._pick_page_victim(exclude={slot})
+                if victim is None:
+                    pref = [r for r in sched.running
+                            if r is not None and r.slot != slot
+                            and r.slot in self._prefilling]
+                    assert pref, \
+                        "pool cannot hold a single request (geometry bug)"
+                    self._restart_prefilling_row(max(
+                        pref, key=lambda r: self.pool.pages_held(r.slot)))
+                    continue
+                vslot = victim.slot
+                sched.evict(victim)
+                self._spill_row(vslot, victim, pending=True)
+
+        # the unified step, phase 2 — batched decode in staging waves:
+        # every decodable row advances at its own pos (hold rows feed
+        # their pending token — same shape, no re-jit).  Rows whose
+        # cold pages sit on Flash first gather them into the staging
+        # reserve (layer-ahead prefetch); when the reserve cannot hold
+        # everyone's cold pages at once the decode runs in waves, each
+        # wave's rows active while the others ride along masked to the
+        # trash page (mid-prefill rows always are) — one wave, one
+        # decode call, in the no-spill steady state.
+        ids = np.zeros((self.max_slots, 1), np.int64)
+        active = np.zeros((self.max_slots,), bool)
+        for slot, req in enumerate(sched.running):
+            if req is None or slot in self._prefilling:
+                continue
+            ids[slot, 0] = req.generated[-1]
+            active[slot] = True
+        self._hold.clear()
+        if not active.any():
+            self._step_no += 1
+            eng.stats.decode_s += (time.perf_counter() - t_step) \
+                - (eng.stats.prefill_s - pf0)
+            return events
+        embeds = eng.embed(ids)
+        act_slots = [int(s) for s in np.nonzero(active)[0]]
+        flash_needs = sum(self.pool.flash_pages_of(s) for s in act_slots)
+        self._step_hits = self._step_misses = 0
+        waves = self._plan_waves(act_slots)
+        for wave in waves:
+            needed = [(s, i) for s in wave
+                      for i in self.pool.flash_idxs(s)]
+            if needed:
+                self._stage_wave(needed)
+            self._upload_table(visible=set(wave))
+            wmask = np.zeros((self.max_slots,), bool)
+            wmask[wave] = True
+            am = jnp.asarray(wmask)
+            logits_w, self.cache = self._decode(
+                eng.params, embeds, self.cache, self._slot_lora(), am)
+            if len(waves) == 1:
+                # the no-spill steady state: one wave covers every
+                # active row — keep the old direct assignment (empty
+                # rows' logits are never read)
+                self.logits = logits_w
+            else:
+                self.logits = jnp.where(am[:, None], logits_w,
+                                        self.logits)
+        if flash_needs:
+            total = self._step_hits + self._step_misses
+            eng.stats.flash_hit_rates.append(
+                self._step_hits / total if total else 1.0)
+        for slot in act_slots:
+            self.pool.row_pos[slot] += 1
+        eng.stats.decode_tokens += int(active.sum())
+        self._step_no += 1
+        eng.stats.decode_s += (time.perf_counter() - t_step) \
+            - (eng.stats.prefill_s - pf0)
+        return events
+
+    def drain(self) -> None:
+        """Step until the loop is idle (queue empty, no running rows)."""
+        while self.scheduler.has_work():
+            self.step()
+        jax.block_until_ready(self.logits)
+
+    # --- batch-mode compatibility wrapper ----------------------------------
     def run(self, requests: Sequence[Request],
-            sampling: SM.SamplingParams,
+            sampling: Optional[SM.SamplingParams] = None,
             arrivals: Optional[Sequence[int]] = None,
             key: Optional[jax.Array] = None) -> List[Request]:
-        """Serve a trace to completion.  ``arrivals``: per-request arrival
-        step (trace replay); default: everything queued at step 0."""
-        eng, sched, cfg = self.eng, self.scheduler, self.cfg
-        key = key if key is not None else jax.random.PRNGKey(0)
+        """Serve a whole trace to completion — a thin wrapper over
+        ``submit()``/``step()``.  ``arrivals``: per-request arrival step
+        relative to the call (trace replay); default: everything queued
+        at step 0.
+
+        .. deprecated:: the batch-mode entry point is kept for benchmarks
+           and trace replay.  ``sampling`` acts as a default-for-all shim:
+           it applies only to requests without their own
+           ``req.sampling``.  New serving code should drive
+           ``submit()``/``step()`` (or the HTTP gateway) directly."""
+        global _WARNED_RUN_SAMPLING_SHIM
+        self._key = key if key is not None else jax.random.PRNGKey(0)
         arrivals = list(arrivals) if arrivals is not None \
             else [0] * len(requests)
         assert len(arrivals) == len(requests)
+        if sampling is not None and not _WARNED_RUN_SAMPLING_SHIM:
+            _WARNED_RUN_SAMPLING_SHIM = True
+            warnings.warn(
+                "EngineLoop.run(sampling=...) is a default-for-all shim; "
+                "put SamplingParams on each Request (req.sampling) or use "
+                "submit()/step()", DeprecationWarning, stacklevel=2)
         for req in requests:
-            need = req.length + req.max_new_tokens
-            assert need <= eng.max_seq, \
-                f"request {req.uid} cannot fit in max_seq={eng.max_seq}"
-            assert need <= sched.token_budget, \
-                f"request {req.uid} exceeds the scheduler token budget"
-            assert self.pool.pages_for(need) <= self.geom.num_pages, \
-                f"request {req.uid} cannot fit in the KV pool"
-        pending = sorted(zip(arrivals, requests), key=lambda p: (p[0], p[1].uid))
+            if req.sampling is None:
+                req.sampling = sampling
+        # validate the whole trace up front (the old hard-assert contract,
+        # now typed): a bad request raises before anything is served
+        for req in requests:
+            if req.sampling is None:
+                raise ValueError(f"request {req.uid} has no SamplingParams "
+                                 f"(pass sampling= or set req.sampling)")
+            self._validate(req)
+        base = self._step_no
+        pending = sorted(zip(arrivals, requests),
+                         key=lambda p: (p[0], p[1].uid))
         pending = list(pending)
-
-        t0 = time.perf_counter()
-        pf0 = eng.stats.prefill_s
         self.peak_active = 0
-        step = 0
-        while pending or sched.has_work():
-            sched.step = step
+        while pending or self.scheduler.has_work():
             now = time.perf_counter()
-            while pending and pending[0][0] <= step:
+            while pending and pending[0][0] + base <= self._step_no:
                 _, req = pending.pop(0)
                 req.arrival_t = now
-                sched.submit(req, arrival_step=step)
-            # hold rows owe a pending decode before their logits are valid;
-            # preempting one mid-replay would re-spill an unchanged row
-            preempted = sched.maybe_preempt(
-                exclude_slots=set(self._hold) | set(self._prefilling),
-                sampling_cap=sampling.max_new_tokens)
-            if preempted is not None:
-                freed_slot, victim = preempted
-                self._spill_row(freed_slot, victim, pending=False)
-            # proactive spill ahead of demand: keep the free list above
-            # the plan's low watermark by moving running rows' cold pages
-            # to Flash (decode stages them back page-granularly)
-            self._proactive_spill()
-            for slot, req in sched.admit():
-                self._admit_into_slot(req, slot)
-            self.peak_kv_pages = max(
-                self.peak_kv_pages,
-                sum(self.pool.pages_held(s) for s in range(self.max_slots)))
-            # the unified step, phase 1: pending prompt chunks go straight
-            # into pool pages under the per-step token budget (rows whose
-            # final chunk lands here decode below, in the same step)
-            self._run_prefill_chunks()
-            running = list(sched.running)
-            n_active = sum(r is not None for r in running)
-            self.peak_active = max(self.peak_active, n_active)
-            if n_active == 0:
-                step += 1
-                continue
-
-            # one token for every decodable slot (rows that just finished
-            # prefilling sample from their final chunk's logits — TTFT is
-            # measured right here)
-            key, sub = jax.random.split(key)
-            tok = SM.sample(self.logits, sampling, cfg.vocab_size, sub)
-            tok_np = np.asarray(tok)
-            now = time.perf_counter()
-            for slot, req in enumerate(running):
-                if req is None or slot in self._hold \
-                        or slot in self._prefilling:
-                    continue
-                t_id = int(tok_np[slot])
-                req.generated.append(t_id)
-                if req.first_token_t == 0.0:
-                    req.first_token_t = now
-                cap = min(req.max_new_tokens, sampling.max_new_tokens)
-                if ((sampling.eos_token >= 0 and t_id == sampling.eos_token)
-                        or len(req.generated) >= cap):
-                    req.finish_t = now
-                    sched.finish(req)
-                    # refcount-decrement reclaim: private pages return to
-                    # the free list; indexed prefix pages survive EOS for
-                    # the next request with the same prompt head.  Cold
-                    # blobs the proactive tier parked on Flash are dropped
-                    # with the request.
-                    self.pool.free_row(slot)
-                    self.spill.drop(req.uid)
-                    self.cache = T.free_slots(
-                        self.cache, jnp.asarray([slot], jnp.int32))
-                    eng.stats.requests.append(RequestStats(
-                        uid=req.uid, ttft_s=req.ttft, tpot_s=req.tpot,
-                        latency_s=req.finish_t - req.arrival_t,
-                        new_tokens=len(req.generated),
-                        preemptions=req.preemptions))
-
-            if not any(r is not None for r in sched.running):
-                step += 1
-                continue
-            # allocate-on-append: every surviving decodable row appends one
-            # token at its position this decode — rows crossing a page
-            # boundary take a page from the free list (index pins are
-            # evicted first).  When the pool still runs dry, cold pages of
-            # running rows spill FIRST (the row keeps decoding through the
-            # staging reserve — no token of progress is lost), then the
-            # biggest page-holder is preempted wholesale, and only then do
-            # mid-prefill rows restart (cheaper than a Flash round trip,
-            # but it does forfeit their partial prompt work)
-            for slot, req in enumerate(sched.running):
-                if req is None or slot in self._prefilling:
-                    continue
-                while not self.pool.ensure(slot, int(self.pool.row_pos[slot])):
-                    if self._spill_one_cold():
-                        continue
-                    victim = self._pick_page_victim(exclude={slot})
-                    if victim is None:
-                        pref = [r for r in sched.running
-                                if r is not None and r.slot != slot
-                                and r.slot in self._prefilling]
-                        assert pref, \
-                            "pool cannot hold a single request (geometry bug)"
-                        self._restart_prefilling_row(max(
-                            pref, key=lambda r: self.pool.pages_held(r.slot)))
-                        continue
-                    vslot = victim.slot
-                    sched.evict(victim)
-                    self._spill_row(vslot, victim, pending=True)
-
-            # the unified step, phase 2 — batched decode in staging waves:
-            # every decodable row advances at its own pos (hold rows feed
-            # their pending token — same shape, no re-jit).  Rows whose
-            # cold pages sit on Flash first gather them into the staging
-            # reserve (layer-ahead prefetch); when the reserve cannot hold
-            # everyone's cold pages at once the decode runs in waves, each
-            # wave's rows active while the others ride along masked to the
-            # trash page (mid-prefill rows always are) — one wave, one
-            # decode call, in the no-spill steady state.
-            ids = np.zeros((self.max_slots, 1), np.int64)
-            active = np.zeros((self.max_slots,), bool)
-            for slot, req in enumerate(sched.running):
-                if req is None or slot in self._prefilling:
-                    continue
-                ids[slot, 0] = req.generated[-1]
-                active[slot] = True
-            self._hold.clear()
-            if not active.any():
-                step += 1
-                continue
-            embeds = eng.embed(ids)
-            act_slots = [int(s) for s in np.nonzero(active)[0]]
-            flash_needs = sum(self.pool.flash_pages_of(s) for s in act_slots)
-            self._step_hits = self._step_misses = 0
-            waves = self._plan_waves(act_slots)
-            for wave in waves:
-                needed = [(s, i) for s in wave
-                          for i in self.pool.flash_idxs(s)]
-                if needed:
-                    self._stage_wave(needed)
-                self._upload_table(visible=set(wave))
-                wmask = np.zeros((self.max_slots,), bool)
-                wmask[wave] = True
-                am = jnp.asarray(wmask)
-                logits_w, self.cache = self._decode(
-                    eng.params, embeds, self.cache, self._slot_lora(), am)
-                if len(waves) == 1:
-                    # the no-spill steady state: one wave covers every
-                    # active row — keep the old direct assignment (empty
-                    # rows' logits are never read)
-                    self.logits = logits_w
-                else:
-                    self.logits = jnp.where(am[:, None], logits_w,
-                                            self.logits)
-            if flash_needs:
-                total = self._step_hits + self._step_misses
-                eng.stats.flash_hit_rates.append(
-                    self._step_hits / total if total else 1.0)
-            for slot in act_slots:
-                self.pool.row_pos[slot] += 1
-            eng.stats.decode_tokens += int(active.sum())
-            step += 1
+                self.submit(req)
+            self.step()
         jax.block_until_ready(self.logits)
-        wall = time.perf_counter() - t0
-        eng.stats.decode_s += wall - (eng.stats.prefill_s - pf0)
+        # batch traces are not polled; drop their stream records
+        for req in requests:
+            self._streams.pop(req.uid, None)
         return list(requests)
 
 

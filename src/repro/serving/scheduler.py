@@ -21,7 +21,26 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import List, Optional, Sequence, Tuple
+import math
+from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple
+
+if TYPE_CHECKING:                      # sampling imports jax; keep this
+    from repro.serving.sampling import SamplingParams  # pragma: no cover
+
+
+class AdmissionError(ValueError):
+    """The request can never be served by this loop configuration (prompt +
+    decode budget exceed max_seq, the token budget, or the KV pool) — the
+    serving gateway maps this to HTTP 400."""
+
+    def __init__(self, message: str, uid: Optional[int] = None):
+        super().__init__(message)
+        self.uid = uid
+
+
+class QueueFullError(AdmissionError):
+    """The bounded submit queue is full — transient backpressure, retry
+    later.  The serving gateway maps this to HTTP 429."""
 
 
 @dataclasses.dataclass
@@ -30,6 +49,15 @@ class Request:
     prompt_tokens: List[int]
     max_new_tokens: int = 32
     adapter: Optional[str] = None      # multi-LoRA (C7)
+    # per-request sampling (None until EngineLoop.submit resolves it
+    # against the loop default); every request in a batch may carry its
+    # own temperature/top-k/top-p/eos
+    sampling: Optional["SamplingParams"] = None
+    # QoS: higher priority admits first; deadline_s is an absolute
+    # wall-clock deadline used for earliest-deadline-first ordering
+    # within a priority class (None = no deadline)
+    priority: int = 0
+    deadline_s: Optional[float] = None
     # runtime state
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
@@ -62,6 +90,14 @@ class Request:
         """Tokens to (re)prefill on admission: prompt + anything already
         generated (non-empty after a preemption — resume re-prefills)."""
         return list(self.prompt_tokens) + list(self.generated)
+
+    @property
+    def decode_cap(self) -> int:
+        """Effective decode budget: the request's own cap tightened by its
+        sampling params (once resolved by submit)."""
+        if self.sampling is not None:
+            return min(self.max_new_tokens, self.sampling.max_new_tokens)
+        return self.max_new_tokens
 
     @property
     def ttft(self) -> float:
@@ -161,6 +197,16 @@ class ContinuousScheduler:
         self.step = 0
 
     # --- queue state -------------------------------------------------------
+    @staticmethod
+    def queue_key(r: Request):
+        """Admission order: priority class first (higher admits earlier),
+        earliest deadline within a class, then the original FIFO order
+        with the C4 cost tie-break.  Requests with no deadline sort after
+        every deadlined request of the same priority."""
+        return (-r.priority,
+                r.deadline_s if r.deadline_s is not None else math.inf,
+                r.arrival_step, r.cost, r.uid)
+
     @property
     def active(self) -> List[Request]:
         return [r for r in self.running if r is not None]
@@ -218,7 +264,7 @@ class ContinuousScheduler:
         """Fill free slots from the queue (FIFO, cost tie-break).  Returns
         the (slot, request) pairs admitted this step — the engine prefills
         each into its slot."""
-        self.waiting.sort(key=lambda r: (r.arrival_step, r.cost, r.uid))
+        self.waiting.sort(key=self.queue_key)
         admitted: List[Tuple[int, Request]] = []
         pending_pages = 0
         for slot in range(self.max_slots):
@@ -234,9 +280,9 @@ class ContinuousScheduler:
                     continue        # can never run; don't block the queue
                 if self._fits(req, pending_pages):
                     cand = req
-                # strict FIFO under the budget: a head that doesn't fit
-                # *yet* blocks later arrivals (letting small requests slip
-                # past would starve a large head indefinitely)
+                # strict queue order under the budget: a head that doesn't
+                # fit *yet* blocks later arrivals (letting small requests
+                # slip past would starve a large head indefinitely)
                 break
             if cand is None:
                 break
@@ -276,8 +322,7 @@ class ContinuousScheduler:
         Returns (freed_slot, victim)."""
         if not self.preempt_patience or not self.waiting:
             return None
-        head = min(self.waiting,
-                   key=lambda r: (r.arrival_step, r.cost, r.uid))
+        head = min(self.waiting, key=self.queue_key)
         if self.step - head.arrival_step < self.preempt_patience:
             return None
         if any(r is None for r in self.running):
@@ -287,8 +332,8 @@ class ContinuousScheduler:
         # trigger an eviction every step and each stint would net ~1 token
         # per re-prefill — pure thrash
         def cap(r: Request) -> int:
-            return (min(r.max_new_tokens, sampling_cap)
-                    if sampling_cap is not None else r.max_new_tokens)
+            c = r.decode_cap
+            return min(c, sampling_cap) if sampling_cap is not None else c
 
         victims = [r for r in self.running
                    if r is not None
@@ -298,7 +343,9 @@ class ContinuousScheduler:
                    and len(r.generated) < cap(r) - 1]
         if not victims:
             return None
-        victim = max(victims, key=lambda r: len(r.generated))
+        # lowest priority class loses its slot first; within a class the
+        # longest-running request (the original policy) is the victim
+        victim = max(victims, key=lambda r: (-r.priority, len(r.generated)))
         return self.evict(victim), victim
 
     def finish(self, req: Request) -> None:

@@ -1,0 +1,188 @@
+"""The streaming serving gateway: EngineService in-process streaming and
+the aiohttp HTTP layer (SSE `/v1/completions`, error mapping, healthz,
+stats).  The SSE smoke asserts the headline property of the redesign:
+the first token reaches the client while the completion is still
+decoding."""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.serving import engine as E
+from repro.serving import gateway as G
+from repro.serving import sampling as SM
+from repro.serving.scheduler import Request
+
+
+@pytest.fixture(scope="module")
+def engine(tmp_path_factory):
+    cfg = registry.reduced(registry.get("qwen2-7b"))
+    return E.build_engine(cfg, max_seq=64,
+                          flash_dir=str(tmp_path_factory.mktemp("flash")))
+
+
+def _greedy_reference(engine, prompt_tokens, n):
+    out = engine.generate(
+        [Request(uid=999, prompt_tokens=list(prompt_tokens),
+                 max_new_tokens=n)],
+        SM.SamplingParams(temperature=0.0, max_new_tokens=n))
+    return out[0].generated
+
+
+# ---------------------------------------------------------------------------
+# EngineService (no HTTP)
+# ---------------------------------------------------------------------------
+
+def test_engine_service_streams_while_decoding(engine):
+    rng = np.random.default_rng(5)
+    prompt = [int(t) for t in rng.integers(1, 400, 8)]
+    sp = SM.SamplingParams(temperature=0.0, max_new_tokens=10)
+    with G.EngineService(E.EngineLoop(engine, max_slots=2)) as svc:
+        stream = svc.submit(prompt, sp)
+        first, done = stream.get(timeout=120.0)
+        # the defining property of the incremental API: token 0 is
+        # delivered while the engine is still working on the completion
+        assert not done
+        assert svc.loop.has_work()
+        rest = stream.collect(timeout=120.0)
+        assert [first] + rest == _greedy_reference(engine, prompt, 10)
+
+
+def test_engine_service_concurrent_streams(engine):
+    rng = np.random.default_rng(6)
+    prompts = [[int(t) for t in rng.integers(1, 400, 6)] for _ in range(3)]
+    sp = SM.SamplingParams(temperature=0.0, max_new_tokens=5)
+    with G.EngineService(E.EngineLoop(engine, max_slots=2)) as svc:
+        streams = [svc.submit(p, sp) for p in prompts]
+        outs = [s.collect(timeout=180.0) for s in streams]
+    for p, toks in zip(prompts, outs):
+        assert toks == _greedy_reference(engine, p, 5)
+
+
+def test_engine_service_close_fails_pending_streams(engine):
+    rng = np.random.default_rng(7)
+    sp = SM.SamplingParams(temperature=0.0, max_new_tokens=30)
+    svc = G.EngineService(E.EngineLoop(engine, max_slots=1)).start()
+    stream = svc.submit([int(t) for t in rng.integers(1, 400, 6)], sp)
+    stream.get(timeout=120.0)          # it is really running
+    svc.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        stream.collect(timeout=10.0)
+
+
+# ---------------------------------------------------------------------------
+# HTTP layer
+# ---------------------------------------------------------------------------
+
+def _sse_events(resp):
+    """Yield (payload_dict_or_DONE, wall_time) per SSE data line."""
+    for line in resp.iter_lines(chunk_size=1, decode_unicode=True):
+        if not line:
+            continue
+        assert line.startswith("data: ")
+        data = line[len("data: "):]
+        yield ("[DONE]" if data == "[DONE]" else json.loads(data),
+               time.perf_counter())
+
+
+def test_http_sse_smoke_first_token_before_completion(engine):
+    """The CI gateway smoke: start the server on a tiny config, stream one
+    completion over SSE, and assert the first token arrives before the
+    completion finishes."""
+    requests = pytest.importorskip("requests")
+    pytest.importorskip("aiohttp")
+    rng = np.random.default_rng(8)
+    prompt = [int(t) for t in rng.integers(1, 400, 8)]
+    loop = E.EngineLoop(engine, max_slots=2, max_queue=8)
+    with G.GatewayServer(G.EngineService(loop)) as gw:
+        r = requests.get(f"{gw.url}/healthz", timeout=10)
+        assert r.status_code == 200 and r.json()["status"] == "ok"
+
+        with requests.post(
+                f"{gw.url}/v1/completions",
+                json={"prompt": prompt, "max_tokens": 12, "stream": True},
+                stream=True, timeout=300) as resp:
+            assert resp.status_code == 200
+            assert resp.headers["Content-Type"].startswith(
+                "text/event-stream")
+            events = []
+            still_decoding_at_first_chunk = None
+            for ev, t in _sse_events(resp):
+                if still_decoding_at_first_chunk is None:
+                    still_decoding_at_first_chunk = gw.svc.loop.has_work()
+                events.append((ev, t))
+        assert events[-1][0] == "[DONE]"
+        chunks = [ev for ev, _ in events[:-1]]
+        assert len(chunks) == 12
+        # first token was on the wire while the engine still decoded the
+        # rest of this very completion
+        assert still_decoding_at_first_chunk
+        # chunks streamed over time, not in one burst at the end
+        assert events[-2][1] - events[0][1] > 0.05
+        assert [c["choices"][0]["finish_reason"] for c in chunks] \
+            == [None] * 11 + ["length"]
+        toks = [c["choices"][0]["token"] for c in chunks]
+        assert toks == _greedy_reference(engine, prompt, 12)
+
+        # stats endpoint reflects the completed request
+        stats = requests.get(f"{gw.url}/v1/stats", timeout=10).json()
+        assert stats["completed_requests"] >= 1
+        assert stats["decode_tokens"] >= 12
+        assert stats["total_kv_pages"] > 0
+
+
+def test_http_non_stream_and_string_prompt(engine):
+    requests = pytest.importorskip("requests")
+    pytest.importorskip("aiohttp")
+    from repro.data.tokenizer import ByteTokenizer
+    tok = ByteTokenizer(engine.cfg.vocab_size)
+    loop = E.EngineLoop(engine, max_slots=2)
+    with G.GatewayServer(G.EngineService(loop), tokenizer=tok) as gw:
+        r = requests.post(f"{gw.url}/v1/completions",
+                          json={"prompt": "hello", "max_tokens": 4},
+                          timeout=300)
+        assert r.status_code == 200
+        body = r.json()
+        choice = body["choices"][0]
+        assert len(choice["tokens"]) == 4
+        assert choice["text"] == tok.decode(choice["tokens"])
+        assert body["usage"]["completion_tokens"] == 4
+        assert body["usage"]["prompt_tokens"] == len(tok.encode("hello"))
+        assert choice["finish_reason"] == "length"
+
+
+def test_http_error_mapping_400_and_429(engine):
+    requests = pytest.importorskip("requests")
+    pytest.importorskip("aiohttp")
+    # max_queue=0: every admission is backpressured -> 429
+    loop = E.EngineLoop(engine, max_slots=1, max_queue=0)
+    with G.GatewayServer(G.EngineService(loop)) as gw:
+        r = requests.post(f"{gw.url}/v1/completions",
+                          json={"prompt": [1, 2, 3], "max_tokens": 4},
+                          timeout=30)
+        assert r.status_code == 429
+        assert r.headers["Retry-After"] == "1"
+        assert r.json()["error"]["type"] == "overloaded_error"
+
+        # a request that can never fit -> 400, checked before the queue
+        r = requests.post(f"{gw.url}/v1/completions",
+                          json={"prompt": [1] * 200, "max_tokens": 4},
+                          timeout=30)
+        assert r.status_code == 400
+        assert r.json()["error"]["type"] == "invalid_request_error"
+
+        # string prompt without a tokenizer -> 400
+        r = requests.post(f"{gw.url}/v1/completions",
+                          json={"prompt": "hi", "max_tokens": 4},
+                          timeout=30)
+        assert r.status_code == 400
+
+        # malformed body -> 400
+        r = requests.post(f"{gw.url}/v1/completions", data=b"not json",
+                          timeout=30)
+        assert r.status_code == 400
+
+        stats = requests.get(f"{gw.url}/v1/stats", timeout=10).json()
+        assert stats["rejected"] >= 1

@@ -1,0 +1,360 @@
+"""The incremental EngineLoop serving API: submit/step/poll/drain,
+per-request sampling, QoS admission (priority + deadline), typed
+admission errors, bounded-queue backpressure, and the run() batch-mode
+compatibility wrapper (bitwise-equal to the pre-redesign path).
+"""
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.serving import engine as E
+from repro.serving import sampling as SM
+from repro.serving.scheduler import (AdmissionError, ContinuousScheduler,
+                                     QueueFullError, Request)
+
+GREEDY = SM.SamplingParams(temperature=0.0, max_new_tokens=32)
+
+
+@pytest.fixture(scope="module")
+def engine(tmp_path_factory):
+    cfg = registry.reduced(registry.get("qwen2-7b"))
+    return E.build_engine(cfg, max_seq=64,
+                          flash_dir=str(tmp_path_factory.mktemp("flash")))
+
+
+@pytest.fixture(scope="module")
+def ref_engine(tmp_path_factory):
+    cfg = registry.reduced(registry.get("qwen2-7b"))
+    return E.build_engine(cfg, max_seq=64,
+                          flash_dir=str(tmp_path_factory.mktemp("flash2")))
+
+
+def _reqs(n, rng, lo=4, hi=20, max_new=5, **kw):
+    return [Request(uid=i,
+                    prompt_tokens=list(rng.integers(
+                        1, 400, size=int(rng.integers(lo, hi)))),
+                    max_new_tokens=max_new, **kw)
+            for i in range(n)]
+
+
+def _reference(ref_engine, req, eos=-1):
+    out = ref_engine.generate(
+        [Request(uid=req.uid, prompt_tokens=list(req.prompt_tokens),
+                 max_new_tokens=req.max_new_tokens)],
+        SM.SamplingParams(temperature=0.0,
+                          max_new_tokens=req.max_new_tokens,
+                          eos_token=eos))
+    return out[0].generated
+
+
+# ---------------------------------------------------------------------------
+# scheduler QoS: priority + deadline ordering
+# ---------------------------------------------------------------------------
+
+def test_priority_admits_before_fifo():
+    s = ContinuousScheduler(max_slots=1, max_seq=128)
+    early = Request(uid=0, prompt_tokens=[1] * 4, max_new_tokens=4)
+    urgent = Request(uid=1, prompt_tokens=[1] * 20, max_new_tokens=8,
+                     priority=5)
+    s.submit(early, arrival_step=0)
+    s.submit(urgent, arrival_step=3)   # later AND costlier, but priority 5
+    assert s.admit()[0][1] is urgent
+    s.finish(urgent)
+    assert s.admit()[0][1] is early
+
+
+def test_deadline_edf_within_priority_class():
+    s = ContinuousScheduler(max_slots=1, max_seq=128)
+    relaxed = Request(uid=0, prompt_tokens=[1] * 4, deadline_s=500.0)
+    tight = Request(uid=1, prompt_tokens=[1] * 4, deadline_s=100.0)
+    nodeadline = Request(uid=2, prompt_tokens=[1] * 4)
+    s.submit(nodeadline, arrival_step=0)   # earliest arrival, no deadline
+    s.submit(relaxed, arrival_step=1)
+    s.submit(tight, arrival_step=2)
+    # EDF: deadlined requests beat undeadlined ones of the same priority,
+    # tightest deadline first
+    assert s.admit()[0][1] is tight
+    s.finish(tight)
+    assert s.admit()[0][1] is relaxed
+    s.finish(relaxed)
+    assert s.admit()[0][1] is nodeadline
+    # priority dominates deadline
+    s2 = ContinuousScheduler(max_slots=1, max_seq=128)
+    vip = Request(uid=3, prompt_tokens=[1] * 4, priority=1)
+    s2.submit(Request(uid=4, prompt_tokens=[1] * 4, deadline_s=1.0),
+              arrival_step=0)
+    s2.submit(vip, arrival_step=0)
+    assert s2.admit()[0][1] is vip
+
+
+def test_preemption_evicts_lowest_priority_first():
+    s = ContinuousScheduler(max_slots=2, max_seq=128, preempt_patience=2)
+    vip = Request(uid=0, prompt_tokens=[1] * 4, max_new_tokens=30,
+                  priority=3)
+    cheap = Request(uid=1, prompt_tokens=[1] * 4, max_new_tokens=30)
+    s.submit(vip)
+    s.submit(cheap)
+    s.admit()
+    vip.generated = [1] * 9       # longest-running, but highest priority
+    cheap.generated = [1] * 3
+    s.step = 8
+    s.submit(Request(uid=2, prompt_tokens=[1] * 4, max_new_tokens=4),
+             arrival_step=2)
+    freed, victim = s.maybe_preempt()
+    assert victim is cheap        # priority shields the longer-running vip
+    assert freed == cheap.slot if cheap.slot >= 0 else True
+
+
+def test_priority_head_blocks_queue_order():
+    # the highest-priority waiter is the head; while it cannot fit, later
+    # lower-priority arrivals must not slip past it
+    s = ContinuousScheduler(max_slots=2, max_seq=128, token_budget=60)
+    hog = Request(uid=0, prompt_tokens=[1] * 40, max_new_tokens=10)
+    s.submit(hog)
+    s.admit()
+    big_vip = Request(uid=1, prompt_tokens=[1] * 20, max_new_tokens=10,
+                      priority=2)                      # needs 30 > 10 left
+    small = Request(uid=2, prompt_tokens=[1] * 2, max_new_tokens=2)
+    s.submit(big_vip)
+    s.submit(small)
+    assert s.admit() == []        # vip head doesn't fit; small must wait
+    s.finish(hog)
+    assert [r.uid for _, r in s.admit()] == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# typed admission errors + bounded-queue backpressure
+# ---------------------------------------------------------------------------
+
+def test_submit_rejects_oversize_with_typed_error(engine):
+    loop = E.EngineLoop(engine, max_slots=2)
+    try:
+        too_long = Request(uid=0, prompt_tokens=[1] * 60, max_new_tokens=30,
+                           sampling=GREEDY)
+        with pytest.raises(AdmissionError) as ei:
+            loop.submit(too_long)
+        assert ei.value.uid == 0
+        # run() preflight raises the same typed error (not AssertionError)
+        with pytest.raises(AdmissionError):
+            loop.run([Request(uid=1, prompt_tokens=[1] * 60,
+                              max_new_tokens=30)], GREEDY)
+        # nothing was enqueued or allocated
+        assert not loop.scheduler.waiting
+        assert loop.pool.free_pages == loop.geom.num_pages
+    finally:
+        loop.close()
+
+
+def test_queue_full_backpressure_leaves_no_state(engine):
+    loop = E.EngineLoop(engine, max_slots=1, max_queue=1)
+    try:
+        free0 = loop.pool.free_pages
+        avail0 = loop.pool.available_pages
+        rng = np.random.default_rng(17)
+        a, b = _reqs(2, rng, max_new=4, sampling=GREEDY)
+        b.uid = 1
+        loop.submit(a)
+        with pytest.raises(QueueFullError):
+            loop.submit(b)
+        # the rejected request left no pages, slots, or prefix pins behind
+        assert loop.pool.free_pages == free0
+        assert loop.pool.available_pages == avail0
+        assert loop.pool.pages_in_use == 0
+        assert all(r is None for r in loop.scheduler.running)
+        assert [r.uid for r in loop.scheduler.waiting] == [a.uid]
+        assert loop.rejected == 1
+        # the accepted request still serves to completion
+        loop.drain()
+        assert a.done and len(a.generated) == 4
+        # and the pool is fully reclaimed afterwards (prefix pins of the
+        # completed request are reclaimable, not leaked)
+        assert loop.pool.available_pages == avail0
+    finally:
+        loop.close()
+
+
+# ---------------------------------------------------------------------------
+# submit/step/poll: incremental serving
+# ---------------------------------------------------------------------------
+
+def test_submit_step_poll_streams_tokens(engine, ref_engine):
+    loop = E.EngineLoop(engine, max_slots=2)
+    try:
+        rng = np.random.default_rng(21)
+        req = Request(uid=0, prompt_tokens=list(rng.integers(1, 400, 6)),
+                      max_new_tokens=6, sampling=GREEDY)
+        loop.submit(req)
+        seen, done = [], False
+        steps = 0
+        while not done:
+            events = loop.step()
+            steps += 1
+            new, done = loop.poll(req.uid)
+            seen.extend(new)
+            for ev in events:
+                assert ev.uid == req.uid
+                assert ev.token == req.generated[ev.index]
+            if new and len(seen) < 6:
+                # the stream is incremental: tokens arrive while the
+                # request is still decoding
+                assert not req.done
+            assert steps < 64
+        assert seen == req.generated
+        assert seen == _reference(ref_engine, req)
+        with pytest.raises(KeyError):
+            loop.poll(req.uid)        # consumed-and-done streams drop
+    finally:
+        loop.close()
+
+
+def test_on_token_callback_fires_per_commit(engine):
+    got = []
+    loop = E.EngineLoop(engine, max_slots=2,
+                        on_token=lambda r, t, d: got.append((r.uid, t, d)))
+    try:
+        rng = np.random.default_rng(22)
+        reqs = _reqs(2, rng, max_new=4, sampling=GREEDY)
+        for r in reqs:
+            loop.submit(r)
+        loop.drain()
+        assert len(got) == 8
+        assert sum(1 for _, _, d in got if d) == 2
+        for r in reqs:
+            assert [t for u, t, _ in got if u == r.uid] == r.generated
+    finally:
+        loop.close()
+
+
+def test_per_request_sampling_mixed_batch(engine, ref_engine):
+    """One greedy and one hot request decode side by side; the greedy row
+    must still match the single-request reference bitwise."""
+    rng = np.random.default_rng(23)
+    prompt = list(rng.integers(1, 400, 8))
+    cold = Request(uid=0, prompt_tokens=list(prompt), max_new_tokens=6,
+                   sampling=SM.SamplingParams(temperature=0.0,
+                                              max_new_tokens=6))
+    hot = Request(uid=1, prompt_tokens=list(rng.integers(1, 400, 8)),
+                  max_new_tokens=6,
+                  sampling=SM.SamplingParams(temperature=1.3, top_k=40,
+                                             max_new_tokens=6))
+    loop = E.EngineLoop(engine, max_slots=2)
+    try:
+        loop.submit(cold)
+        loop.submit(hot)
+        loop.drain()
+        assert cold.generated == _reference(ref_engine, cold)
+        assert len(hot.generated) == 6
+    finally:
+        loop.close()
+
+
+def test_run_shim_respects_per_request_override(engine, ref_engine):
+    """run(sampling=...) is a default-for-all shim: a request carrying its
+    own SamplingParams keeps it."""
+    rng = np.random.default_rng(24)
+    own = Request(uid=0, prompt_tokens=list(rng.integers(1, 400, 8)),
+                  max_new_tokens=5,
+                  sampling=SM.SamplingParams(temperature=0.0,
+                                             max_new_tokens=5))
+    dflt = Request(uid=1, prompt_tokens=list(rng.integers(1, 400, 8)),
+                   max_new_tokens=5)
+    loop = E.EngineLoop(engine, max_slots=2)
+    try:
+        loop.run([own, dflt], SM.SamplingParams(temperature=1.5, top_k=30,
+                                                max_new_tokens=5))
+        assert dflt.sampling.temperature == 1.5     # took the default
+        assert own.sampling.temperature == 0.0      # kept its own
+        assert own.generated == _reference(ref_engine, own)
+    finally:
+        loop.close()
+
+
+def test_priority_request_overtakes_queue_end_to_end(engine):
+    """QoS through the full loop: with one slot busy and two queued, the
+    high-priority late arrival is admitted first."""
+    rng = np.random.default_rng(25)
+    first, normal, vip = _reqs(3, rng, lo=4, hi=8, max_new=8,
+                               sampling=GREEDY)
+    vip.priority = 10
+    loop = E.EngineLoop(engine, max_slots=1)
+    try:
+        loop.submit(first)
+        loop.step()                   # first occupies the only slot
+        loop.submit(normal)
+        loop.submit(vip)              # arrives later, but priority 10
+        loop.drain()
+        assert vip.admit_step < normal.admit_step
+    finally:
+        loop.close()
+
+
+# ---------------------------------------------------------------------------
+# the run() compatibility wrapper
+# ---------------------------------------------------------------------------
+
+def _mixed_trace(cfg, n, p_lo, p_hi, d_lo, d_hi, seed=11):
+    """The bench_continuous_batching mixed-length trace generator."""
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt_tokens=list(rng.integers(
+                        1, cfg.vocab_size, size=int(rng.integers(p_lo, p_hi)))),
+                    max_new_tokens=int(rng.integers(d_lo, d_hi)))
+            for i in range(n)]
+
+
+def test_run_wrapper_equals_explicit_submit_step(engine):
+    """run() is a thin shim: driving submit()/step() by hand with the same
+    arrivals yields bitwise-identical completions (greedy)."""
+    cfg = engine.cfg
+    trace_a = _mixed_trace(cfg, 8, 4, 17, 4, 9, seed=31)
+    trace_b = _mixed_trace(cfg, 8, 4, 17, 4, 9, seed=31)
+    arrivals = [0, 0, 1, 3, 3, 5, 8, 13]
+    sp = SM.SamplingParams(temperature=0.0, max_new_tokens=9)
+    loop_a = E.EngineLoop(engine, max_slots=2)
+    loop_b = E.EngineLoop(engine, max_slots=2)
+    try:
+        loop_a.run(trace_a, sp, arrivals=arrivals)
+        pending = sorted(zip(arrivals, trace_b), key=lambda p: (p[0], p[1].uid))
+        step = 0
+        while pending or loop_b.has_work():
+            while pending and pending[0][0] <= step:
+                _, req = pending.pop(0)
+                req.sampling = sp
+                loop_b.submit(req)
+            loop_b.step()
+            step += 1
+        for ra, rb in zip(trace_a, trace_b):
+            assert ra.generated == rb.generated, ra.uid
+    finally:
+        loop_a.close()
+        loop_b.close()
+
+
+@pytest.mark.slow
+def test_run_wrapper_bitwise_on_24_request_mixed_trace(tmp_path_factory):
+    """The redesign acceptance gate: run() — now a wrapper over
+    submit/step/drain — stays bitwise-equal (greedy) on the existing
+    24-request mixed trace (bench_continuous_batching's full-size trace)
+    to the pre-redesign ground truth, i.e. each request's uninterrupted
+    single-request greedy decode."""
+    cfg = registry.reduced(registry.get("qwen2-7b"))
+    eng = E.build_engine(cfg, max_seq=128,
+                         flash_dir=str(tmp_path_factory.mktemp("flash24")))
+    ref = E.build_engine(cfg, max_seq=128,
+                         flash_dir=str(tmp_path_factory.mktemp("flash24r")))
+    trace = _mixed_trace(cfg, 24, 4, 65, 4, 25, seed=11)
+    sp = SM.SamplingParams(temperature=0.0, max_new_tokens=25)
+    loop = E.EngineLoop(eng, max_slots=4)
+    try:
+        out = loop.run(trace, sp)
+        assert all(r.done for r in out)
+        for r in out:
+            expect = ref.generate(
+                [Request(uid=r.uid, prompt_tokens=list(r.prompt_tokens),
+                         max_new_tokens=r.max_new_tokens)],
+                SM.SamplingParams(temperature=0.0,
+                                  max_new_tokens=r.max_new_tokens)
+            )[0].generated
+            assert r.generated == expect, r.uid
+    finally:
+        loop.close()
