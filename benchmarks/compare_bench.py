@@ -14,10 +14,13 @@ increase fails — the unified chunked-prefill step exists to protect
 exactly this tail), ``oversub_equal_output:min:1.0`` (the
 oversubscribed Flash-spill decode must stay bitwise-equal to all-DRAM —
 an ABSOLUTE invariant, enforced even when no previous artifact exists)
-and ``flash_hit_rate:min:0.9`` (the staging prefetch must keep hiding
-the Flash reads).  Override or extend with repeated
-``--gate key:direction:threshold`` flags (directions: higher/lower are
-relative to the previous run, min is an absolute floor).
+``flash_hit_rate:min:0.9`` (the staging prefetch must keep hiding
+the Flash reads) and ``recompiles_after_warmup:max:0`` (the hot serving
+loop must never compile once ``EngineLoop.warmup()`` has traced the
+bucket/chunk graphs — an ABSOLUTE ceiling).  Override or extend with
+repeated ``--gate key:direction:threshold`` flags (directions:
+higher/lower are relative to the previous run, min is an absolute
+floor, max an absolute ceiling).
 
 Missing previous artifacts (first run, expired retention) and metrics
 absent on either side pass with a notice — the gate only ever fails on a
@@ -38,7 +41,11 @@ DEFAULT_GATES = ("tokens_per_s:higher:0.10", "ttft_p95_s:lower:0.15",
                  # oversubscribed decode and the Fig. 2 "hidden" staging
                  # regime must hold even when no previous artifact exists
                  "oversub_equal_output:min:1.0",
-                 "flash_hit_rate:min:0.9")
+                 "flash_hit_rate:min:0.9",
+                 # bucketed step graphs: zero compilations after warmup —
+                 # an absolute ceiling on the churny-concurrency trace's
+                 # compile counter
+                 "recompiles_after_warmup:max:0")
 
 
 def load_summary(path: str) -> dict:
@@ -65,9 +72,9 @@ def find_bench_json(path: str) -> str | None:
 
 def parse_gate(spec: str) -> tuple[str, str, float]:
     parts = spec.split(":")
-    if len(parts) != 3 or parts[1] not in ("higher", "lower", "min"):
+    if len(parts) != 3 or parts[1] not in ("higher", "lower", "min", "max"):
         raise SystemExit(f"[compare] bad --gate {spec!r}; expected "
-                         f"key:higher|lower|min:threshold")
+                         f"key:higher|lower|min|max:threshold")
     return parts[0], parts[1], float(parts[2])
 
 
@@ -75,21 +82,25 @@ def check_gate(prev: dict, cur: dict, key: str, direction: str,
                threshold: float) -> bool:
     """Returns True if the gate passes.  ``higher``: higher is better,
     fail on a fractional drop beyond threshold; ``lower``: lower is
-    better, fail on a fractional increase beyond threshold; ``min``: an
-    ABSOLUTE floor on the current value — no previous artifact needed,
-    and a missing current metric fails (invariants like bitwise equality
-    must never slip through an expired-artifact notice)."""
-    if direction == "min":
+    better, fail on a fractional increase beyond threshold; ``min``/
+    ``max``: an ABSOLUTE floor/ceiling on the current value — no previous
+    artifact needed, and a missing current metric fails (invariants like
+    bitwise equality or zero-recompiles must never slip through an
+    expired-artifact notice)."""
+    if direction in ("min", "max"):
         if key not in cur:
             print(f"[compare] FAIL: required metric {key!r} missing from "
                   f"the current summary", file=sys.stderr)
             return False
         c = float(cur[key])
-        print(f"[compare] {key} (absolute floor): current={c:.6f} "
-              f"required >= {threshold:.6f}")
-        if c < threshold:
-            print(f"[compare] FAIL: {key}={c} below the absolute floor "
-                  f"{threshold}", file=sys.stderr)
+        bound = "floor" if direction == "min" else "ceiling"
+        cmp = ">=" if direction == "min" else "<="
+        print(f"[compare] {key} (absolute {bound}): current={c:.6f} "
+              f"required {cmp} {threshold:.6f}")
+        if (c < threshold) if direction == "min" else (c > threshold):
+            print(f"[compare] FAIL: {key}={c} "
+                  f"{'below' if direction == 'min' else 'above'} the "
+                  f"absolute {bound} {threshold}", file=sys.stderr)
             return False
         return True
     if key not in prev or key not in cur:

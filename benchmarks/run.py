@@ -11,6 +11,8 @@ Each emits ``name,us_per_call,derived`` CSV rows:
   bench_geometry             — §5.4 (Region fusion memory-op reduction)
   bench_continuous_batching  — continuous vs slot-synchronous serving
   bench_gateway              — streaming gateway goodput under Poisson load
+  bench_warmup               — bucketed step graphs: warmup cost, cold vs
+                               warm TTFT, B=1 speedup, zero-recompile gate
 
 Flags:
   --smoke        reduced configurations (CI benchmark-smoke job)
@@ -40,6 +42,7 @@ MODULES = [
     "benchmarks.bench_prefill_decode",
     "benchmarks.bench_continuous_batching",
     "benchmarks.bench_gateway",
+    "benchmarks.bench_warmup",
     # last: the oversubscribed-decode scenario builds whole engines, and
     # its jit/alloc churn must not perturb the throughput numbers above
     "benchmarks.bench_kv_flash",
@@ -83,9 +86,9 @@ def main() -> None:
               f"({len(common.FALLBACKS)} dispatch fallbacks) to {args.json}",
               file=sys.stderr)
         # repo-root trajectory artifact: headline numbers per PR
-        bench_path = os.path.join(_ROOT, "BENCH_pr6.json")
+        bench_path = os.path.join(_ROOT, "BENCH_pr7.json")
         with open(bench_path, "w") as f:
-            json.dump({"suite": "mnn-llm-repro", "pr": 6,
+            json.dump({"suite": "mnn-llm-repro", "pr": 7,
                        "smoke": args.smoke, "host": host,
                        "summary": common.SUMMARY,
                        "fallbacks": common.FALLBACKS}, f, indent=2)

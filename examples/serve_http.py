@@ -43,8 +43,16 @@ def main() -> None:
     tok = ByteTokenizer(cfg.vocab_size)
 
     with G.GatewayServer(G.EngineService(loop), tokenizer=tok) as gw:
-        print(f"[http] gateway up at {gw.url} "
-              f"({requests.get(gw.url + '/healthz').json()})")
+        # /healthz answers 503 ("warming") until warmup() has traced the
+        # bucketed decode + prefill-chunk graphs, then 200 ("ok")
+        t0 = time.perf_counter()
+        while True:
+            hz = requests.get(gw.url + "/healthz")
+            print(f"[http] +{time.perf_counter() - t0:5.1f}s "
+                  f"healthz {hz.status_code}: {hz.json()}")
+            if hz.status_code == 200:
+                break
+            time.sleep(2.0)
 
         # --- SSE streaming: tokens on the wire as the engine commits them
         t0 = time.perf_counter()
@@ -104,8 +112,9 @@ def main() -> None:
               f"ttft_p50={stats['ttft_p50_s'] * 1e3:.0f}ms")
 
     # --- the same stack, in process: EngineService without HTTP ----------
+    # (warmup=False: compile lazily, like --no-warmup on the CLI)
     loop2 = E.EngineLoop(eng, max_slots=2)
-    with G.EngineService(loop2) as svc:
+    with G.EngineService(loop2, warmup=False) as svc:
         stream = svc.submit(tok.encode("in-process"),
                             SM.SamplingParams(temperature=0.0,
                                               max_new_tokens=6))

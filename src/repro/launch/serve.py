@@ -60,6 +60,11 @@ def main() -> None:
     ap.add_argument("--max-queue", type=int, default=64,
                     help="gateway backpressure: waiting requests beyond "
                          "this bound are rejected with HTTP 429")
+    ap.add_argument("--warmup", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="pre-trace every bucketed decode / prefill-chunk "
+                         "graph before serving (gateway /healthz answers "
+                         "503 while warming); --no-warmup compiles lazily")
     args = ap.parse_args()
 
     cfg = registry.get(args.arch)
@@ -81,7 +86,8 @@ def main() -> None:
         print(f"[serve] gateway on http://{args.host}:{args.http} "
               f"({args.slots} slots, queue bound {args.max_queue}, "
               f"{'byte tokenizer' if tok else 'token-id prompts only'})")
-        G.serve(G.EngineService(loop), host=args.host, port=args.http,
+        G.serve(G.EngineService(loop, warmup=args.warmup),
+                host=args.host, port=args.http,
                 tokenizer=tok, model_name=cfg.name)
         return
 
@@ -97,6 +103,11 @@ def main() -> None:
     if args.continuous and not cfg.is_encdec:
         loop = E.EngineLoop(eng, max_slots=args.slots,
                             preempt_patience=args.preempt_patience)
+        if args.warmup:
+            rep = loop.warmup()
+            print(f"[serve] warmup: {rep['graphs']} graphs "
+                  f"(buckets {rep['decode_buckets']}, "
+                  f"chunks {rep['chunk_sizes']}) in {rep['warmup_s']:.2f}s")
         t0 = time.perf_counter()
         out = loop.run(reqs, sp)
         wall = time.perf_counter() - t0

@@ -635,6 +635,53 @@ def prefill_chunk_paged(params: dict, cfg: ModelConfig, embeds: Array,
     return logits, cache
 
 
+def decode_step_bucketed(params: dict, cfg: ModelConfig, embeds: Array,
+                         cache: dict, slot_idx: Array,
+                         ctx: Optional[StepCtx] = None,
+                         lora: Optional[dict] = None,
+                         active: Optional[Array] = None) -> Tuple[Array, dict]:
+    """One decode step over a *bucket* of rows gathered from the full slot
+    set (serving-loop batch bucketing).  embeds: [b, 1, d] for bucket size
+    b <= max_slots, already gathered; ``slot_idx`` [b] int32 names the slot
+    each bucket row came from (the caller pads to bucket size with distinct
+    idle slots and masks them via ``active`` [b]).
+
+    Only ``pos`` and the shared page table are gathered — the pooled KV
+    pages are physical-page addressed, so the pool never moves: appends
+    route through the gathered table rows straight to each slot's pages,
+    exactly where the full-batch step would put them.  That plus per-row-
+    independent math (matmul rows, rmsnorm, attention never mix batch
+    rows) makes the bucketed step bitwise equal to the full-batch step on
+    the active rows.
+
+    Requires a paged uniform stack (full-attention, window 0 — the engine
+    gates on this): windowed rings and SSM states are *batch-row*
+    addressed, so a gathered row order would read the wrong state.
+
+    Returns (logits [b, V] in bucket order, new cache with full-shape
+    ``pos`` scattered back).  The caller scatters logits to slots.
+    """
+    ctx = ctx or StepCtx(cfg)
+    if lora is not None:
+        ctx = dataclasses.replace(ctx, lora=lora)
+    x = embeds.astype(jnp.bfloat16)
+    b, T = x.shape[:2]
+    slot_idx = jnp.asarray(slot_idx, jnp.int32)
+    pos_full = cache["pos"]                    # [max_slots]
+    pos = pos_full[slot_idx]                   # [b]
+    positions = pos[:, None] + jnp.arange(T)[None]
+    small = dict(cache)
+    small["pos"] = pos
+    small["table"] = cache["table"][slot_idx]  # [b, pages_per_row]
+    x, small, _ = _run_stacks(x, params, cfg, "decode", positions, small, ctx)
+    new_cache = dict(cache)
+    new_cache["stacks"] = small["stacks"]      # pool-wide: full shape
+    stepped = pos + T if active is None else jnp.where(active, pos + T, pos)
+    new_cache["pos"] = pos_full.at[slot_idx].set(stepped)
+    logits = _logits(x, params, cfg, ctx.dispatch)[:, -1]
+    return logits, new_cache
+
+
 def decode_step(params: dict, cfg: ModelConfig, embeds: Array, cache: dict,
                 positions: Optional[Array] = None,
                 ctx: Optional[StepCtx] = None,

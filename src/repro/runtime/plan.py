@@ -219,6 +219,29 @@ def _packable(leaf) -> bool:
     return isinstance(leaf, q.QuantizedTensor) and leaf.data.ndim <= 3
 
 
+def decode_buckets(max_slots: int, uniform: bool = True) -> Tuple[int, ...]:
+    """Batch-size bucket ladder for the pre-compiled decode step graphs:
+    1/2/4/... powers of two up to ``max_slots``, always topped by
+    ``max_slots`` itself (a non-pow2 slot count gets its own full-batch
+    bucket, so the ladder's top graph is exactly the old full-batch step).
+
+    Geometry-aware gating: bucketed dispatch gathers the active rows
+    through the shared page table, which only full-attention window-0
+    stacks support — windowed rings and SSM states address KV by the
+    *physical batch row* (``ring_view``'s ``rows * ppw`` pages), so a
+    gathered row order would read the wrong ring.  Those stacks
+    (``uniform=False``) keep the single full-batch graph."""
+    if not uniform or max_slots <= 1:
+        return (max(1, int(max_slots)),)
+    ladder = []
+    b = 1
+    while b < max_slots:
+        ladder.append(b)
+        b *= 2
+    ladder.append(max_slots)
+    return tuple(ladder)
+
+
 def kv_page_size(max_seq: int) -> int:
     """KV pool page size: the largest power-of-two divisor of ``max_seq``
     on the solver's lane grid — capped at LANE (the S-block alignment
@@ -260,6 +283,22 @@ class ExecutionPlan:
         if key not in self.matmuls:          # shape unseen at build time
             self.matmuls[key] = MatmulPlan(k=k, n=n, bits=bits)
         return self.matmuls[key]
+
+    def decode_buckets(self, max_slots: int,
+                       uniform: bool = True) -> Tuple[int, ...]:
+        """The serving loop's batch-size bucket ladder (plan-owned, like
+        tile shapes and pool geometry) — see module-level
+        ``decode_buckets``.  ``EngineLoop.warmup()`` pre-traces one jitted
+        decode step per bucket and pre-solves each bucket's matmul tiles,
+        so the hot loop never compiles or solves."""
+        return decode_buckets(max_slots, uniform=uniform)
+
+    def presolve_tiles(self, m: int) -> None:
+        """Fill every recorded matmul plan's tile cache for M-bucket ``m``
+        (decode M = batch bucket): ``solve_tpu_blocks`` runs here, at
+        warmup, never inside a trace."""
+        for plan in self.matmuls.values():
+            plan.blocks(m)
 
     def kv_pool_geometry(self, cfg, max_seq: int, max_slots: int,
                          dram_budget_bytes: Optional[int] = None,

@@ -43,7 +43,34 @@ from repro.serving.scheduler import (AdmissionError, ContinuousScheduler,
 
 __all__ = ["AdmissionError", "QueueFullError", "Engine", "EngineLoop",
            "EngineStats", "RequestStats", "Request", "TokenEvent",
-           "build_engine", "percentile"]
+           "bucket_cover", "build_engine", "percentile"]
+
+
+def bucket_cover(buckets: Sequence[int], wave: Sequence[int],
+                 max_slots: int):
+    """Gather plan for one decode wave: pick the smallest ladder bucket
+    covering the wave's slots and pad to bucket size with DISTINCT idle
+    slots (distinct => the logits/pos scatters have no duplicate indices,
+    so their results are deterministic; the pad rows are masked inactive
+    and their table rows upload as all-trash, so they write nothing).
+
+    Returns (slot_idx int32 [bucket], active bool [bucket]) with the wave
+    slots sorted first — the bucket row order is a pure function of the
+    wave set, so repeated coverage of the same slots hits the same trace.
+    """
+    n = len(wave)
+    bucket = next(b for b in buckets if b >= n)
+    idx = sorted(int(s) for s in wave)
+    taken = set(idx)
+    for s in range(max_slots):
+        if len(idx) >= bucket:
+            break
+        if s not in taken:
+            idx.append(s)
+    assert len(idx) == bucket, (tuple(buckets), tuple(wave), max_slots)
+    active = np.zeros((bucket,), bool)
+    active[:n] = True
+    return np.asarray(idx, np.int32), active
 
 
 @dataclasses.dataclass
@@ -97,6 +124,12 @@ class EngineStats:
     # recomputed) and prompt chunks run by the unified step
     shared_prompt_tokens: int = 0
     prefill_chunks: int = 0
+    # bucketed step graphs: total jit-cache entries across the loop's
+    # step functions (one per (function, shape) compilation), and entries
+    # added after warmup() — 0 is the headline gate: the hot loop never
+    # compiles once warmed
+    compile_events: int = 0
+    recompiles_after_warmup: int = 0
     # continuous batching: per-request TTFT/TPOT records
     requests: List[RequestStats] = dataclasses.field(default_factory=list)
 
@@ -339,6 +372,7 @@ class EngineLoop:
                  prefill_token_budget: Optional[int] = None,
                  prefix_sharing: bool = True,
                  proactive_spill: bool = True,
+                 bucketing: bool = True,
                  flash_budget_bytes: Optional[int] = None,
                  default_sampling: Optional[SM.SamplingParams] = None,
                  max_queue: Optional[int] = None,
@@ -421,11 +455,46 @@ class EngineLoop:
             functools.partial(self._decode_impl, cfg, engine._ctx))
         self._chunk = jax.jit(
             functools.partial(self._chunk_impl, cfg, engine._ctx))
+        # batch-size bucketing (flashinfer-style pre-planned step graphs):
+        # the plan derives the ladder; dispatch gathers the active slots
+        # into the smallest covering bucket so low-concurrency decode runs
+        # at bucket shape, not max_slots.  Gated like multi-chunk prefill
+        # on uniform full-attention stacks (windowed rings and SSM states
+        # are batch-row addressed — a gathered row order would read the
+        # wrong state) and additionally on MoE-free ones (expert capacity
+        # couples tokens across the batch, so a bucketed MoE step would
+        # not be bitwise-equal to the full-batch step).
+        no_moe = not any(pat.moe for pats, _ in cfg.layer_plan()
+                         for pat in pats)
+        self._bucketed = (bucketing and self._uniform and no_moe
+                          and max_slots > 1)
+        self.buckets = engine.plan.decode_buckets(
+            max_slots, uniform=self._bucketed)
+        self._decode_b = jax.jit(
+            functools.partial(self._decode_bucket_impl, cfg, engine._ctx))
+        # warmup() pre-traces every bucket/chunk graph it can need; the
+        # jit caches' entry counts make post-warmup compilation gateable
+        self.warmed = False
+        self._warmup_graphs = 0
+        self._warmup_report: Optional[dict] = None
 
     @staticmethod
     def _decode_impl(cfg, ctx, params, embeds, cache, lora, active):
         return T.decode_step(params, cfg, embeds, cache, ctx=ctx, lora=lora,
                              active=active)
+
+    @staticmethod
+    def _decode_bucket_impl(cfg, ctx, params, embeds, cache, lora, active,
+                            slot_idx, logits_prev):
+        logits_b, cache = T.decode_step_bucketed(
+            params, cfg, embeds, cache, slot_idx, ctx=ctx, lora=lora,
+            active=active)
+        # scatter the bucket's logits back to their slots inside the jit;
+        # pad rows (active=False) keep the previous value — _spill_row
+        # reads self.logits[slot] later, so garbage must never land there
+        logits_full = logits_prev.at[slot_idx].set(
+            jnp.where(active[:, None], logits_b, logits_prev[slot_idx]))
+        return logits_full, cache
 
     @staticmethod
     def _chunk_impl(cfg, ctx, params, embeds, cache, slot, pos0, last_idx,
@@ -447,6 +516,85 @@ class EngineLoop:
         while c < remaining:
             c *= 2
         return c
+
+    def _chunk_sizes(self) -> tuple:
+        """Every chunk size ``_next_chunk`` can emit (full slabs + the
+        pow2 final-chunk grid) — the prefill graphs warmup() pre-traces,
+        one compilation per size.  Empty for non-uniform stacks: their
+        single exact whole-prompt chunk has no enumerable size."""
+        if self.prefill_chunk is None:
+            return ()
+        return tuple(sorted({self._next_chunk(r)
+                             for r in range(1, self.prefill_chunk + 1)}))
+
+    def compile_events(self) -> int:
+        """Total jit-cache entries across the loop's step functions — one
+        per (function, argument-shape) compilation, monotonic.  step()
+        mirrors it into EngineStats, so any post-warmup trace shows up as
+        ``stats.recompiles_after_warmup`` > 0."""
+        total = 0
+        for fn in (self._decode, self._decode_b, self._chunk):
+            try:
+                total += fn._cache_size()
+            except AttributeError:       # jit cache introspection gone
+                return 0
+        return total
+
+    def warmup(self) -> dict:
+        """Trace every step graph the hot loop can need — one bucketed
+        decode per ladder bucket (or the one full-batch step when
+        bucketing is off), one prefill graph per reachable chunk size —
+        and pre-solve each bucket's matmul tiles.  The traced steps
+        actually execute, against a scratch cache whose page table is
+        all-trash with every row inactive: the writes land in the trash
+        page and the outputs are discarded, so engine state is untouched.
+
+        After this, a churny-concurrency trace only ever hits cache
+        entries: ``stats.recompiles_after_warmup`` stays 0 (the CI gate).
+        Idempotent — a second call hits the jit caches and returns fast.
+        Returns {"warmup_s", "graphs", "decode_buckets", "chunk_sizes"}.
+        """
+        t0 = time.perf_counter()
+        eng, cfg = self.eng, self.cfg
+        wcache = dict(self.cache)
+        wcache["table"] = jnp.full(
+            (self.max_slots, self.geom.pages_per_row),
+            self.geom.trash_page, jnp.int32)
+        d = cfg.d_model
+        outs = []
+        if self._bucketed:
+            for b in self.buckets:
+                eng.plan.presolve_tiles(b)
+                lg, _ = self._decode_b(
+                    eng.params, jnp.zeros((b, 1, d), jnp.bfloat16), wcache,
+                    eng._lora_for([None] * b), jnp.zeros((b,), bool),
+                    jnp.arange(b, dtype=jnp.int32), self.logits)
+                outs.append(lg)
+        else:
+            eng.plan.presolve_tiles(self.max_slots)
+            lg, _ = self._decode(
+                eng.params, jnp.zeros((self.max_slots, 1, d), jnp.bfloat16),
+                wcache, eng._lora_for([None] * self.max_slots),
+                jnp.zeros((self.max_slots,), bool))
+            outs.append(lg)
+        chunks = self._chunk_sizes()
+        for c in chunks:
+            eng.plan.presolve_tiles(c)
+            lg, _ = self._chunk(
+                eng.params, jnp.zeros((1, c, d), jnp.bfloat16), wcache,
+                jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32),
+                jnp.asarray(c - 1, jnp.int32), eng._lora_for([None]))
+            outs.append(lg)
+        jax.block_until_ready(outs)
+        self.warmed = True
+        self._warmup_graphs = self.compile_events()
+        eng.stats.compile_events = self._warmup_graphs
+        self._warmup_report = {
+            "warmup_s": time.perf_counter() - t0,
+            "graphs": self._warmup_graphs,
+            "decode_buckets": [int(b) for b in self.buckets],
+            "chunk_sizes": [int(c) for c in chunks]}
+        return self._warmup_report
 
     def _slot_lora(self) -> Optional[dict]:
         return self.eng._lora_for(self.scheduler.running)
@@ -1005,7 +1153,20 @@ class EngineLoop:
         prompt chunks under the token budget, sample one token for every
         decodable row (committed tokens are emitted HERE — streaming
         consumers see them before the decode compute below even runs),
-        then the batched decode in staging waves."""
+        then the batched decode in staging waves, each wave gathered into
+        its smallest covering batch bucket."""
+        try:
+            return self._step_inner()
+        finally:
+            # mirror the jit caches into the stats at EVERY exit path, so
+            # a compile on any phase of this step is immediately visible
+            ev = self.compile_events()
+            self.eng.stats.compile_events = ev
+            if self.warmed:
+                self.eng.stats.recompiles_after_warmup = \
+                    ev - self._warmup_graphs
+
+    def _step_inner(self) -> List[TokenEvent]:
         eng, sched, cfg = self.eng, self.scheduler, self.cfg
         events: List[TokenEvent] = []
         sched.step = self._step_no
@@ -1131,17 +1292,33 @@ class EngineLoop:
             eng.stats.decode_s += (time.perf_counter() - t_step) \
                 - (eng.stats.prefill_s - pf0)
             return events
-        embeds = eng.embed(ids)
         act_slots = [int(s) for s in np.nonzero(active)[0]]
         flash_needs = sum(self.pool.flash_pages_of(s) for s in act_slots)
         self._step_hits = self._step_misses = 0
         waves = self._plan_waves(act_slots)
+        embeds = None if self._bucketed else eng.embed(ids)
         for wave in waves:
             needed = [(s, i) for s in wave
                       for i in self.pool.flash_idxs(s)]
             if needed:
                 self._stage_wave(needed)
             self._upload_table(visible=set(wave))
+            if self._bucketed:
+                # gather the wave into its smallest covering bucket: only
+                # embeds/lora-ids/masks shrink to bucket shape — the
+                # pooled KV never moves, and appends route through the
+                # gathered table rows to each slot's own physical pages.
+                # Pad rows' table rows upload as all-trash (they are
+                # outside ``visible``), so their ride-along appends land
+                # in the trash page exactly like masked full-batch rows.
+                slot_idx, act_b = bucket_cover(self.buckets, wave,
+                                               self.max_slots)
+                self.logits, self.cache = self._decode_b(
+                    eng.params, eng.embed(ids[slot_idx]), self.cache,
+                    eng._lora_for(sched.running,
+                                  rows=[int(s) for s in slot_idx]),
+                    jnp.asarray(act_b), jnp.asarray(slot_idx), self.logits)
+                continue
             wmask = np.zeros((self.max_slots,), bool)
             wmask[wave] = True
             am = jnp.asarray(wmask)

@@ -19,7 +19,8 @@ Two layers:
                              with SSE (``data: {chunk}\\n\\n`` per token,
                              then ``data: [DONE]``), else one JSON body.
                              AdmissionError -> 400, QueueFullError -> 429.
-      GET  /healthz          liveness probe
+      GET  /healthz          readiness probe (503 until warmup() has
+                             traced the step graphs, 200 after)
       GET  /v1/stats         EngineStats + queue/pool snapshot
 
 aiohttp is optional: ``EngineService`` (and everything tests drive
@@ -102,7 +103,8 @@ class EngineService:
     it.  Per-token delivery rides the loop's ``on_token`` callback into
     each request's ``TokenStream`` queue."""
 
-    def __init__(self, loop: E.EngineLoop, idle_wait_s: float = 0.05):
+    def __init__(self, loop: E.EngineLoop, idle_wait_s: float = 0.05,
+                 warmup: bool = True):
         assert loop.on_token is None, \
             "EngineService owns the loop's on_token callback"
         self.loop = loop
@@ -114,8 +116,20 @@ class EngineService:
         self._stop = False
         self._uids = itertools.count()
         self.started_t = time.time()
+        # warmup runs on the ENGINE thread (first thing _serve does), so
+        # start() returns immediately and /healthz answers 503 while the
+        # bucket/chunk graphs trace — load balancers never route traffic
+        # into a compiling engine.  warmup=False is the escape hatch for
+        # latency-insensitive tooling that would rather compile lazily.
+        self._warmup_requested = warmup
         self._thread = threading.Thread(
             target=self._serve, name="engine-loop", daemon=True)
+
+    @property
+    def ready(self) -> bool:
+        """True once the loop's step graphs are traced (or warmup was
+        disabled) — the /healthz readiness signal."""
+        return self.loop.warmed or not self._warmup_requested
 
     # --- lifecycle ---------------------------------------------------------
     def start(self) -> "EngineService":
@@ -174,6 +188,8 @@ class EngineService:
                 del self._streams[req.uid]
 
     def _serve(self) -> None:
+        if self._warmup_requested and not self.loop.warmed:
+            self.loop.warmup()
         while True:
             with self._wake:
                 while not self._stop and not self.loop.has_work():
@@ -218,6 +234,12 @@ class EngineService:
                 "preempted_spilled_pages": s.spilled_pages,
                 "cold_spilled_pages": s.cold_spilled_pages,
                 "shared_prompt_tokens": s.shared_prompt_tokens,
+                # bucketed step graphs: the compile counter the CI gate
+                # watches (recompiles_after_warmup must stay 0)
+                "warmed": self.loop.warmed,
+                "decode_buckets": [int(b) for b in self.loop.buckets],
+                "compile_events": s.compile_events,
+                "recompiles_after_warmup": s.recompiles_after_warmup,
             }
 
 
@@ -343,9 +365,15 @@ def build_app(svc: EngineService, tokenizer=None,
                       "total_tokens": len(prompt_tokens) + len(toks)}})
 
     async def healthz(request: "web.Request") -> "web.Response":
-        return web.json_response({
-            "status": "ok",
-            "engine_alive": svc._thread.is_alive() or not svc._stop})
+        # readiness, not just liveness: 503 until warmup() has traced
+        # every bucket/chunk graph, so a load balancer never routes
+        # traffic into a compiling engine
+        ready = svc.ready
+        return web.json_response(
+            {"status": "ok" if ready else "warming",
+             "ready": ready,
+             "engine_alive": svc._thread.is_alive() or not svc._stop},
+            status=200 if ready else 503)
 
     async def stats(request: "web.Request") -> "web.Response":
         return web.json_response(

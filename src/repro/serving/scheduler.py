@@ -344,8 +344,13 @@ class ContinuousScheduler:
         if not victims:
             return None
         # lowest priority class loses its slot first; within a class the
-        # longest-running request (the original policy) is the victim
-        victim = max(victims, key=lambda r: (-r.priority, len(r.generated)))
+        # longest-running request (the original policy) is the victim,
+        # and among equals the HIGHEST slot goes — admit() refills the
+        # lowest free slot, so the active set stays dense in the low
+        # slots and the engine's bucketed decode covers it with the
+        # smallest possible batch bucket
+        victim = max(victims,
+                     key=lambda r: (-r.priority, len(r.generated), r.slot))
         return self.evict(victim), victim
 
     def finish(self, req: Request) -> None:

@@ -1,0 +1,209 @@
+"""Bucketed pre-compiled step graphs: the plan-owned bucket ladder, the
+gather/scatter dispatch (bucket_cover + logits round-trip), warmup graph
+accounting, and the serving-loop acceptance gates — zero recompiles after
+warmup under churny concurrency, and bitwise equality (greedy) with the
+full-batch step.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import registry
+from repro.runtime.plan import decode_buckets
+from repro.serving import engine as E
+from repro.serving import sampling as SM
+from repro.serving.engine import bucket_cover
+from repro.serving.scheduler import Request
+
+GREEDY = SM.SamplingParams(temperature=0.0, max_new_tokens=32)
+
+
+@pytest.fixture(scope="module")
+def engine(tmp_path_factory):
+    cfg = registry.reduced(registry.get("qwen2-7b"))
+    return E.build_engine(cfg, max_seq=64,
+                          flash_dir=str(tmp_path_factory.mktemp("flashb")))
+
+
+def _trace(cfg, n, p_lo, p_hi, d_lo, d_hi, seed=11, uid0=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=uid0 + i,
+                    prompt_tokens=list(rng.integers(
+                        1, cfg.vocab_size, size=int(rng.integers(p_lo, p_hi)))),
+                    max_new_tokens=int(rng.integers(d_lo, d_hi)))
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# the plan-owned bucket ladder
+# ---------------------------------------------------------------------------
+
+def test_bucket_ladder_pow2_topped_by_max_slots():
+    assert decode_buckets(1) == (1,)
+    assert decode_buckets(2) == (1, 2)
+    assert decode_buckets(4) == (1, 2, 4)
+    assert decode_buckets(8) == (1, 2, 4, 8)
+    # non-pow2 max_slots still tops the ladder (every live set is covered)
+    assert decode_buckets(6) == (1, 2, 4, 6)
+    assert decode_buckets(5) == (1, 2, 4, 5)
+
+
+def test_bucket_ladder_collapses_when_not_uniform():
+    # windowed/SSM stacks address the KV pool by batch row — gathering
+    # rows would break their addressing, so the ladder degenerates to the
+    # single full-batch graph
+    assert decode_buckets(8, uniform=False) == (8,)
+    assert decode_buckets(1, uniform=False) == (1,)
+
+
+def test_plan_method_delegates(engine):
+    plan = engine.plan
+    assert plan.decode_buckets(8) == decode_buckets(8)
+    assert plan.decode_buckets(8, uniform=False) == (8,)
+    # presolve_tiles fills every matmul's tile cache without tracing
+    plan.presolve_tiles(3)
+    for mp in plan.matmuls.values():
+        assert mp.blocks(3) is not None
+
+
+# ---------------------------------------------------------------------------
+# bucket_cover: gather-index construction
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 2**32 - 1))
+def test_bucket_cover_properties(max_slots, seed):
+    rng = np.random.default_rng(seed)
+    buckets = decode_buckets(max_slots)
+    n = int(rng.integers(1, max_slots + 1))
+    wave = sorted(rng.choice(max_slots, size=n, replace=False).tolist())
+    idx, active = bucket_cover(buckets, wave, max_slots)
+    # smallest covering bucket
+    want = next(b for b in buckets if b >= n)
+    assert len(idx) == len(active) == want
+    # wave slots occupy the first n positions, sorted; mask matches
+    assert idx[:n].tolist() == wave
+    assert active[:n].all() and not active[n:].any()
+    # pad rows are DISTINCT idle slots (duplicate scatter indices would
+    # make the logits write-back nondeterministic)
+    assert len(set(idx.tolist())) == len(idx)
+    assert set(idx.tolist()) <= set(range(max_slots))
+
+
+def test_logits_gather_scatter_roundtrip_every_bucket():
+    """The dispatch's scatter expression — for EVERY active-set choice on
+    a 4-slot loop: active rows take the bucketed logits, every other slot
+    keeps its previous row bitwise (pad rows included: _spill_row reads
+    self.logits[slot] later, garbage there corrupts preempted rows)."""
+    max_slots, vocab = 4, 7
+    buckets = decode_buckets(max_slots)
+    rng = np.random.default_rng(3)
+    for mask in range(1, 2 ** max_slots):
+        wave = [s for s in range(max_slots) if mask >> s & 1]
+        idx, act = bucket_cover(buckets, wave, max_slots)
+        prev = jnp.asarray(rng.normal(size=(max_slots, vocab)), jnp.float32)
+        fresh = jnp.asarray(rng.normal(size=(len(idx), vocab)), jnp.float32)
+        slot_idx, active = jnp.asarray(idx), jnp.asarray(act)
+        out = prev.at[slot_idx].set(
+            jnp.where(active[:, None], fresh, prev[slot_idx]))
+        out = np.asarray(out)
+        for k, s in enumerate(idx.tolist()):
+            if act[k]:
+                assert (out[s] == np.asarray(fresh)[k]).all(), s
+        untouched = [s for k, s in enumerate(idx.tolist()) if not act[k]]
+        untouched += [s for s in range(max_slots) if s not in idx.tolist()]
+        for s in untouched:
+            assert (out[s] == np.asarray(prev)[s]).all(), s
+
+
+# ---------------------------------------------------------------------------
+# warmup: graph accounting + idempotence
+# ---------------------------------------------------------------------------
+
+def test_warmup_traces_every_bucket_and_chunk_once(engine):
+    loop = E.EngineLoop(engine, max_slots=4)
+    try:
+        assert not loop.warmed and loop.buckets == (1, 2, 4)
+        rep = loop.warmup()
+        assert loop.warmed
+        assert rep["decode_buckets"] == [1, 2, 4]
+        assert rep["graphs"] == len(rep["decode_buckets"]) + len(
+            rep["chunk_sizes"])
+        assert loop.compile_events() == rep["graphs"]
+        # idempotent: a second warmup hits only cached graphs
+        rep2 = loop.warmup()
+        assert rep2["graphs"] == rep["graphs"]
+        assert engine.stats.compile_events == rep["graphs"]
+    finally:
+        loop.close()
+
+
+# ---------------------------------------------------------------------------
+# the serving loop: zero recompiles + bitwise equality
+# ---------------------------------------------------------------------------
+
+def test_churny_concurrency_zero_recompiles_and_bitwise(engine):
+    """Live rows churn 1 -> 8 -> 2 -> 5 on an 8-slot loop (mixed prompt
+    lengths, so multi-chunk prefills ride along with decodes and bucket
+    pad rows cover mid-prefill slots).  After warmup the compile counter
+    must not move, and every completion must be bitwise-equal to the
+    bucketing-disabled full-batch loop."""
+    cfg = engine.cfg
+    mk = lambda: (_trace(cfg, 1, 20, 30, 28, 29, seed=41)
+                  + _trace(cfg, 7, 4, 30, 8, 11, seed=42, uid0=1)
+                  + _trace(cfg, 3, 4, 20, 6, 9, seed=43, uid0=8))
+    arrivals = [0] + [4] * 7 + [30] * 3
+    sp = SM.SamplingParams(temperature=0.0, max_new_tokens=32)
+
+    loop = E.EngineLoop(engine, max_slots=8)
+    try:
+        loop.warmup()
+        trace_a = mk()
+        loop.run(trace_a, sp, arrivals=arrivals)
+        assert engine.stats.recompiles_after_warmup == 0
+        assert all(r.done for r in trace_a)
+    finally:
+        loop.close()
+
+    ref = E.EngineLoop(engine, max_slots=8, bucketing=False)
+    try:
+        assert ref.buckets == (8,)
+        trace_b = mk()
+        ref.run(trace_b, sp, arrivals=arrivals)
+    finally:
+        ref.close()
+    for ra, rb in zip(trace_a, trace_b):
+        assert ra.generated == rb.generated, ra.uid
+
+
+@pytest.mark.slow
+def test_bucketed_bitwise_on_24_request_mixed_trace(tmp_path_factory):
+    """The acceptance gate: the bucketed loop on the 24-request mixed
+    trace (bench_continuous_batching's full-size trace) stays
+    bitwise-equal (greedy) to each request's uninterrupted
+    single-request decode."""
+    cfg = registry.reduced(registry.get("qwen2-7b"))
+    eng = E.build_engine(cfg, max_seq=128,
+                         flash_dir=str(tmp_path_factory.mktemp("flash24b")))
+    ref = E.build_engine(cfg, max_seq=128,
+                         flash_dir=str(tmp_path_factory.mktemp("flash24c")))
+    trace = _trace(cfg, 24, 4, 65, 4, 25, seed=11)
+    sp = SM.SamplingParams(temperature=0.0, max_new_tokens=25)
+    loop = E.EngineLoop(eng, max_slots=4)
+    try:
+        assert loop._bucketed
+        loop.warmup()
+        out = loop.run(trace, sp)
+        assert eng.stats.recompiles_after_warmup == 0
+        assert all(r.done for r in out)
+        for r in out:
+            expect = ref.generate(
+                [Request(uid=r.uid, prompt_tokens=list(r.prompt_tokens),
+                         max_new_tokens=r.max_new_tokens)],
+                SM.SamplingParams(temperature=0.0,
+                                  max_new_tokens=r.max_new_tokens)
+            )[0].generated
+            assert r.generated == expect, r.uid
+    finally:
+        loop.close()

@@ -39,7 +39,8 @@ def test_engine_service_streams_while_decoding(engine):
     rng = np.random.default_rng(5)
     prompt = [int(t) for t in rng.integers(1, 400, 8)]
     sp = SM.SamplingParams(temperature=0.0, max_new_tokens=10)
-    with G.EngineService(E.EngineLoop(engine, max_slots=2)) as svc:
+    with G.EngineService(E.EngineLoop(engine, max_slots=2),
+                         warmup=False) as svc:
         stream = svc.submit(prompt, sp)
         first, done = stream.get(timeout=120.0)
         # the defining property of the incremental API: token 0 is
@@ -54,7 +55,8 @@ def test_engine_service_concurrent_streams(engine):
     rng = np.random.default_rng(6)
     prompts = [[int(t) for t in rng.integers(1, 400, 6)] for _ in range(3)]
     sp = SM.SamplingParams(temperature=0.0, max_new_tokens=5)
-    with G.EngineService(E.EngineLoop(engine, max_slots=2)) as svc:
+    with G.EngineService(E.EngineLoop(engine, max_slots=2),
+                         warmup=False) as svc:
         streams = [svc.submit(p, sp) for p in prompts]
         outs = [s.collect(timeout=180.0) for s in streams]
     for p, toks in zip(prompts, outs):
@@ -64,7 +66,8 @@ def test_engine_service_concurrent_streams(engine):
 def test_engine_service_close_fails_pending_streams(engine):
     rng = np.random.default_rng(7)
     sp = SM.SamplingParams(temperature=0.0, max_new_tokens=30)
-    svc = G.EngineService(E.EngineLoop(engine, max_slots=1)).start()
+    svc = G.EngineService(E.EngineLoop(engine, max_slots=1),
+                          warmup=False).start()
     stream = svc.submit([int(t) for t in rng.integers(1, 400, 6)], sp)
     stream.get(timeout=120.0)          # it is really running
     svc.close()
@@ -97,8 +100,18 @@ def test_http_sse_smoke_first_token_before_completion(engine):
     prompt = [int(t) for t in rng.integers(1, 400, 8)]
     loop = E.EngineLoop(engine, max_slots=2, max_queue=8)
     with G.GatewayServer(G.EngineService(loop)) as gw:
-        r = requests.get(f"{gw.url}/healthz", timeout=10)
+        # the engine thread warms up in the background: healthz answers
+        # 503 until every bucket/chunk graph is traced, then flips to 200
+        deadline = time.perf_counter() + 300
+        while time.perf_counter() < deadline:
+            r = requests.get(f"{gw.url}/healthz", timeout=10)
+            assert r.status_code in (200, 503)
+            if r.status_code == 200:
+                break
+            assert r.json()["status"] == "warming"
+            time.sleep(0.25)
         assert r.status_code == 200 and r.json()["status"] == "ok"
+        assert r.json()["ready"] is True
 
         with requests.post(
                 f"{gw.url}/v1/completions",
@@ -126,11 +139,48 @@ def test_http_sse_smoke_first_token_before_completion(engine):
         toks = [c["choices"][0]["token"] for c in chunks]
         assert toks == _greedy_reference(engine, prompt, 12)
 
-        # stats endpoint reflects the completed request
+        # stats endpoint reflects the completed request + warmup state
         stats = requests.get(f"{gw.url}/v1/stats", timeout=10).json()
         assert stats["completed_requests"] >= 1
         assert stats["decode_tokens"] >= 12
         assert stats["total_kv_pages"] > 0
+        assert stats["warmed"] is True
+        assert stats["decode_buckets"] == [1, 2]
+        assert stats["recompiles_after_warmup"] == 0
+
+
+def test_healthz_503_until_warmup_completes(engine):
+    """Readiness probe semantics: while warmup() is still tracing graphs
+    the gateway must answer 503/"warming"; once it returns, 200/"ok".
+    The real warmup is replaced with an Event-gated stub so the test
+    controls exactly when readiness flips."""
+    requests = pytest.importorskip("requests")
+    pytest.importorskip("aiohttp")
+    import threading
+    gate = threading.Event()
+    loop = E.EngineLoop(engine, max_slots=2)
+
+    def gated_warmup():
+        assert gate.wait(timeout=120.0)
+        loop.warmed = True
+        return {"warmup_s": 0.0, "graphs": 0,
+                "decode_buckets": list(loop.buckets), "chunk_sizes": []}
+
+    loop.warmup = gated_warmup
+    with G.GatewayServer(G.EngineService(loop, warmup=True)) as gw:
+        r = requests.get(f"{gw.url}/healthz", timeout=10)
+        assert r.status_code == 503
+        body = r.json()
+        assert body["status"] == "warming" and body["ready"] is False
+        assert body["engine_alive"]
+        gate.set()
+        deadline = time.perf_counter() + 60
+        while time.perf_counter() < deadline:
+            r = requests.get(f"{gw.url}/healthz", timeout=10)
+            if r.status_code == 200:
+                break
+            time.sleep(0.05)
+        assert r.status_code == 200 and r.json()["ready"] is True
 
 
 def test_http_non_stream_and_string_prompt(engine):
@@ -139,7 +189,8 @@ def test_http_non_stream_and_string_prompt(engine):
     from repro.data.tokenizer import ByteTokenizer
     tok = ByteTokenizer(engine.cfg.vocab_size)
     loop = E.EngineLoop(engine, max_slots=2)
-    with G.GatewayServer(G.EngineService(loop), tokenizer=tok) as gw:
+    with G.GatewayServer(G.EngineService(loop, warmup=False),
+                         tokenizer=tok) as gw:
         r = requests.post(f"{gw.url}/v1/completions",
                           json={"prompt": "hello", "max_tokens": 4},
                           timeout=300)
@@ -158,7 +209,7 @@ def test_http_error_mapping_400_and_429(engine):
     pytest.importorskip("aiohttp")
     # max_queue=0: every admission is backpressured -> 429
     loop = E.EngineLoop(engine, max_slots=1, max_queue=0)
-    with G.GatewayServer(G.EngineService(loop)) as gw:
+    with G.GatewayServer(G.EngineService(loop, warmup=False)) as gw:
         r = requests.post(f"{gw.url}/v1/completions",
                           json={"prompt": [1, 2, 3], "max_tokens": 4},
                           timeout=30)
