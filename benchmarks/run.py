@@ -13,6 +13,9 @@ Each emits ``name,us_per_call,derived`` CSV rows:
   bench_gateway              — streaming gateway goodput under Poisson load
   bench_warmup               — bucketed step graphs: warmup cost, cold vs
                                warm TTFT, B=1 speedup, zero-recompile gate
+  bench_weight_stream        — Flash→DRAM weight streaming: tok/s at
+                               1.0/0.6/0.35 weight-DRAM fractions, stall
+                               fraction, prefetch hit rate, bitwise gate
 
 Flags:
   --smoke        reduced configurations (CI benchmark-smoke job)
@@ -43,8 +46,9 @@ MODULES = [
     "benchmarks.bench_continuous_batching",
     "benchmarks.bench_gateway",
     "benchmarks.bench_warmup",
-    # last: the oversubscribed-decode scenario builds whole engines, and
-    # its jit/alloc churn must not perturb the throughput numbers above
+    # last: these build whole engines, and their jit/alloc churn must not
+    # perturb the throughput numbers above
+    "benchmarks.bench_weight_stream",
     "benchmarks.bench_kv_flash",
 ]
 
@@ -86,9 +90,9 @@ def main() -> None:
               f"({len(common.FALLBACKS)} dispatch fallbacks) to {args.json}",
               file=sys.stderr)
         # repo-root trajectory artifact: headline numbers per PR
-        bench_path = os.path.join(_ROOT, "BENCH_pr7.json")
+        bench_path = os.path.join(_ROOT, "BENCH_pr8.json")
         with open(bench_path, "w") as f:
-            json.dump({"suite": "mnn-llm-repro", "pr": 7,
+            json.dump({"suite": "mnn-llm-repro", "pr": 8,
                        "smoke": args.smoke, "host": host,
                        "summary": common.SUMMARY,
                        "fallbacks": common.FALLBACKS}, f, indent=2)

@@ -110,6 +110,17 @@ def main() -> None:
               f"decode={stats['decode_tokens']} toks "
               f"@ {stats['decode_tps']:.1f} tok/s, "
               f"ttft_p50={stats['ttft_p50_s'] * 1e3:.0f}ms")
+        ws = stats["weight_streaming"]
+        if ws["active"]:
+            print(f"[stats] weight streaming: {ws['streamed_stacks']} "
+                  f"streamed / {ws['resident_stacks']} resident stacks, "
+                  f"ring {ws['ring_bytes'] / 1024:.0f} KiB, "
+                  f"hit rate {ws['hit_rate']:.3f}, "
+                  f"stall {ws['stall_s'] * 1e3:.1f}ms")
+        else:
+            print(f"[stats] weight streaming: off (all "
+                  f"{ws['resident_stacks']} stacks resident, "
+                  f"{ws['dram_weight_bytes'] / 1024:.0f} KiB DRAM)")
 
     # --- the same stack, in process: EngineService without HTTP ----------
     # (warmup=False: compile lazily, like --no-warmup on the CLI)

@@ -33,10 +33,24 @@ PAPER_MODELS = {
 ARCHS: Dict[str, ModelConfig] = {**ASSIGNED, **PAPER_MODELS}
 
 
+VARIANTS = ("reduced", "tiny")
+
+
 def get(arch: str) -> ModelConfig:
-    if arch not in ARCHS:
-        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
-    return ARCHS[arch]
+    """Look up ``<arch>`` or ``<arch>@<variant>`` (``@reduced`` /
+    ``@tiny`` apply the smoke-scale transforms below)."""
+    base, _, variant = arch.partition("@")
+    if base not in ARCHS:
+        raise KeyError(f"unknown arch {base!r}; known: {sorted(ARCHS)}")
+    cfg = ARCHS[base]
+    if not variant:
+        return cfg
+    if variant == "reduced":
+        return reduced(cfg)
+    if variant == "tiny":
+        return tiny(cfg)
+    raise KeyError(f"unknown variant {variant!r} for {base!r}; "
+                   f"known: {VARIANTS}")
 
 
 def reduced(cfg: ModelConfig) -> ModelConfig:
@@ -70,6 +84,31 @@ def reduced(cfg: ModelConfig) -> ModelConfig:
         num_experts=min(cfg.num_experts, 4),
         experts_per_tok=min(cfg.experts_per_tok, 2),
         period=period,
+        mrope_sections=sections,
+        rwkv_head_dim=64,
+    )
+
+
+def tiny(cfg: ModelConfig) -> ModelConfig:
+    """A scaled-down LARGE-model variant for weight-streaming tests:
+    unlike ``reduced`` (which collapses to <=2 layers), ``tiny`` keeps
+    enough layer groups per stack for a streaming ring to be a strict
+    subset (>= 6 groups), plus the big config's plan *shape* — MoE
+    routing and GQA (kv heads < q heads) survive at smoke dimensions."""
+    sections = (8, 12, 12) if cfg.rope_kind == "mrope" else cfg.mrope_sections
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-tiny",
+        num_layers=max(6, 3 * len(cfg.period)),
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=2 if cfg.num_kv_heads < cfg.num_heads else 4,
+        head_dim=64,
+        d_ff=512,
+        vocab_size=512,
+        num_experts=min(cfg.num_experts, 4),
+        experts_per_tok=min(cfg.experts_per_tok, 2),
         mrope_sections=sections,
         rwkv_head_dim=64,
     )

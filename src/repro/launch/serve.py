@@ -65,15 +65,29 @@ def main() -> None:
                     help="pre-trace every bucketed decode / prefill-chunk "
                          "graph before serving (gateway /healthz answers "
                          "503 while warming); --no-warmup compiles lazily")
+    ap.add_argument("--weight-dram-budget", type=int, default=None,
+                    metavar="BYTES",
+                    help="DRAM byte budget for the WEIGHTS: stacks that "
+                         "overflow it stream per layer group from Flash "
+                         "through a double-buffered DRAM ring "
+                         "(default: everything resident)")
     args = ap.parse_args()
 
     cfg = registry.get(args.arch)
-    if args.reduced:
+    if args.reduced and "@" not in args.arch:
         cfg = registry.reduced(cfg)
     print(f"[serve] arch={cfg.name} quant={cfg.quant.tag()} "
           f"(embedding on Flash, int8-K/fp8-V KV cache)")
     eng = E.build_engine(cfg, key=jax.random.PRNGKey(args.seed),
-                         max_seq=args.max_seq)
+                         max_seq=args.max_seq,
+                         weight_dram_budget_bytes=args.weight_dram_budget)
+    if eng.weight_policy.active:
+        pol = eng.weight_policy
+        print(f"[serve] weight streaming: "
+              f"{len(pol.streamed)} stack(s) on Flash, "
+              f"ring {pol.ring_bytes / 1024:.0f} KiB, "
+              f"resident {pol.resident_bytes / 1024:.0f} KiB "
+              f"of budget {pol.dram_budget_bytes / 1024:.0f} KiB")
 
     if args.http is not None:
         from repro.data.tokenizer import ByteTokenizer

@@ -381,6 +381,78 @@ def _apply_pattern(x: Array, pp: dict, cfg: ModelConfig, pat: LayerPattern,
     return _constrain(x, ctx), new_cache, aux
 
 
+def run_stack(sp, cfg: ModelConfig, stack_idx: int, mode: str, x: Array,
+              positions, scache, cross, pos, table, ctx: StepCtx,
+              slot=None, aux0: Optional[Array] = None
+              ) -> Tuple[Array, Any, Array]:
+    """Scan ONE stack's layer groups over its fully-resident stacked
+    params ``sp`` ([count, ...] leaves).  Returns (x, new_scache, aux).
+    ``aux0`` continues a running moe-aux accumulator across stacks (the
+    float addition order matches the old fused multi-stack scan)."""
+    patterns, _count = cfg.layer_plan()[stack_idx]
+    xcache = tuple(None for _ in patterns) if scache is None else scache
+    aux0 = jnp.zeros((2,), jnp.float32) if aux0 is None else aux0
+
+    def body(xc, slices, _patterns=patterns):
+        xx, auxc = xc
+        pslice, cslice, crslice = slices
+        new_cs = []
+        for pi, pat in enumerate(_patterns):
+            cc = None if cslice is None else cslice[pi]
+            cr = None if crslice is None else crslice[pi]
+            xx, nc, aux = _apply_pattern(
+                xx, pslice[pi], cfg, pat, mode, positions, cc, cr, pos,
+                table, ctx, slot=slot)
+            new_cs.append(nc)
+            auxc = auxc + aux
+        return (xx, auxc), tuple(new_cs)
+
+    if ctx.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), new_scache = jax.lax.scan(body, (x, aux0),
+                                        (sp, xcache, cross))
+    return x, new_scache, aux
+
+
+def run_stack_group(gp, cfg: ModelConfig, stack_idx: int, mode: str,
+                    x: Array, positions, scache, gidx, pos, table,
+                    ctx: StepCtx, slot=None) -> Tuple[Array, Any, Array]:
+    """ONE layer group of one stack — the streamed execution mode.  ``gp``
+    is the group's weight slice ([1, ...] leaves, installed in a DRAM ring
+    slot by the engine's weight-streaming tier), NOT indexed from resident
+    stacked params.  ``gidx`` is the group's index into the stack cache —
+    traced, so every group of the stack reuses the one jit graph (same
+    weight shapes, dynamic_slice/update at gidx; no recompiles).
+
+    Applying the period body once per group in index order runs exactly
+    the primitive sequence of ``run_stack``'s scan iterations, so a full
+    group-by-group pass is bitwise-equal to the resident scan."""
+    patterns, _count = cfg.layer_plan()[stack_idx]
+    gidx = jnp.asarray(gidx, jnp.int32)
+    cslice = None
+    if scache is not None:
+        cslice = jax.tree.map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, gidx, 1, axis=0)[0],
+            scache)
+    pslice = jax.tree.map(lambda a: a[0], gp)
+    aux = jnp.zeros((2,), jnp.float32)
+    new_cs = []
+    for pi, pat in enumerate(patterns):
+        cc = None if cslice is None else cslice[pi]
+        x, nc, a = _apply_pattern(x, pslice[pi], cfg, pat, mode, positions,
+                                  cc, None, pos, table, ctx, slot=slot)
+        new_cs.append(nc)
+        aux = aux + a
+    new_scache = scache
+    if scache is not None:
+        new_scache = jax.tree.map(
+            lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+                big, small[None].astype(big.dtype), gidx, axis=0),
+            scache, tuple(new_cs))
+    return x, new_scache, aux
+
+
 def _run_stacks(x: Array, params: dict, cfg: ModelConfig, mode: str,
                 positions, cache: Optional[dict], ctx: StepCtx,
                 slot=None) -> Tuple[Array, Optional[dict], Array]:
@@ -395,30 +467,12 @@ def _run_stacks(x: Array, params: dict, cfg: ModelConfig, mode: str,
     for si, (patterns, count) in enumerate(cfg.layer_plan()):
         sp = params["stacks"][si]
         scache = None if cache is None else cache["stacks"][si]
-        xcache = tuple(None for _ in patterns) if scache is None else scache
         cross = None
         if cfg.is_encdec and cache is not None and "cross" in cache:
             cross = cache["cross"][si]
-
-        def body(xc, slices, _patterns=patterns):
-            xx, auxc = xc
-            pslice, cslice, crslice = slices
-            new_cs = []
-            for pi, pat in enumerate(_patterns):
-                cc = None if cslice is None else cslice[pi]
-                cr = None if crslice is None else crslice[pi]
-                xx, nc, aux = _apply_pattern(
-                    xx, pslice[pi], cfg, pat, mode, positions, cc, cr, pos,
-                    table, ctx, slot=slot)
-                new_cs.append(nc)
-                auxc = auxc + aux
-            return (xx, auxc), tuple(new_cs)
-
-        if ctx.remat:
-            body = jax.checkpoint(body,
-                                  policy=jax.checkpoint_policies.nothing_saveable)
-        (x, aux_total), new_scache = jax.lax.scan(
-            body, (x, aux_total), (sp, xcache, cross))
+        x, new_scache, aux_total = run_stack(
+            sp, cfg, si, mode, x, positions, scache, cross, pos, table,
+            ctx, slot=slot, aux0=aux_total)
         new_stacks.append(new_scache)
     new_cache = None
     if cache is not None:

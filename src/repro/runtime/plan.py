@@ -209,6 +209,114 @@ def matmul_plan(k: int, n: int, bits: int) -> MatmulPlan:
 
 
 # ---------------------------------------------------------------------------
+# Weight streaming (paper §4.1 extended from KV to weights)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StreamedStackPlan:
+    """One stack whose layer groups stream through the DRAM ring."""
+    stack: int                 # index into cfg.layer_plan()
+    count: int                 # layer groups in the stack (the scan length)
+    group_bytes: int           # bytes of one group's leaf slices
+    ring_groups: int           # DRAM ring slots (>= 2: double-buffered)
+
+    @property
+    def ring_bytes(self) -> int:
+        return self.ring_groups * self.group_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightStreamPolicy:
+    """DRAM/Flash placement for the *weights* under a byte budget —
+    utilization-ordered like ``plan_embedding_placement`` (§4.1), extended
+    to per-stack layer groups.  lm_head + final_norm are read fully every
+    step (full utilization) and always stay resident; stacks stay resident
+    in layer order while they fit, and each overflowing stack streams
+    group-by-group through a double-buffered DRAM ring whose slot count is
+    sized from the leftover budget.  ``placement`` mirrors the per-entry
+    decision ("dram" | "stream")."""
+    dram_budget_bytes: Optional[int]
+    head_bytes: int                     # lm_head + final_norm (resident)
+    resident_bytes: int                 # head + resident stacks + rings
+    streamed: Tuple[StreamedStackPlan, ...]
+    placement: Dict[str, str]
+
+    @property
+    def active(self) -> bool:
+        return bool(self.streamed)
+
+    @property
+    def ring_bytes(self) -> int:
+        return sum(s.ring_bytes for s in self.streamed)
+
+    def streamed_stack(self, stack: int) -> Optional[StreamedStackPlan]:
+        for s in self.streamed:
+            if s.stack == stack:
+                return s
+        return None
+
+
+def _tree_nbytes(tree) -> int:
+    return sum(leaf.nbytes for leaf in jax.tree.leaves(tree))
+
+
+def weight_stream_policy(cfg, params, dram_budget_bytes: Optional[int] = None,
+                         ring_groups: int = 2) -> WeightStreamPolicy:
+    """Compute the weight placement for ``params`` under
+    ``dram_budget_bytes`` (the WEIGHT budget — the caller carves it out of
+    total DRAM after the KV-pool reservation).  ``None`` = everything
+    resident.  A stack streams only when even its ring would be smaller
+    than the full stack (``ring < count``); the ring grows into leftover
+    budget up to ``count - 1`` slots, floored at 2 (double buffer — group
+    g computes while g+1 installs, never aliasing)."""
+    plan_stacks = cfg.layer_plan()
+    head_bytes = (_tree_nbytes(params["final_norm"])
+                  + _tree_nbytes(params["lm_head"]))
+    placement: Dict[str, str] = {"final_norm": "dram", "lm_head": "dram"}
+    if dram_budget_bytes is None:
+        for si in range(len(plan_stacks)):
+            placement[f"stacks/{si}"] = "dram"
+        resident = head_bytes + sum(_tree_nbytes(s)
+                                    for s in params["stacks"])
+        return WeightStreamPolicy(
+            dram_budget_bytes=None, head_bytes=head_bytes,
+            resident_bytes=resident, streamed=(), placement=placement)
+    left = int(dram_budget_bytes) - head_bytes
+    resident = head_bytes
+    streamed = []
+    for si, (_patterns, count) in enumerate(plan_stacks):
+        stack_bytes = _tree_nbytes(params["stacks"][si])
+        group_bytes = -(-stack_bytes // count)
+        if stack_bytes <= left:
+            placement[f"stacks/{si}"] = "dram"
+            resident += stack_bytes
+            left -= stack_bytes
+            continue
+        # ring sized from the leftover budget: as many slots as fit,
+        # clamped to [2 (double buffer), count - 1 (else it would be
+        # resident)].  A 2-group stack can't double-buffer a strict
+        # subset — it stays resident.
+        ring = max(ring_groups, min(count - 1,
+                                    left // group_bytes if group_bytes
+                                    else ring_groups))
+        if ring >= count or count < 3:
+            placement[f"stacks/{si}"] = "dram"
+            resident += stack_bytes
+            left -= stack_bytes
+            continue
+        placement[f"stacks/{si}"] = "stream"
+        streamed.append(StreamedStackPlan(
+            stack=si, count=count, group_bytes=group_bytes,
+            ring_groups=int(ring)))
+        resident += ring * group_bytes
+        left -= ring * group_bytes
+    return WeightStreamPolicy(
+        dram_budget_bytes=int(dram_budget_bytes), head_bytes=head_bytes,
+        resident_bytes=resident, streamed=tuple(streamed),
+        placement=placement)
+
+
+# ---------------------------------------------------------------------------
 # The per-model plan
 # ---------------------------------------------------------------------------
 
@@ -351,6 +459,20 @@ class ExecutionPlan:
             staging_pages=geom.staging_pages, hot_pages=1,
             low_watermark=low, high_watermark=high,
             flash_budget_pages=int(budget))
+
+    def weight_placement(self, cfg,
+                         dram_budget_bytes: Optional[int] = None,
+                         ring_groups: int = 2) -> WeightStreamPolicy:
+        """DRAM/Flash weight placement under a byte budget (plan-owned,
+        like tile shapes and pool geometry) — see ``weight_stream_policy``.
+        Stacks that overflow the budget stream per layer group through a
+        double-buffered DRAM ring; the per-entry decisions merge into
+        ``self.placement`` so observability sees one placement map."""
+        policy = weight_stream_policy(cfg, self.params,
+                                      dram_budget_bytes=dram_budget_bytes,
+                                      ring_groups=ring_groups)
+        self.placement.update(policy.placement)
+        return policy
 
 
 def placement_for(cfg, dram_budget_bytes: Optional[int] = None

@@ -24,7 +24,7 @@ import dataclasses
 import functools
 import time
 import warnings
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -130,6 +130,13 @@ class EngineStats:
     # compiles once warmed
     compile_events: int = 0
     recompiles_after_warmup: int = 0
+    # weight streaming: layer groups served through the ring's prefetch
+    # pipeline vs synchronous Flash reads, time blocked waiting on Flash,
+    # and the DRAM bytes the resident weights + ring slots occupy
+    weight_group_hits: int = 0
+    weight_group_misses: int = 0
+    weight_stall_s: float = 0.0
+    dram_weight_bytes: int = 0
     # continuous batching: per-request TTFT/TPOT records
     requests: List[RequestStats] = dataclasses.field(default_factory=list)
 
@@ -148,6 +155,13 @@ class EngineStats:
         total = self.flash_page_hits + self.flash_page_misses
         return self.flash_page_hits / total if total else 1.0
 
+    @property
+    def weight_stream_hit_rate(self) -> float:
+        """Fraction of streamed weight groups served through the ring's
+        layer-ahead prefetch pipeline (1.0 when nothing streams)."""
+        total = self.weight_group_hits + self.weight_group_misses
+        return self.weight_group_hits / total if total else 1.0
+
     def ttft(self, p: float = 50.0) -> float:
         return percentile([r.ttft_s for r in self.requests], p)
 
@@ -156,6 +170,63 @@ class EngineStats:
 
     def latency(self, p: float = 50.0) -> float:
         return percentile([r.latency_s for r in self.requests], p)
+
+
+class WeightRing:
+    """DRAM ring of device-resident layer groups for ONE streamed stack.
+
+    Slot assignment is deterministic — group ``g`` installs into slot
+    ``g % ring_groups`` — so with ``ring_groups >= 2`` (the policy floor)
+    the group computing and the group installing always occupy distinct
+    slots: no aliasing, and a group whose Flash fetch is still in flight
+    is never named by any slot (``slot_group`` flips to ``g`` only after
+    the fetch completes and the device buffers exist).  Installing over a
+    slot drops the Python reference to the previous group's buffers — the
+    steady-state DRAM footprint is exactly ``ring_groups * group_bytes``.
+    """
+
+    def __init__(self, store: HS.WeightGroupStore, stack: int, count: int,
+                 ring_groups: int, treedef, skeleton):
+        assert ring_groups >= 2, "the ring must double-buffer"
+        self.store = store
+        self.stack = stack
+        self.count = count
+        self.ring_groups = ring_groups
+        self.treedef = treedef
+        self.skeleton = skeleton          # leaf ShapeDtypeStructs, flat order
+        self.slots: List = [None] * ring_groups
+        self.slot_group = [-1] * ring_groups
+        self.stall_s = 0.0                # time blocked waiting on Flash
+        self.installs = 0
+
+    def slot_of(self, group: int) -> int:
+        return group % self.ring_groups
+
+    def prefetch(self, group: int) -> None:
+        # skip groups already installed in their slot (a small stack can
+        # leave a slot permanently holding its only mapped group) — a
+        # prefetch nobody will consume just strands host memory
+        if 0 <= group < self.count \
+                and self.slot_group[self.slot_of(group)] != group:
+            self.store.prefetch_group(self.stack, group)
+
+    def obtain(self, group: int):
+        """The group's device param tree, installing its ring slot if the
+        slot holds another group (blocking on an in-flight prefetch —
+        counted as ``stall_s`` — or a synchronous Flash read on a miss)."""
+        r = self.slot_of(group)
+        if self.slot_group[r] == group:
+            return self.slots[r]
+        t0 = time.perf_counter()
+        arrays = self.store.fetch_group(self.stack, group)
+        self.stall_s += time.perf_counter() - t0
+        leaves = [jnp.asarray(a, dtype=s.dtype)
+                  for a, s in zip(arrays, self.skeleton)]
+        self.slot_group[r] = -1
+        self.slots[r] = jax.tree.unflatten(self.treedef, leaves)
+        self.slot_group[r] = group
+        self.installs += 1
+        return self.slots[r]
 
 
 class Engine:
@@ -167,7 +238,9 @@ class Engine:
                  max_seq: int = 256,
                  flash_dir: Optional[str] = None,
                  backend: Optional[str] = None,
-                 plan: Optional[RP.ExecutionPlan] = None):
+                 plan: Optional[RP.ExecutionPlan] = None,
+                 weight_dram_budget_bytes: Optional[int] = None,
+                 weight_ring_groups: int = 2):
         self.cfg = cfg
         # the ExecutionPlan is built ONCE per model (paper §5.1): weights
         # repacked into the kernel-native layout, tiles solved per matmul
@@ -202,6 +275,37 @@ class Engine:
             static_argnames=("max_seq",))
         self._decode = jax.jit(
             functools.partial(self._decode_impl, cfg, self._ctx))
+        # --- weight streaming (PR 8): plan-owned placement of per-stack
+        # layer groups.  Stacks marked "stream" are exported to Flash as
+        # per-layer packed slices and dropped from the DRAM param tree;
+        # EngineLoop runs them group-by-group through a DRAM ring.
+        self.weight_policy = self.plan.weight_placement(
+            cfg, weight_dram_budget_bytes, ring_groups=weight_ring_groups)
+        self.weight_store: Optional[HS.WeightGroupStore] = None
+        self._stream_skel: Dict[int, tuple] = {}
+        if self.weight_policy.active:
+            self._export_streamed_stacks()
+        self.stats.dram_weight_bytes = self.weight_policy.resident_bytes
+
+    def _export_streamed_stacks(self) -> None:
+        """Persist each streamed stack's per-layer weight slices to Flash
+        (leading stacked axis sliced one layer-group at a time) and drop
+        the DRAM copies — after this the streamed stacks live only on
+        Flash + the EngineLoop's DRAM ring."""
+        self.weight_store = HS.WeightGroupStore(self.flash)
+        stacks = list(self.params["stacks"])
+        for sp in self.weight_policy.streamed:
+            si = sp.stack
+            leaves, treedef = jax.tree.flatten(stacks[si])
+            for g in range(sp.count):
+                self.weight_store.put_group(
+                    si, g, [np.asarray(leaf[g:g + 1]) for leaf in leaves])
+            self._stream_skel[si] = (treedef, [
+                jax.ShapeDtypeStruct((1, *l.shape[1:]), l.dtype)
+                for l in leaves])
+            stacks[si] = None
+        self.params = dict(self.params, stacks=tuple(stacks))
+        self.plan.params = self.params
 
     # --- jitted steps -------------------------------------------------------
     @staticmethod
@@ -247,6 +351,8 @@ class Engine:
                  src_embeds: Optional[np.ndarray] = None,
                  key: Optional[jax.Array] = None) -> List[Request]:
         """Prefill each request, then batched decode until done/max."""
+        assert not self.weight_policy.active, \
+            "weight streaming requires the EngineLoop step path"
         cfg = self.cfg
         key = key if key is not None else jax.random.PRNGKey(0)
         caches, last_logits = [], []
@@ -468,6 +574,65 @@ class EngineLoop:
                          for pat in pats)
         self._bucketed = (bucketing and self._uniform and no_moe
                           and max_slots > 1)
+        # --- weight streaming (PR 8) -----------------------------------
+        # When the plan streams stacks, the monolithic whole-model step
+        # graphs (which close over a fully resident param tree) cannot
+        # run.  The step splits into per-stack jits: resident stacks keep
+        # the scan, streamed stacks run group-by-group consuming DRAM
+        # ring slots (same [1, ...] weight shapes every group — one graph
+        # per (stack, mode, shape), so recompiles_after_warmup stays 0).
+        # Bucketing is off in this mode: the split step runs at max_slots
+        # shape only (bucketed streaming is a recorded follow-on).
+        self.wpolicy = engine.weight_policy
+        self._wstreams: Dict[int, WeightRing] = {}
+        self._stack_dec: Dict[int, Any] = {}
+        self._grp_dec: Dict[int, Any] = {}
+        self._stack_pf: Dict[int, Any] = {}
+        self._grp_pf: Dict[int, Any] = {}
+        self._post_dec = None
+        self._post_pf = None
+        if self.wpolicy.active:
+            self._bucketed = False
+            store = engine.weight_store
+            for spl in self.wpolicy.streamed:
+                treedef, skel = engine._stream_skel[spl.stack]
+                self._wstreams[spl.stack] = WeightRing(
+                    store, spl.stack, spl.count, spl.ring_groups,
+                    treedef, skel)
+            # the layer-ahead prefetch chain walks the global group
+            # sequence in execution order; the last group wraps to the
+            # first so the next step's leading fetch is already in
+            # flight when the step starts (steady-state hit rate 1.0)
+            self._stream_seq = [(spl.stack, g)
+                                for spl in self.wpolicy.streamed
+                                for g in range(spl.count)]
+            self._stream_next = {
+                self._stream_seq[i]:
+                    self._stream_seq[(i + 1) % len(self._stream_seq)]
+                for i in range(len(self._stream_seq))}
+            self._head_params = {
+                "final_norm": engine.params["final_norm"],
+                "lm_head": engine.params["lm_head"]}
+            for si in range(len(cfg.layer_plan())):
+                if si in self._wstreams:
+                    self._grp_dec[si] = jax.jit(functools.partial(
+                        self._group_impl, cfg, engine._ctx, si, "decode"))
+                    self._grp_pf[si] = jax.jit(functools.partial(
+                        self._group_impl, cfg, engine._ctx, si,
+                        "prefill_paged"))
+                else:
+                    self._stack_dec[si] = jax.jit(functools.partial(
+                        self._stack_impl, cfg, engine._ctx, si, "decode"))
+                    self._stack_pf[si] = jax.jit(functools.partial(
+                        self._stack_impl, cfg, engine._ctx, si,
+                        "prefill_paged"))
+            self._post_dec = jax.jit(functools.partial(
+                self._post_decode_impl, cfg, engine._ctx))
+            self._post_pf = jax.jit(functools.partial(
+                self._post_chunk_impl, cfg, engine._ctx))
+            # prime the chain: the very first obtain must already be a hit
+            si0, g0 = self._stream_seq[0]
+            self._wstreams[si0].prefetch(g0)
         self.buckets = engine.plan.decode_buckets(
             max_slots, uniform=self._bucketed)
         self._decode_b = jax.jit(
@@ -502,6 +667,106 @@ class EngineLoop:
         return T.prefill_chunk_paged(params, cfg, embeds, cache, slot, pos0,
                                      last_idx, ctx=ctx, lora=lora)
 
+    # --- weight-streamed split step (PR 8) ---------------------------------
+    @staticmethod
+    def _stack_impl(cfg, ctx, si, mode, sp, x, scache, pos, table,
+                    positions, slot, lora):
+        if lora is not None:
+            ctx = dataclasses.replace(ctx, lora=lora)
+        x, nsc, _ = T.run_stack(sp, cfg, si, mode, x, positions, scache,
+                                None, pos, table, ctx, slot=slot)
+        return x, nsc
+
+    @staticmethod
+    def _group_impl(cfg, ctx, si, mode, gp, x, scache, gidx, pos, table,
+                    positions, slot, lora):
+        if lora is not None:
+            ctx = dataclasses.replace(ctx, lora=lora)
+        x, nsc, _ = T.run_stack_group(gp, cfg, si, mode, x, positions,
+                                      scache, gidx, pos, table, ctx,
+                                      slot=slot)
+        return x, nsc
+
+    @staticmethod
+    def _post_decode_impl(cfg, ctx, head, x, pos, active):
+        logits = T._logits(x, head, cfg, ctx.dispatch)[:, -1]
+        return logits, jnp.where(active, pos + 1, pos)
+
+    @staticmethod
+    def _post_chunk_impl(cfg, ctx, head, x, last_idx):
+        last = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(last_idx, jnp.int32), 1, axis=1)
+        return T._logits(last, head, cfg, ctx.dispatch)[:, 0]
+
+    def _stream_stacks(self, mode, x, cache, pos, table, positions, slot,
+                       lora):
+        """Run every stack for one step in the split streamed mode —
+        resident stacks scan, streamed stacks run group-by-group out of
+        their DRAM ring, prefetching the chain successor before each
+        obtain so Flash reads overlap the group that is computing."""
+        eng = self.eng
+        new_stacks = []
+        for si in range(len(self.cfg.layer_plan())):
+            scache = cache["stacks"][si]
+            ring = self._wstreams.get(si)
+            if ring is None:
+                fn = (self._stack_dec if mode == "decode"
+                      else self._stack_pf)[si]
+                x, nsc = fn(eng.params["stacks"][si], x, scache, pos,
+                            table, positions, slot, lora)
+            else:
+                fn = (self._grp_dec if mode == "decode"
+                      else self._grp_pf)[si]
+                nsc = scache
+                for g in range(ring.count):
+                    nsi, ng = self._stream_next[(si, g)]
+                    self._wstreams[nsi].prefetch(ng)
+                    gp = ring.obtain(g)
+                    x, nsc = fn(gp, x, nsc, jnp.asarray(g, jnp.int32),
+                                pos, table, positions, slot, lora)
+            new_stacks.append(nsc)
+        return x, tuple(new_stacks)
+
+    def _decode_streamed(self, embeds, active, lora, cache=None):
+        """One decode step, split per stack (the streamed counterpart of
+        ``_decode``); the eager shell computes the same values the
+        monolithic graph would (int position math, bf16 cast), so the
+        logits are bitwise-equal to the all-DRAM step."""
+        cache = self.cache if cache is None else cache
+        x = embeds.astype(jnp.bfloat16)
+        pos = cache["pos"]
+        positions = pos[:, None] + jnp.arange(1, dtype=jnp.int32)[None]
+        x, new_stacks = self._stream_stacks(
+            "decode", x, cache, pos, cache.get("table"), positions, None,
+            lora)
+        logits, npos = self._post_dec(self._head_params, x, pos,
+                                      jnp.asarray(active))
+        new_cache = dict(cache)
+        new_cache["stacks"] = new_stacks
+        new_cache["pos"] = npos
+        return logits, new_cache
+
+    def _chunk_streamed(self, embeds, slot, pos0, last_idx, lora,
+                        cache=None):
+        """One prompt chunk, split per stack (the streamed counterpart of
+        ``_chunk``).  Does not advance ``pos`` — the engine does that
+        once the whole prompt is in, exactly like the monolithic path."""
+        cache = self.cache if cache is None else cache
+        x = embeds.astype(jnp.bfloat16)
+        C = x.shape[1]
+        positions = (jnp.asarray(pos0, jnp.int32)
+                     + jnp.arange(C, dtype=jnp.int32))[None]
+        slot_t = jnp.asarray(slot, jnp.int32)
+        table = cache["table"][slot_t]
+        x, new_stacks = self._stream_stacks(
+            "prefill_paged", x, cache, cache["pos"], table, positions,
+            slot_t, lora)
+        logits = self._post_pf(self._head_params, x,
+                               jnp.asarray(last_idx, jnp.int32))
+        new_cache = dict(cache)
+        new_cache["stacks"] = new_stacks
+        return logits, new_cache
+
     # --- helpers -----------------------------------------------------------
     def _next_chunk(self, remaining: int) -> int:
         """Chunk-size schedule: full ``prefill_chunk`` slabs, then one
@@ -533,7 +798,12 @@ class EngineLoop:
         mirrors it into EngineStats, so any post-warmup trace shows up as
         ``stats.recompiles_after_warmup`` > 0."""
         total = 0
-        for fn in (self._decode, self._decode_b, self._chunk):
+        split = (*self._stack_dec.values(), *self._grp_dec.values(),
+                 *self._stack_pf.values(), *self._grp_pf.values())
+        post = ((self._post_dec, self._post_pf)
+                if self._post_dec is not None else ())
+        for fn in (self._decode, self._decode_b, self._chunk,
+                   *split, *post):
             try:
                 total += fn._cache_size()
             except AttributeError:       # jit cache introspection gone
@@ -562,6 +832,32 @@ class EngineLoop:
             self.geom.trash_page, jnp.int32)
         d = cfg.d_model
         outs = []
+        if self._wstreams:
+            # streamed split step: one decode graph per stack (or per
+            # streamed group shape) + one prefill graph per stack per
+            # chunk size, plus the two small post graphs
+            eng.plan.presolve_tiles(self.max_slots)
+            lg, _ = self._decode_streamed(
+                jnp.zeros((self.max_slots, 1, d), jnp.bfloat16),
+                np.zeros((self.max_slots,), bool),
+                eng._lora_for([None] * self.max_slots), cache=wcache)
+            outs.append(lg)
+            for c in self._chunk_sizes():
+                eng.plan.presolve_tiles(c)
+                lg, _ = self._chunk_streamed(
+                    jnp.zeros((1, c, d), jnp.bfloat16), 0, 0, c - 1,
+                    eng._lora_for([None]), cache=wcache)
+                outs.append(lg)
+            jax.block_until_ready(outs)
+            self.warmed = True
+            self._warmup_graphs = self.compile_events()
+            eng.stats.compile_events = self._warmup_graphs
+            self._warmup_report = {
+                "warmup_s": time.perf_counter() - t0,
+                "graphs": self._warmup_graphs,
+                "decode_buckets": [],
+                "chunk_sizes": [int(c) for c in self._chunk_sizes()]}
+            return self._warmup_report
         if self._bucketed:
             for b in self.buckets:
                 eng.plan.presolve_tiles(b)
@@ -989,13 +1285,19 @@ class EngineLoop:
                 ids = np.zeros((1, c), np.int64)
                 ids[0, :valid] = np.asarray(toks[st["next"]:st["next"] + valid])
                 embeds = self.eng.embed(ids)
-                logits1, self.cache = self._chunk(
-                    self.eng.params, embeds, self.cache,
-                    jnp.asarray(slot, jnp.int32),
-                    jnp.asarray(st["next"], jnp.int32),
-                    jnp.asarray(t - 1 - st["next"]
-                                if st["next"] + c >= t else c - 1, jnp.int32),
-                    self._row_lora(req))
+                last_idx = (t - 1 - st["next"]
+                            if st["next"] + c >= t else c - 1)
+                if self._wstreams:
+                    logits1, self.cache = self._chunk_streamed(
+                        embeds, slot, st["next"], last_idx,
+                        self._row_lora(req))
+                else:
+                    logits1, self.cache = self._chunk(
+                        self.eng.params, embeds, self.cache,
+                        jnp.asarray(slot, jnp.int32),
+                        jnp.asarray(st["next"], jnp.int32),
+                        jnp.asarray(last_idx, jnp.int32),
+                        self._row_lora(req))
                 st["next"] += valid
                 budget -= valid
                 ran = advanced = True
@@ -1048,7 +1350,9 @@ class EngineLoop:
 
     def close(self) -> None:
         """Stop the spill tier's prefetch worker (loops are cheap to build;
-        long-lived processes that rebuild them should close the old one)."""
+        long-lived processes that rebuild them should close the old one).
+        The weight-group store belongs to the Engine (it owns the Flash
+        export), so it is NOT closed here — rebuilt loops reuse it."""
         self.spill.close()
 
     # --- the incremental serving API ---------------------------------------
@@ -1165,6 +1469,15 @@ class EngineLoop:
             if self.warmed:
                 self.eng.stats.recompiles_after_warmup = \
                     ev - self._warmup_graphs
+            if self._wstreams:
+                store = self.eng.weight_store
+                self.eng.stats.weight_group_hits = store.prefetch_hits
+                self.eng.stats.weight_group_misses = store.prefetch_misses
+                self.eng.stats.weight_stall_s = sum(
+                    r.stall_s for r in self._wstreams.values())
+                # resident_bytes already counts the rings' slots
+                self.eng.stats.dram_weight_bytes = \
+                    self.wpolicy.resident_bytes
 
     def _step_inner(self) -> List[TokenEvent]:
         eng, sched, cfg = self.eng, self.scheduler, self.cfg
@@ -1322,8 +1635,12 @@ class EngineLoop:
             wmask = np.zeros((self.max_slots,), bool)
             wmask[wave] = True
             am = jnp.asarray(wmask)
-            logits_w, self.cache = self._decode(
-                eng.params, embeds, self.cache, self._slot_lora(), am)
+            if self._wstreams:
+                logits_w, self.cache = self._decode_streamed(
+                    embeds, wmask, self._slot_lora())
+            else:
+                logits_w, self.cache = self._decode(
+                    eng.params, embeds, self.cache, self._slot_lora(), am)
             if len(waves) == 1:
                 # the no-spill steady state: one wave covers every
                 # active row — keep the old direct assignment (empty
@@ -1408,7 +1725,9 @@ class EngineLoop:
 def build_engine(cfg: ModelConfig, key: Optional[jax.Array] = None,
                  max_seq: int = 256,
                  flash_dir: Optional[str] = None,
-                 backend: Optional[str] = None) -> Engine:
+                 backend: Optional[str] = None,
+                 weight_dram_budget_bytes: Optional[int] = None,
+                 weight_ring_groups: int = 2) -> Engine:
     """Random-weights engine for examples/tests: quantized serving params
     built directly in the kernel-native packed layout + a bf16 embedding
     table exported to Flash (the paper's conversion flow).  ``backend``
@@ -1420,4 +1739,6 @@ def build_engine(cfg: ModelConfig, key: Optional[jax.Array] = None,
         jax.random.normal(k2, (cfg.padded_vocab_size, cfg.d_model)) * 0.02,
         np.float32)
     return Engine(cfg, params, emb, max_seq=max_seq, flash_dir=flash_dir,
-                  backend=backend)
+                  backend=backend,
+                  weight_dram_budget_bytes=weight_dram_budget_bytes,
+                  weight_ring_groups=weight_ring_groups)

@@ -240,7 +240,31 @@ class EngineService:
                 "decode_buckets": [int(b) for b in self.loop.buckets],
                 "compile_events": s.compile_events,
                 "recompiles_after_warmup": s.recompiles_after_warmup,
+                # weight residency (PR 8): which stacks stream from Flash
+                # through the DRAM ring, and how well prefetch hides it
+                "weight_streaming": self._weight_stats(),
             }
+
+    def _weight_stats(self) -> dict:
+        pol = self.loop.wpolicy
+        s = self.loop.eng.stats
+        out = {
+            "active": pol.active,
+            "resident_stacks": sum(
+                1 for k, v in pol.placement.items()
+                if k.startswith("stacks/") and v == "dram"),
+            "streamed_stacks": len(pol.streamed),
+            "dram_weight_bytes": s.dram_weight_bytes,
+        }
+        if pol.active:
+            out.update({
+                "ring_groups": {str(p.stack): p.ring_groups
+                                for p in pol.streamed},
+                "ring_bytes": pol.ring_bytes,
+                "hit_rate": round(s.weight_stream_hit_rate, 6),
+                "stall_s": round(s.weight_stall_s, 6),
+            })
+        return out
 
 
 # ===========================================================================

@@ -1,4 +1,6 @@
 """C2: DRAM-Flash hybrid storage — embedding on Flash, KV spill + prefetch."""
+import time
+
 import numpy as np
 import pytest
 
@@ -55,6 +57,98 @@ def test_kv_spill_prefetch_roundtrip(flash):
     assert mgr.prefetch_misses == 1
     assert mgr.spilled_tokens(0) == 8 and mgr.spilled_tokens(1) == 0
     mgr.close()
+
+
+def test_throttle_zero_byte_read_charges_latency_only(tmp_path):
+    flash = HS.FlashStore(str(tmp_path),
+                          HS.FlashSpec(bandwidth_bytes_per_s=1e9,
+                                       latency_s=0.01, simulate=True))
+    flash.put("x", np.arange(16, dtype=np.float32).reshape(4, 4))
+    out = flash.read_slice("x", 2, 2)          # empty slice: zero bytes
+    assert out.shape == (0, 4) and out.nbytes == 0
+    assert flash.bytes_read == 0
+    # the throttle still charges the per-read latency (a seek is a seek)
+    assert 0.01 <= flash.read_time_s < 0.02
+
+
+def test_throttle_zero_latency_zero_bytes_is_free(tmp_path):
+    flash = HS.FlashStore(str(tmp_path),
+                          HS.FlashSpec(bandwidth_bytes_per_s=1e9,
+                                       latency_s=0.0, simulate=True))
+    flash.put("x", np.zeros((8, 2), np.float32))
+    flash.read_slice("x", 5, 5)
+    assert flash.read_time_s == 0.0
+    assert flash.bytes_read == 0
+
+
+def test_read_slice_bounds(flash):
+    table = np.arange(40, dtype=np.int32).reshape(10, 4)
+    flash.put("t", table)
+    np.testing.assert_array_equal(flash.read_slice("t", 3, 7), table[3:7])
+    # numpy-style clamping past the end; no throttle surprises
+    np.testing.assert_array_equal(flash.read_slice("t", 8, 100), table[8:])
+    np.testing.assert_array_equal(flash.read_slice("t", 0, 10), table)
+    assert flash.bytes_read == (4 + 2 + 10) * 4 * 4
+
+
+def test_weight_group_store_roundtrip_and_accounting(flash):
+    store = HS.WeightGroupStore(flash)
+    try:
+        leaves = {g: [np.full((1, 2, 3), g, np.float32),
+                      np.full((1, 4), 10 + g, np.int8)]
+                  for g in range(3)}
+        for g in range(3):
+            store.put_group(0, g, leaves[g])
+        store.put_group(1, 0, [np.zeros((1, 8), np.float32)])
+        for g in range(3):
+            out = store.fetch_group(0, g)
+            assert len(out) == 2
+            np.testing.assert_array_equal(out[0], leaves[g][0])
+            np.testing.assert_array_equal(out[1], leaves[g][1])
+        per_group = 1 * 2 * 3 * 4 + 4
+        assert store.group_nbytes(0, 0) == per_group
+        assert store.stack_nbytes(0) == 3 * per_group
+        assert store.total_nbytes == 3 * per_group + 32
+        assert store.groups() == [(0, 0), (0, 1), (0, 2), (1, 0)]
+    finally:
+        store.close()
+
+
+def test_weight_group_store_hit_rate_transitions(tmp_path):
+    """miss -> in-flight -> hit, through the real Flash-backed store (the
+    same ``_FlashPrefetcher`` accounting the engine's CI gate reads)."""
+    flash = HS.FlashStore(str(tmp_path),
+                          HS.FlashSpec(bandwidth_bytes_per_s=1e12,
+                                       latency_s=0.05, simulate=True))
+    store = HS.WeightGroupStore(flash)
+    try:
+        for g in range(3):
+            store.put_group(0, g, [np.full((1, 4), g, np.float32)])
+        # MISS: fetched without any prefetch
+        np.testing.assert_array_equal(store.fetch_group(0, 0)[0],
+                                      np.zeros((1, 4), np.float32))
+        assert (store.prefetch_hits, store.prefetch_misses) == (0, 1)
+        assert store.hit_rate == 0.0
+        # IN-FLIGHT: prefetch then fetch immediately — the 50ms simulated
+        # read is still loading, fetch blocks on it and counts as a hit
+        store.prefetch_group(0, 1)
+        np.testing.assert_array_equal(store.fetch_group(0, 1)[0],
+                                      np.ones((1, 4), np.float32))
+        assert (store.prefetch_hits, store.prefetch_misses) == (1, 1)
+        # HIT: prefetch fully lands before the fetch
+        store.prefetch_group(0, 2)
+        deadline = time.time() + 5.0
+        while (0, 2) not in store._cache and time.time() < deadline:
+            time.sleep(0.005)
+        np.testing.assert_array_equal(store.fetch_group(0, 2)[0],
+                                      np.full((1, 4), 2, np.float32))
+        assert (store.prefetch_hits, store.prefetch_misses) == (2, 1)
+        assert store.hit_rate == pytest.approx(2 / 3)
+        # unknown groups never enqueue (gated by _has)
+        store.prefetch_group(9, 9)
+        assert (9, 9) not in store._inflight
+    finally:
+        store.close()
 
 
 def test_placement_embedding_goes_to_flash_first():
