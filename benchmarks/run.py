@@ -16,6 +16,9 @@ Each emits ``name,us_per_call,derived`` CSV rows:
   bench_weight_stream        — Flash→DRAM weight streaming: tok/s at
                                1.0/0.6/0.35 weight-DRAM fractions, stall
                                fraction, prefetch hit rate, bitwise gate
+  bench_moe                  — grouped expert matmul kernel vs reference +
+                               router-aware per-expert streaming: hit
+                               rate, bytes saved, bitwise gate
 
 Flags:
   --smoke        reduced configurations (CI benchmark-smoke job)
@@ -49,6 +52,7 @@ MODULES = [
     # last: these build whole engines, and their jit/alloc churn must not
     # perturb the throughput numbers above
     "benchmarks.bench_weight_stream",
+    "benchmarks.bench_moe",
     "benchmarks.bench_kv_flash",
 ]
 
@@ -90,9 +94,9 @@ def main() -> None:
               f"({len(common.FALLBACKS)} dispatch fallbacks) to {args.json}",
               file=sys.stderr)
         # repo-root trajectory artifact: headline numbers per PR
-        bench_path = os.path.join(_ROOT, "BENCH_pr8.json")
+        bench_path = os.path.join(_ROOT, "BENCH_pr9.json")
         with open(bench_path, "w") as f:
-            json.dump({"suite": "mnn-llm-repro", "pr": 8,
+            json.dump({"suite": "mnn-llm-repro", "pr": 9,
                        "smoke": args.smoke, "host": host,
                        "summary": common.SUMMARY,
                        "fallbacks": common.FALLBACKS}, f, indent=2)

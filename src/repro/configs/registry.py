@@ -33,7 +33,7 @@ PAPER_MODELS = {
 ARCHS: Dict[str, ModelConfig] = {**ASSIGNED, **PAPER_MODELS}
 
 
-VARIANTS = ("reduced", "tiny")
+VARIANTS = ("reduced", "tiny", "tiny-moe")
 
 
 def get(arch: str) -> ModelConfig:
@@ -49,6 +49,8 @@ def get(arch: str) -> ModelConfig:
         return reduced(cfg)
     if variant == "tiny":
         return tiny(cfg)
+    if variant == "tiny-moe":
+        return tiny_moe(cfg)
     raise KeyError(f"unknown variant {variant!r} for {base!r}; "
                    f"known: {VARIANTS}")
 
@@ -111,4 +113,23 @@ def tiny(cfg: ModelConfig) -> ModelConfig:
         experts_per_tok=min(cfg.experts_per_tok, 2),
         mrope_sections=sections,
         rwkv_head_dim=64,
+    )
+
+
+def tiny_moe(cfg: ModelConfig) -> ModelConfig:
+    """``tiny`` with a real expert population: >= 8 experts at top-2
+    routing, so router-aware per-expert weight streaming has selectivity
+    to exploit (a top-2-of-4 step touches most experts anyway; 2-of-8
+    leaves 6 expert slices per group on Flash).  Layer-group depth is
+    inherited from ``tiny`` (>= 6 groups — a streaming ring stays a
+    strict subset of every stack)."""
+    if not cfg.num_experts:
+        raise KeyError(f"{cfg.name!r} has no MoE layers; "
+                       "@tiny-moe needs an MoE architecture")
+    base = tiny(cfg)
+    return dataclasses.replace(
+        base,
+        name=cfg.name + "-tiny-moe",
+        num_experts=8,
+        experts_per_tok=2,
     )

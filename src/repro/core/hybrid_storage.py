@@ -100,6 +100,16 @@ class FlashStore:
         self._throttle(out.nbytes)
         return out
 
+    def read_view(self, name: str) -> np.memmap:
+        """Zero-copy read: the throttled/accounted equivalent of
+        ``read_all`` that hands back the memmap itself instead of a host
+        copy — consumers that immediately ``jax.device_put`` the result
+        (the weight-group installs) skip one full host copy per blob."""
+        mm = self._maps[name]
+        self.bytes_read += mm.nbytes
+        self._throttle(mm.nbytes)
+        return mm
+
     def delete(self, name: str) -> None:
         """Drop a stored array and its backing file."""
         self._maps.pop(name, None)
@@ -412,35 +422,55 @@ class WeightGroupStore(_FlashPrefetcher):
 
     Keys are ``(stack_idx, group_idx)``; a group's value is the flat list
     of leaf arrays in ``jax.tree.flatten`` order — the engine re-assembles
-    them into the stack's treedef when installing a ring slot.
+    them into the stack's treedef when installing a ring slot.  Expert-
+    granular MoE stacks additionally key each expert's slice of a group as
+    ``(stack_idx, group_idx, expert_idx)`` — the shared 2-tuple blob then
+    carries only the router/norm/attention leaves, and the serving loop
+    fetches just the experts the router selected.
+
+    Blob reads are zero-copy (``FlashStore.read_view``): the memmap slices
+    go straight to ``jnp.asarray``/device_put without an intermediate host
+    copy — per-expert blobs are numerous, so the saved copy is per install.
     """
 
     def __init__(self, flash: FlashStore):
         self.flash = flash
-        # (stack, group) -> [flash blob names]
+        # (stack, group[, expert]) -> [flash blob names]
         self._groups: Dict[tuple, list] = {}
         self._group_nbytes: Dict[tuple, int] = {}
         super().__init__()
 
     # -- export (engine build time) -----------------------------------------
-    def put_group(self, stack: int, group: int,
-                  arrays: Sequence[np.ndarray]) -> None:
-        """Persist one layer group's leaf slices (leading axis length 1)."""
+    def _put(self, key: tuple, prefix: str,
+             arrays: Sequence[np.ndarray]) -> None:
         names, nbytes = [], 0
         for i, arr in enumerate(arrays):
-            name = f"wgrp_s{stack}_g{group}_{i}"
+            name = f"{prefix}_{i}"
             self.flash.put(name, np.ascontiguousarray(arr))
             names.append(name)
             nbytes += arr.nbytes
         with self._lock:
-            key = (stack, group)
             self._groups[key] = names
             self._group_nbytes[key] = nbytes
             self._cache.pop(key, None)   # stale
 
+    def put_group(self, stack: int, group: int,
+                  arrays: Sequence[np.ndarray]) -> None:
+        """Persist one layer group's leaf slices (leading axis length 1).
+        For expert-granular stacks these are the group's SHARED leaves
+        only — expert tables go through ``put_expert_group``."""
+        self._put((stack, group), f"wgrp_s{stack}_g{group}", arrays)
+
+    def put_expert_group(self, stack: int, group: int, expert: int,
+                         arrays: Sequence[np.ndarray]) -> None:
+        """Persist ONE expert's slice of one layer group (leading group
+        and expert axes both length 1)."""
+        self._put((stack, group, expert),
+                  f"wgrp_s{stack}_g{group}_e{expert}", arrays)
+
     # -- prefetch pump -------------------------------------------------------
     def _load(self, key: tuple) -> list:
-        return [self.flash.read_all(name) for name in self._groups[key]]
+        return [self.flash.read_view(name) for name in self._groups[key]]
 
     def _has(self, key: tuple) -> bool:
         return key in self._groups
@@ -455,13 +485,27 @@ class WeightGroupStore(_FlashPrefetcher):
         synchronous Flash read on a miss)."""
         return self._obtain((stack, group))
 
+    def prefetch_expert(self, stack: int, group: int, expert: int) -> None:
+        """Queue one expert's slice of a group for background read — the
+        router-aware prefetch path (predicted experts of the next group)."""
+        self._request((stack, group, expert))
+
+    def fetch_expert(self, stack: int, group: int, expert: int) -> list:
+        """One expert slice's leaf arrays (blocking on an in-flight
+        prefetch; synchronous Flash read on a cold-expert miss)."""
+        return self._obtain((stack, group, expert))
+
     # -- accounting ----------------------------------------------------------
     def group_nbytes(self, stack: int, group: int = 0) -> int:
         return self._group_nbytes.get((stack, group), 0)
 
+    def expert_nbytes(self, stack: int, group: int = 0,
+                      expert: int = 0) -> int:
+        return self._group_nbytes.get((stack, group, expert), 0)
+
     def stack_nbytes(self, stack: int) -> int:
-        return sum(n for (s, _g), n in self._group_nbytes.items()
-                   if s == stack)
+        return sum(n for k, n in self._group_nbytes.items()
+                   if k[0] == stack)
 
     @property
     def total_nbytes(self) -> int:

@@ -103,24 +103,29 @@ class ParamBuilder:
             return {"w": self.param(shape, full_spec, scale=scale)}
         gs = self.qcfg.group_size
         g = (in_dim // gs) if (gs and gs < in_dim) else 1
-        # expert tables (lead dims) keep the QuantizedTensor layout for the
-        # MoE expert-axis gathers; per-layer 2-D linears pack kernel-native
-        pack = self.pack and not lead
+        # per-layer 2-D linears pack into PackedLinear; expert tables (lead
+        # dims) pack into PackedExpertLinear — the grouped kernel's padded
+        # layout, expert axis kept directly indexable for the MoE gathers
+        # and per-expert weight streaming
+        pack = self.pack
+        _spec = RP.spec_packed_expert if lead else RP.spec_packed
+        _abstract = RP.abstract_packed_expert if lead else RP.abstract_packed
+        _pack = RP.pack_expert_linear if lead else RP.pack_linear
         if self.mode == "spec":
             data_spec = full_spec
             sz_spec = (*full_spec[:-2], None, full_spec[-1])
             if pack:
-                return {"w": RP.spec_packed(data_spec, sz_spec, bits, shape)}
+                return {"w": _spec(data_spec, sz_spec, bits, shape)}
             return {"w": q.QuantizedTensor(
                 data=P(*data_spec), scale=P(*sz_spec), zero=P(*sz_spec),
                 bits=bits, shape=shape)}
         if self.mode == "abstract":
             if pack:
-                return {"w": RP.abstract_packed(shape, bits, gs)}
+                return {"w": _abstract(shape, bits, gs)}
             return {"w": q.abstract_quantized(shape, bits, gs)}
         wf = (jax.random.normal(self._next_key(), shape, jnp.float32) * scale)
         qt = q.quantize(wf, bits, group_size=gs)
-        return {"w": RP.pack_linear(qt) if pack else qt}
+        return {"w": _pack(qt) if pack else qt}
 
     def bias(self, dim: int, spec=("model",)):
         return self.param((dim,), spec, scale=0.0)

@@ -26,6 +26,8 @@ from repro.configs.base import ModelConfig
 from repro.core import quantization as q
 from repro.models import layers as L
 from repro.models.shard_util import constrain
+from repro.runtime import dispatch as D
+from repro.runtime import plan as RP
 
 Array = jax.Array
 
@@ -63,19 +65,23 @@ def moe_params(b: L.ParamBuilder, cfg: ModelConfig, mesh_model: int = 16) -> dic
     }
 
 
-def _expert_matmul(xe: Array, wp: dict, qcfg: q.QuantConfig) -> Array:
-    """xe: [G, E, C, in] @ w: [E, in, out] -> [G, E, C, out]."""
+def _expert_matmul(xe: Array, wp: dict, qcfg: q.QuantConfig,
+                   dispatch: Optional[D.Dispatcher] = None) -> Array:
+    """xe: [G, E, C, in] @ w: [E, in, out] -> [G, E, C, out], routed through
+    the ``grouped_matmul`` dispatch op (Pallas grouped kernel on the kernel
+    backends; per-expert quant_matmul vmap on reference)."""
     w = wp["w"]
-    if isinstance(w, q.QuantizedTensor):
-        mm = lambda xi, wi: q.quant_matmul(xi, wi, qcfg)
-        return jax.vmap(mm, in_axes=(1, 0), out_axes=1)(xe, w)
+    if isinstance(w, (q.QuantizedTensor, RP.PackedExpertLinear)):
+        return D.resolve(dispatch).grouped_matmul(xe, w, qcfg)
     # f32 inputs: XLA:CPU's DotThunk rejects batched bf16xbf16->f32 dots
     # (TPU runs the quantized branch above anyway)
     return jnp.einsum("geci,eio->geco", xe.astype(jnp.float32),
                       w.astype(jnp.float32)).astype(jnp.bfloat16)
 
 
-def _dispatch_moe(xg: Array, p: dict, cfg: ModelConfig) -> Tuple[Array, Array]:
+def _dispatch_moe(xg: Array, p: dict, cfg: ModelConfig,
+                  dispatch: Optional[D.Dispatcher] = None
+                  ) -> Tuple[Array, Array, Array]:
     """Grouped dispatch over xg: [G, Tg, d] — G data-local groups.
 
     G maps onto the "data" mesh axis (GShard-style): every group sorts,
@@ -86,7 +92,9 @@ def _dispatch_moe(xg: Array, p: dict, cfg: ModelConfig) -> Tuple[Array, Array]:
     makes GSPMD combine full fp32 buffers with all-reduces (hundreds of TB
     per 32k-prefill step; EXPERIMENTS.md §Perf H1).
 
-    Returns (y: [G, Tg, d], aux[2] = (load-balance loss, router z-loss)).
+    Returns (y: [G, Tg, d], aux[2] = (load-balance loss, router z-loss),
+    ids: [G, Tg, K] int32 router top-k — the expert-streaming prefetch
+    signal read back by the EngineLoop).
     """
     G, Tg, d = xg.shape
     E, K = cfg.num_experts, cfg.experts_per_tok
@@ -121,11 +129,11 @@ def _dispatch_moe(xg: Array, p: dict, cfg: ModelConfig) -> Tuple[Array, Array]:
     e_ax, f_ax = ("model", None) if ep else (None, "model")
     xe = constrain(xe, "data", e_ax, None, None)
     # grouped FFN: [G,E,C,in] x [E,in,f] -> [G,E,C,f]
-    g = _expert_matmul(xe, p["w_gate"], cfg.quant)
-    u = _expert_matmul(xe, p["w_up"], cfg.quant)
+    g = _expert_matmul(xe, p["w_gate"], cfg.quant, dispatch)
+    u = _expert_matmul(xe, p["w_up"], cfg.quant, dispatch)
     h = L.swiglu(constrain(u, "data", e_ax, None, f_ax),
                  constrain(g, "data", e_ax, None, f_ax))
-    ye = _expert_matmul(h, p["w_down"], cfg.quant)               # [G,E,C,d]
+    ye = _expert_matmul(h, p["w_down"], cfg.quant, dispatch)     # [G,E,C,d]
     ye = constrain(ye, "data", e_ax, None, None)
     # gather-based combine: inverse-permute to token-major, sum K experts
     inv = jnp.argsort(order, axis=-1)
@@ -143,12 +151,14 @@ def _dispatch_moe(xg: Array, p: dict, cfg: ModelConfig) -> Tuple[Array, Array]:
     frac_probs = probs.mean(axis=1)                              # [G, E]
     lb = E * jnp.sum(frac_tokens * frac_probs, axis=-1).mean()
     z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
-    return y.astype(xg.dtype), jnp.stack([lb, z])
+    return y.astype(xg.dtype), jnp.stack([lb, z]), topk_i
 
 
 def _select_expert_weights(wp: dict, ids: Array):
     """Gather per-token expert weights: [E, in, out] -> [n, in, out]."""
     w = wp["w"]
+    if isinstance(w, RP.PackedExpertLinear):
+        return {"w": RP.take_experts(w, ids)}
     if isinstance(w, q.QuantizedTensor):
         return {"w": q.QuantizedTensor(data=w.data[ids], scale=w.scale[ids],
                                        zero=w.zero[ids], bits=w.bits,
@@ -156,12 +166,14 @@ def _select_expert_weights(wp: dict, ids: Array):
     return {"w": w[ids]}
 
 
-def _dispatch_moe_tiny(xg: Array, p: dict, cfg: ModelConfig
-                       ) -> Tuple[Array, Array]:
+def _dispatch_moe_tiny(xg: Array, p: dict, cfg: ModelConfig,
+                       dispatch: Optional[D.Dispatcher] = None
+                       ) -> Tuple[Array, Array, Array]:
     """Selected-expert decode path for tiny token counts (tokens*K <= E):
     gather only the K chosen experts' weights per token instead of running
     all E at capacity — at batch-1 long-context decode this cuts the
-    step's weight reads by E/K (EXPERIMENTS.md §Perf H3 iter2)."""
+    step's weight reads by E/K (EXPERIMENTS.md §Perf H3 iter2).  The
+    gathered tables run as an nK-expert grouped matmul (C=1 row each)."""
     G, Tg, d = xg.shape
     E, K = cfg.num_experts, cfg.experts_per_tok
     n = G * Tg
@@ -172,23 +184,21 @@ def _dispatch_moe_tiny(xg: Array, p: dict, cfg: ModelConfig
     topk_p, topk_i = jax.lax.top_k(probs, K)
     topk_p = topk_p / jnp.maximum(topk_p.sum(-1, keepdims=True), 1e-9)
     ids = topk_i.reshape(n * K)
-    xr = jnp.repeat(x_flat, K, axis=0)[:, None, :]          # [nK, 1, d]
-
-    def one(xi, wg, wu, wd):
-        g = L.apply_linear(xi, wg, cfg.quant)
-        u = L.apply_linear(xi, wu, cfg.quant)
-        h = L.swiglu(u, g)
-        return L.apply_linear(h, wd, cfg.quant)             # [1, d]
+    xr = jnp.repeat(x_flat, K, axis=0).reshape(1, n * K, 1, d)
 
     sel = lambda key: _select_expert_weights(p[key], ids)
-    ye = jax.vmap(one)(xr, sel("w_gate"), sel("w_up"), sel("w_down"))
+    g = _expert_matmul(xr, sel("w_gate"), cfg.quant, dispatch)
+    u = _expert_matmul(xr, sel("w_up"), cfg.quant, dispatch)
+    h = L.swiglu(u, g)
+    ye = _expert_matmul(h, sel("w_down"), cfg.quant, dispatch)  # [1,nK,1,d]
     per_tok = ye.reshape(n, K, d).astype(jnp.float32)
     y = jnp.einsum("tkd,tk->td", per_tok, topk_p.astype(jnp.float32))
     frac = jnp.sum(jax.nn.one_hot(topk_i, E, dtype=jnp.float32),
                    axis=(0, 1)) / jnp.maximum(n * K, 1)
     lb = E * jnp.sum(frac * probs.mean(0))
     z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
-    return y.reshape(G, Tg, d).astype(xg.dtype), jnp.stack([lb, z])
+    return (y.reshape(G, Tg, d).astype(xg.dtype), jnp.stack([lb, z]),
+            topk_i.reshape(G, Tg, K))
 
 
 def _num_groups(batch: int, mesh_data: int = 16) -> int:
@@ -196,13 +206,20 @@ def _num_groups(batch: int, mesh_data: int = 16) -> int:
     return math.gcd(batch, mesh_data)
 
 
-def apply_moe(x: Array, p: dict, cfg: ModelConfig) -> Tuple[Array, Array]:
+def apply_moe(x: Array, p: dict, cfg: ModelConfig, *,
+              dispatch: Optional[D.Dispatcher] = None,
+              collect: Optional[dict] = None) -> Tuple[Array, Array]:
     """x: [B, T, d] -> (y, aux[2]).
 
     Tokens are regrouped into G = gcd(B, 16) data-local groups (the
     GShard-style 'G' dim, mapped onto the "data" mesh axis) and long
     sequences are chunked along T so the [G, E, C, d] dispatch buffers stay
     bounded at ~MOE_CHUNK_TOKENS tokens per dispatch.
+
+    When ``collect`` is a dict, the router's top-k expert ids are stored
+    under ``collect["moe_ids"]`` as a traced [B, T, K] int32 array — the
+    EngineLoop reads it back per layer group to drive router-aware
+    per-expert weight prefetch.
     """
     B, T, d = x.shape
     G = _num_groups(B)
@@ -215,11 +232,16 @@ def apply_moe(x: Array, p: dict, cfg: ModelConfig) -> Tuple[Array, Array]:
         xc = xc.reshape(nc, G, bg * ct, d)
 
         def body(_, xi):
-            y, aux = _dispatch_moe(xi, p, cfg)
-            return None, (y, aux)
+            y, aux, ids = _dispatch_moe(xi, p, cfg, dispatch)
+            return None, (y, aux, ids)
 
-        _, (ys, auxs) = jax.lax.scan(body, None, xc)
+        _, (ys, auxs, idss) = jax.lax.scan(body, None, xc)
         y = jnp.transpose(ys.reshape(nc, G, bg, ct, d), (1, 2, 0, 3, 4))
+        if collect is not None:
+            K = idss.shape[-1]
+            ids = jnp.transpose(idss.reshape(nc, G, bg, ct, K),
+                                (1, 2, 0, 3, 4))
+            collect["moe_ids"] = ids.reshape(B, T, K)
         return y.reshape(B, T, d), auxs.mean(0)
     from repro.models.shard_util import current_mesh
     if (B * T * cfg.experts_per_tok <= cfg.num_experts
@@ -229,7 +251,11 @@ def apply_moe(x: Array, p: dict, cfg: ModelConfig) -> Tuple[Array, Array]:
         # data-dependent weight gather makes GSPMD all-reduce the full
         # table (325 GiB/step measured — §Perf H3 iter2, refuted at pod
         # scale). The pod path keeps the grouped dispatch.
-        y, aux = _dispatch_moe_tiny(x.reshape(G, bg * T, d), p, cfg)
-        return y.reshape(B, T, d), aux
-    y, aux = _dispatch_moe(x.reshape(G, bg * T, d), p, cfg)
+        y, aux, ids = _dispatch_moe_tiny(x.reshape(G, bg * T, d), p, cfg,
+                                         dispatch)
+    else:
+        y, aux, ids = _dispatch_moe(x.reshape(G, bg * T, d), p, cfg,
+                                    dispatch)
+    if collect is not None:
+        collect["moe_ids"] = ids.reshape(B, T, ids.shape[-1])
     return y.reshape(B, T, d), aux

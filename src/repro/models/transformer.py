@@ -297,11 +297,13 @@ def _put_row_state(state: Any, row: Any, slot: Array) -> Any:
 
 def _apply_pattern(x: Array, pp: dict, cfg: ModelConfig, pat: LayerPattern,
                    mode: str, positions, cache, cross_cache, pos, table,
-                   ctx: StepCtx, slot=None) -> Tuple[Array, Any, Array]:
+                   ctx: StepCtx, slot=None,
+                   collect: Optional[dict] = None) -> Tuple[Array, Any, Array]:
     """One layer. Returns (x, new_cache, moe_aux).  ``table``: the shared
     page table when the decode cache is paged (kv_pool), else None; in
     ``prefill_paged`` mode it is the single row's table and ``slot`` the
-    decode row receiving the prompt chunk."""
+    decode row receiving the prompt chunk.  ``collect``: trace-time dict the
+    MoE layer stores its router top-k ids into (expert-streaming signal)."""
     aux = jnp.zeros((2,), jnp.float32)
     dsp = ctx.dispatch
     h = L.rms_norm(x, pp["ln1"], cfg.rms_eps, dispatch=dsp)
@@ -333,7 +335,8 @@ def _apply_pattern(x: Array, pp: dict, cfg: ModelConfig, pat: LayerPattern,
                                       ctx.policy, dispatch=dsp)
         h2 = L.rms_norm(x, pp["ln2"], cfg.rms_eps, dispatch=dsp)
         if pat.moe:
-            y, aux = M.apply_moe(h2, pp["moe"], cfg)
+            y, aux = M.apply_moe(h2, pp["moe"], cfg, dispatch=dsp,
+                                 collect=collect)
         else:
             y = L.apply_ffn(h2, pp["ffn"], cfg, dispatch=dsp)
         x = x + y
@@ -354,7 +357,8 @@ def _apply_pattern(x: Array, pp: dict, cfg: ModelConfig, pat: LayerPattern,
         x = x + y
         h2 = L.rms_norm(x, pp["ln2"], cfg.rms_eps, dispatch=dsp)
         if pat.moe:
-            y2, aux = M.apply_moe(h2, pp["moe"], cfg)
+            y2, aux = M.apply_moe(h2, pp["moe"], cfg, dispatch=dsp,
+                                  collect=collect)
         else:
             y2 = L.apply_ffn(h2, pp["ffn"], cfg, dispatch=dsp)
         x = x + y2
@@ -417,7 +421,9 @@ def run_stack(sp, cfg: ModelConfig, stack_idx: int, mode: str, x: Array,
 
 def run_stack_group(gp, cfg: ModelConfig, stack_idx: int, mode: str,
                     x: Array, positions, scache, gidx, pos, table,
-                    ctx: StepCtx, slot=None) -> Tuple[Array, Any, Array]:
+                    ctx: StepCtx, slot=None,
+                    collect: Optional[dict] = None
+                    ) -> Tuple[Array, Any, Array]:
     """ONE layer group of one stack — the streamed execution mode.  ``gp``
     is the group's weight slice ([1, ...] leaves, installed in a DRAM ring
     slot by the engine's weight-streaming tier), NOT indexed from resident
@@ -427,7 +433,11 @@ def run_stack_group(gp, cfg: ModelConfig, stack_idx: int, mode: str,
 
     Applying the period body once per group in index order runs exactly
     the primitive sequence of ``run_stack``'s scan iterations, so a full
-    group-by-group pass is bitwise-equal to the resident scan."""
+    group-by-group pass is bitwise-equal to the resident scan.
+
+    When ``collect`` is a dict and the group has MoE patterns, their
+    router top-k ids are stacked into ``collect["moe_ids"]`` as
+    [n_moe, B, T, K] int32 — the expert-streaming prefetch signal."""
     patterns, _count = cfg.layer_plan()[stack_idx]
     gidx = jnp.asarray(gidx, jnp.int32)
     cslice = None
@@ -438,12 +448,19 @@ def run_stack_group(gp, cfg: ModelConfig, stack_idx: int, mode: str,
     pslice = jax.tree.map(lambda a: a[0], gp)
     aux = jnp.zeros((2,), jnp.float32)
     new_cs = []
+    ids_list = []
     for pi, pat in enumerate(patterns):
         cc = None if cslice is None else cslice[pi]
+        sub = None if collect is None else {}
         x, nc, a = _apply_pattern(x, pslice[pi], cfg, pat, mode, positions,
-                                  cc, None, pos, table, ctx, slot=slot)
+                                  cc, None, pos, table, ctx, slot=slot,
+                                  collect=sub)
+        if sub is not None and "moe_ids" in sub:
+            ids_list.append(sub["moe_ids"])
         new_cs.append(nc)
         aux = aux + a
+    if collect is not None and ids_list:
+        collect["moe_ids"] = jnp.stack(ids_list)
     new_scache = scache
     if scache is not None:
         new_scache = jax.tree.map(

@@ -22,8 +22,9 @@ step closes over it), so switching backends re-jits instead of silently
 reusing a stale cache.  ``REPRO_BACKEND`` is read when the Dispatcher is
 constructed.
 
-MoE expert matmuls intentionally stay on the reference path (see
-runtime/plan.py) — a grouped expert kernel is ROADMAP work.
+MoE expert matmuls dispatch as their own op ``"grouped_matmul"``
+(``kernels/grouped_matmul.py`` behind ``PackedExpertLinear`` operands), so
+their fallbacks are recorded under that key — never the generic matmul key.
 """
 from __future__ import annotations
 
@@ -121,6 +122,16 @@ class Dispatcher:
             tag = "bf16"
         return self._call("matmul", tag, x, w, qcfg, out_dtype)
 
+    def grouped_matmul(self, x: Array, w, qcfg: q.QuantConfig,
+                       out_dtype=jnp.bfloat16) -> Array:
+        """Per-expert grouped matmul: ``x [G, E, C, K] @ w[e] [K, N] ->
+        [G, E, C, N]`` with one quantized weight slab per expert (``w`` a
+        ``PackedExpertLinear`` or a per-layer ``[E, K, N]``
+        QuantizedTensor).  Fallbacks record under the ``grouped_matmul``
+        key, distinct from the generic matmul op."""
+        tag = f"W{w.bits}A{qcfg.act_bits}"
+        return self._call("grouped_matmul", tag, x, w, qcfg, out_dtype)
+
     def rmsnorm(self, x: Array, weight: Array, eps: float = 1e-5) -> Array:
         return self._call("rmsnorm", "*", x, weight, eps)
 
@@ -175,6 +186,17 @@ def _matmul_reference(disp, x, w, qcfg, out_dtype):
         return q.quant_matmul(x, w, qcfg, out_dtype=out_dtype)
     return jnp.matmul(x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
                       preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+@register("grouped_matmul", "reference")
+def _grouped_matmul_reference(disp, x, w, qcfg, out_dtype):
+    """Per-expert quant_matmul vmap over the expert axis (x axis -3, w
+    axis -3 of the logical [..., E, K, N] table)."""
+    if isinstance(w, planlib.PackedExpertLinear):
+        w = planlib.unpack_expert_linear(w)
+    return jax.vmap(
+        lambda xi, wi: q.quant_matmul(xi, wi, qcfg, out_dtype=out_dtype),
+        in_axes=(-3, -3), out_axes=-3)(x, w)
 
 
 @register("rmsnorm", "reference")
@@ -248,6 +270,40 @@ def _kernel_matmul(disp, x, w, qcfg, out_dtype, *, interpret):
     return y[:M, :w.n].reshape(*lead, w.n).astype(out_dtype)
 
 
+def _kernel_grouped_matmul(disp, x, w, qcfg, out_dtype, *, interpret):
+    from repro.kernels import grouped_matmul as GM
+    _platform_ok(interpret)
+    if not isinstance(w, planlib.PackedExpertLinear):
+        _require(isinstance(w, q.QuantizedTensor) and w.data.ndim == 3,
+                 "per-layer [E, K, N] expert table expected")
+        w = planlib.pack_expert_linear(w)   # plan-less caller: repack inline
+    _require(w.data.ndim == 3,
+             "expert table must be layer-sliced to [E, Kp, Np]")
+    _require(w.scale.shape[-2] == 1,
+             "group-wise scales make the integer correction group-dependent")
+    _require(x.ndim == 4, "grouped matmul wants [G, E, C, K] activations")
+    G, E, C, K = x.shape
+    _require(E == w.data.shape[0], f"expert axis {E} != weight {w.data.shape[0]}")
+    _require(K == w.k, f"reduction dim {K} != weight {w.k}")
+    if G * C == 0:                          # empty capacity: no rows at all
+        return jnp.zeros((G, E, C, w.n), out_dtype)
+    x2 = jnp.moveaxis(x, 1, 0).reshape(E, G * C, K)
+    M = G * C
+    mp = (disp.plan.matmul_plan(w.k, w.n, w.bits) if disp.plan is not None
+          else planlib.matmul_plan(w.k, w.n, w.bits))
+    bm, bn, bk = mp.blocks(M)
+    xq, sx = q.quantize_activations(x2)
+    Mp = -(-M // bm) * bm
+    if Mp != M or mp.kp != K:
+        xq = jnp.pad(xq, ((0, 0), (0, Mp - M), (0, mp.kp - K)))
+        sx = jnp.pad(sx, ((0, 0), (0, Mp - M), (0, 0)), constant_values=1.0)
+    y = GM.grouped_matmul(xq, sx, w.data, w.scale[:, 0], w.zero[:, 0],
+                          bits=w.bits, blocks=(min(bm, Mp), bn, bk),
+                          interpret=interpret)
+    y = y[:, :M, :w.n].reshape(E, G, C, w.n)
+    return jnp.moveaxis(y, 0, 1).astype(out_dtype)
+
+
 def _kernel_rmsnorm(disp, x, weight, eps, *, interpret):
     from repro.kernels import rmsnorm as RN
     _platform_ok(interpret)
@@ -319,6 +375,9 @@ for _be, _interp in (("interpret", True), ("tpu", False)):
     for _tag in ("W4A8", "W8A8"):
         register("matmul", _be, _tag)(
             lambda d, x, w, c, o, _i=_interp: _kernel_matmul(
+                d, x, w, c, o, interpret=_i))
+        register("grouped_matmul", _be, _tag)(
+            lambda d, x, w, c, o, _i=_interp: _kernel_grouped_matmul(
                 d, x, w, c, o, interpret=_i))
     register("rmsnorm", _be)(
         lambda d, x, w, e, _i=_interp: _kernel_rmsnorm(

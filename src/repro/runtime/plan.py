@@ -18,10 +18,11 @@ TPU analogue built here:
   and records DRAM-vs-Flash placement via ``core/hybrid_storage`` (the
   embedding's 1/vocab per-step utilization sends it to Flash first — C2).
 
-MoE expert tables ([L, E, K, N] leaves) keep the plain QuantizedTensor
-layout: the selected-expert decode path and the grouped dispatch both index
-the expert axis directly, which a packed wrapper would obstruct; they stay
-on the reference matmul until a grouped expert kernel lands.
+MoE expert tables ([L, E, K, N] leaves) repack into ``PackedExpertLinear``
+— the same padded kernel-native layout with a leading expert axis, consumed
+by the grouped Pallas kernel (``kernels/grouped_matmul.py``) via the
+``"grouped_matmul"`` dispatch op; the expert axis stays directly indexable
+for the selected-expert decode gathers and per-expert weight streaming.
 
 Cost of packing on the reference backend: the reference matmul slices the
 padding back off (``unpack_linear``).  Real model dims are (8,128)-aligned
@@ -146,6 +147,69 @@ def spec_packed(data_spec, sz_spec, bits: int, shape) -> PackedLinear:
                         zero=P(*sz_spec), bits=bits, k=k, n=n)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedExpertLinear(PackedLinear):
+    """A stacked per-expert quantized linear in the kernel-native layout.
+
+    Same padded carrier as ``PackedLinear`` with a leading expert axis
+    (plus an optional scan/layer axis ahead of it):
+
+      data:  int8 [..., E, Kp, Np//2] (bits=4) or [..., E, Kp, Np]
+      scale: fp32 [..., E, g, Np]; zero likewise
+
+    The grouped kernel indexes the expert axis with its leading grid
+    dimension; the selected-expert decode path and per-expert weight
+    streaming gather/slice the same axis directly.
+    """
+
+    @property
+    def experts(self) -> int:
+        return int(self.data.shape[-3])
+
+
+def pack_expert_linear(qt: q.QuantizedTensor) -> PackedExpertLinear:
+    """Repack a stacked expert table ([..., E, K, N]) into the grouped
+    kernel's padded layout — same exact-padding guarantees as
+    ``pack_linear`` (the K/N pads are shared across experts)."""
+    assert qt.data.ndim >= 3, qt.data.shape
+    pl_ = pack_linear(qt)
+    return PackedExpertLinear(data=pl_.data, scale=pl_.scale, zero=pl_.zero,
+                              bits=pl_.bits, k=pl_.k, n=pl_.n)
+
+
+def unpack_expert_linear(pel: PackedExpertLinear) -> q.QuantizedTensor:
+    """Slice the padding back off every expert slab (reference grouped
+    matmul + round-trip tests)."""
+    return unpack_linear(pel)
+
+
+def abstract_packed_expert(shape, bits: int,
+                           group_size: int = 0) -> PackedExpertLinear:
+    """ShapeDtypeStruct mirror of ``pack_expert_linear``."""
+    pl_ = abstract_packed(shape, bits, group_size)
+    return PackedExpertLinear(data=pl_.data, scale=pl_.scale, zero=pl_.zero,
+                              bits=bits, k=pl_.k, n=pl_.n)
+
+
+def spec_packed_expert(data_spec, sz_spec, bits: int,
+                       shape) -> PackedExpertLinear:
+    """PartitionSpec mirror of ``pack_expert_linear``."""
+    *_, k, n = shape
+    return PackedExpertLinear(data=P(*data_spec), scale=P(*sz_spec),
+                              zero=P(*sz_spec), bits=bits, k=k, n=n)
+
+
+def take_experts(pel: PackedExpertLinear, ids) -> PackedExpertLinear:
+    """Gather expert slabs along the expert axis (axis -3 of the carrier):
+    the selected-expert decode path's per-token weight gather."""
+    return PackedExpertLinear(
+        data=jnp.take(pel.data, ids, axis=-3),
+        scale=jnp.take(pel.scale, ids, axis=-3),
+        zero=jnp.take(pel.zero, ids, axis=-3),
+        bits=pel.bits, k=pel.k, n=pel.n)
+
+
 # ---------------------------------------------------------------------------
 # Per-shape tile plans
 # ---------------------------------------------------------------------------
@@ -219,6 +283,9 @@ class StreamedStackPlan:
     count: int                 # layer groups in the stack (the scan length)
     group_bytes: int           # bytes of one group's leaf slices
     ring_groups: int           # DRAM ring slots (>= 2: double-buffered)
+    experts: int = 0           # > 0: expert-granular streaming (MoE stack)
+    expert_bytes: int = 0      # bytes of ONE expert's slice of one group
+    shared_bytes: int = 0      # bytes of a group's non-expert (shared) leaves
 
     @property
     def ring_bytes(self) -> int:
@@ -260,8 +327,38 @@ def _tree_nbytes(tree) -> int:
     return sum(leaf.nbytes for leaf in jax.tree.leaves(tree))
 
 
+# parameter-tree keys whose leaves carry a per-expert axis (MoE tables);
+# everything else in a MoE stack (router, norms, attention) is shared
+EXPERT_PARAM_KEYS = ("w_gate", "w_up", "w_down")
+
+
+def is_expert_path(path) -> bool:
+    """True when a tree_flatten_with_path key path names an expert table."""
+    return any(getattr(p, "key", None) in EXPERT_PARAM_KEYS for p in path)
+
+
+def _expert_group_bytes(stack_tree, count: int, experts: int
+                       ) -> Tuple[int, int]:
+    """(per-expert bytes, shared bytes) of ONE layer group of a stack.
+
+    Walks the stack's leaves by key path: ``w_gate``/``w_up``/``w_down``
+    leaves split per expert, every other leaf (router, norms, attention)
+    is shared.  Returns (0, group bytes) for stacks with no expert leaves
+    — including policy dry-runs driven by flat arrays."""
+    leaves = jax.tree_util.tree_flatten_with_path(stack_tree)[0]
+    expert_total = sum(leaf.nbytes for path, leaf in leaves
+                       if is_expert_path(path))
+    shared_total = sum(leaf.nbytes for path, leaf in leaves
+                       if not is_expert_path(path))
+    if not expert_total or not experts:
+        return 0, -(-(expert_total + shared_total) // count)
+    return (-(-expert_total // (count * experts)),
+            -(-shared_total // count))
+
+
 def weight_stream_policy(cfg, params, dram_budget_bytes: Optional[int] = None,
-                         ring_groups: int = 2) -> WeightStreamPolicy:
+                         ring_groups: int = 2,
+                         expert_granular: bool = True) -> WeightStreamPolicy:
     """Compute the weight placement for ``params`` under
     ``dram_budget_bytes`` (the WEIGHT budget — the caller carves it out of
     total DRAM after the KV-pool reservation).  ``None`` = everything
@@ -305,9 +402,16 @@ def weight_stream_policy(cfg, params, dram_budget_bytes: Optional[int] = None,
             left -= stack_bytes
             continue
         placement[f"stacks/{si}"] = "stream"
+        experts = expert_bytes = shared_bytes = 0
+        if expert_granular and getattr(cfg, "num_experts", 0):
+            eb, sb = _expert_group_bytes(params["stacks"][si], count,
+                                         cfg.num_experts)
+            if eb:
+                experts, expert_bytes, shared_bytes = cfg.num_experts, eb, sb
         streamed.append(StreamedStackPlan(
             stack=si, count=count, group_bytes=group_bytes,
-            ring_groups=int(ring)))
+            ring_groups=int(ring), experts=experts,
+            expert_bytes=expert_bytes, shared_bytes=shared_bytes))
         resident += ring * group_bytes
         left -= ring * group_bytes
     return WeightStreamPolicy(
@@ -321,10 +425,15 @@ def weight_stream_policy(cfg, params, dram_budget_bytes: Optional[int] = None,
 # ---------------------------------------------------------------------------
 
 def _packable(leaf) -> bool:
-    """Per-layer 2-D linears (optionally stacked on one scan axis).  MoE
-    expert tables ([L, E, K, N] => ndim 4) keep the QuantizedTensor layout
-    for the expert-axis gathers."""
+    """Per-layer 2-D linears (optionally stacked on one scan axis) pack
+    into ``PackedLinear``; MoE expert tables ([L, E, K, N] => ndim 4) pack
+    into ``PackedExpertLinear`` via ``_expert_packable``."""
     return isinstance(leaf, q.QuantizedTensor) and leaf.data.ndim <= 3
+
+
+def _expert_packable(leaf) -> bool:
+    """Stacked expert tables: [L, E, K, N] QuantizedTensor leaves."""
+    return isinstance(leaf, q.QuantizedTensor) and leaf.data.ndim == 4
 
 
 def decode_buckets(max_slots: int, uniform: bool = True) -> Tuple[int, ...]:
@@ -462,15 +571,19 @@ class ExecutionPlan:
 
     def weight_placement(self, cfg,
                          dram_budget_bytes: Optional[int] = None,
-                         ring_groups: int = 2) -> WeightStreamPolicy:
+                         ring_groups: int = 2,
+                         expert_granular: bool = True) -> WeightStreamPolicy:
         """DRAM/Flash weight placement under a byte budget (plan-owned,
         like tile shapes and pool geometry) — see ``weight_stream_policy``.
         Stacks that overflow the budget stream per layer group through a
-        double-buffered DRAM ring; the per-entry decisions merge into
-        ``self.placement`` so observability sees one placement map."""
+        double-buffered DRAM ring (MoE stacks additionally split each
+        group's expert tables per expert when ``expert_granular``); the
+        per-entry decisions merge into ``self.placement`` so observability
+        sees one placement map."""
         policy = weight_stream_policy(cfg, self.params,
                                       dram_budget_bytes=dram_budget_bytes,
-                                      ring_groups=ring_groups)
+                                      ring_groups=ring_groups,
+                                      expert_granular=expert_granular)
         self.placement.update(policy.placement)
         return policy
 
@@ -510,11 +623,15 @@ def build_plan(cfg, params, *,
             matmuls[key].blocks(M_ALIGN)
 
     def repack(leaf):
-        if isinstance(leaf, PackedLinear):
+        if isinstance(leaf, PackedLinear):      # incl. PackedExpertLinear
             note(leaf.k, leaf.n, leaf.bits)
             return leaf
         if _packable(leaf):
             packed = pack_linear(leaf)
+            note(packed.k, packed.n, packed.bits)
+            return packed
+        if _expert_packable(leaf):
+            packed = pack_expert_linear(leaf)
             note(packed.k, packed.n, packed.bits)
             return packed
         return leaf

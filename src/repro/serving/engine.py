@@ -137,6 +137,15 @@ class EngineStats:
     weight_group_misses: int = 0
     weight_stall_s: float = 0.0
     dram_weight_bytes: int = 0
+    # router-aware expert streaming (MoE stacks): per group visit on the
+    # decode path, experts the router actually selected that the
+    # router-history prediction had already installed (hits) vs cold
+    # synchronous fetches (misses), and the Flash bytes fetched vs the
+    # install-every-expert baseline of whole-group streaming
+    expert_prefetch_hits: int = 0
+    expert_prefetch_misses: int = 0
+    expert_bytes_fetched: int = 0
+    expert_bytes_baseline: int = 0
     # continuous batching: per-request TTFT/TPOT records
     requests: List[RequestStats] = dataclasses.field(default_factory=list)
 
@@ -161,6 +170,23 @@ class EngineStats:
         layer-ahead prefetch pipeline (1.0 when nothing streams)."""
         total = self.weight_group_hits + self.weight_group_misses
         return self.weight_group_hits / total if total else 1.0
+
+    @property
+    def expert_prefetch_hit_rate(self) -> float:
+        """Fraction of router-selected experts the router-history
+        prediction had already installed when their group ran (1.0 when
+        no expert-granular stack streams)."""
+        total = self.expert_prefetch_hits + self.expert_prefetch_misses
+        return self.expert_prefetch_hits / total if total else 1.0
+
+    @property
+    def expert_bytes_saved_frac(self) -> float:
+        """Fraction of the whole-group streaming Flash traffic the
+        router-aware per-expert fetches avoided on the decode path (0.0
+        when no expert-granular stack streams)."""
+        if not self.expert_bytes_baseline:
+            return 0.0
+        return 1.0 - self.expert_bytes_fetched / self.expert_bytes_baseline
 
     def ttft(self, p: float = 50.0) -> float:
         return percentile([r.ttft_s for r in self.requests], p)
@@ -229,6 +255,143 @@ class WeightRing:
         return self.slots[r]
 
 
+class ExpertWeightRing:
+    """DRAM ring for ONE expert-granular streamed MoE stack.
+
+    The ring slot of group ``g`` is still ``g % ring_groups``, but a slot
+    now holds two granularities: the group's SHARED leaves (router, norms,
+    attention — always installed, the router must be fresh before the
+    expert tables matter) and one device piece per (expert leaf, expert)
+    — installed only for the experts the router history predicts or the
+    current step actually selects.  ``obtain`` assembles the fixed-shape
+    ``[1, E, ...]`` param tree the group graphs were traced against by
+    concatenating the per-expert pieces; experts never installed for this
+    group contribute an all-zero (or stale) piece, which is safe by
+    construction — the MoE combine only ever gathers the outputs of
+    experts the router assigned, and the serving loop re-runs the group
+    if any assigned expert's slice was cold (bitwise-exact fallback).
+    Fixed leaf shapes mean the group graphs never retrace.
+    """
+
+    def __init__(self, store: HS.WeightGroupStore, stack: int, count: int,
+                 ring_groups: int, experts: int, treedef, skeleton,
+                 expert_flags: Sequence[bool]):
+        assert ring_groups >= 2, "the ring must double-buffer"
+        self.store = store
+        self.stack = stack
+        self.count = count
+        self.ring_groups = ring_groups
+        self.experts = experts
+        self.treedef = treedef
+        self.skeleton = skeleton          # full flat leaf SDS, [1, ...]
+        self.flags = list(expert_flags)   # per flat leaf: expert table?
+        self._shared_skel = [s for s, f in zip(skeleton, self.flags)
+                             if not f]
+        # one expert's piece of each expert leaf: [1, 1, *rest]
+        self._expert_skel = [
+            jax.ShapeDtypeStruct((1, 1, *s.shape[2:]), s.dtype)
+            for s, f in zip(skeleton, self.flags) if f]
+        self.slot_group = [-1] * ring_groups      # shared leaves' group
+        self.shared_dev: List = [None] * ring_groups
+        self.exp_group = [[-1] * experts for _ in range(ring_groups)]
+        self.exp_dev: List = [[None] * experts for _ in range(ring_groups)]
+        self._assembled: List = [None] * ring_groups
+        self._assembled_group = [-1] * ring_groups
+        self._zero_pieces: Optional[list] = None
+        self.stall_s = 0.0
+        self.installs = 0                 # shared-slab installs
+        self.expert_installs = 0          # per-expert slice installs
+
+    def slot_of(self, group: int) -> int:
+        return group % self.ring_groups
+
+    def installed(self, group: int) -> set:
+        """Experts whose slices of ``group`` are device-resident now."""
+        r = self.slot_of(group)
+        return {e for e in range(self.experts)
+                if self.exp_group[r][e] == group}
+
+    def prefetch(self, group: int, experts) -> None:
+        """Queue the group's shared slab + the given experts' slices for
+        background Flash reads (skipping anything already installed)."""
+        if not (0 <= group < self.count):
+            return
+        r = self.slot_of(group)
+        if self.slot_group[r] != group:
+            self.store.prefetch_group(self.stack, group)
+        for e in experts:
+            e = int(e)
+            if 0 <= e < self.experts and self.exp_group[r][e] != group:
+                self.store.prefetch_expert(self.stack, group, e)
+
+    def ensure(self, group: int, experts) -> tuple:
+        """Install the group's shared slab and the given experts' slices
+        into the ring slot (blocking on in-flight prefetches — counted as
+        ``stall_s`` — or synchronous Flash reads on misses).  Returns
+        ``(n_expert_slices_fetched, shared_slab_fetched)``."""
+        r = self.slot_of(group)
+        shared_new = False
+        if self.slot_group[r] != group:
+            t0 = time.perf_counter()
+            arrays = self.store.fetch_group(self.stack, group)
+            self.stall_s += time.perf_counter() - t0
+            self.slot_group[r] = -1
+            self.shared_dev[r] = [jnp.asarray(a, dtype=s.dtype)
+                                  for a, s in zip(arrays, self._shared_skel)]
+            self.slot_group[r] = group
+            self._assembled_group[r] = -1
+            self.installs += 1
+            shared_new = True
+        n_new = 0
+        for e in sorted({int(e) for e in experts}):
+            if self.exp_group[r][e] == group:
+                continue
+            t0 = time.perf_counter()
+            arrays = self.store.fetch_expert(self.stack, group, e)
+            self.stall_s += time.perf_counter() - t0
+            self.exp_group[r][e] = -1
+            self.exp_dev[r][e] = [jnp.asarray(a, dtype=s.dtype)
+                                  for a, s in zip(arrays, self._expert_skel)]
+            self.exp_group[r][e] = group
+            self._assembled_group[r] = -1
+            self.expert_installs += 1
+            n_new += 1
+        return n_new, shared_new
+
+    def _zero_piece(self, j: int):
+        if self._zero_pieces is None:
+            self._zero_pieces = [jnp.zeros(s.shape, s.dtype)
+                                 for s in self._expert_skel]
+        return self._zero_pieces[j]
+
+    def obtain(self, group: int):
+        """The group's assembled device param tree.  ``ensure`` must have
+        installed the shared slab first; expert positions concatenate the
+        installed pieces (zeros where an expert was never fetched for any
+        group in this slot) into the fixed ``[1, E, ...]`` leaf shape."""
+        r = self.slot_of(group)
+        assert self.slot_group[r] == group, "ensure() the group first"
+        if self._assembled_group[r] == group:
+            return self._assembled[r]
+        leaves, si, ei = [], 0, 0
+        for i, s in enumerate(self.skeleton):
+            if self.flags[i]:
+                pieces = []
+                for e in range(self.experts):
+                    dev = self.exp_dev[r][e]
+                    pieces.append(dev[ei] if dev is not None
+                                  else self._zero_piece(ei))
+                leaves.append(jnp.concatenate(pieces, axis=1))
+                ei += 1
+            else:
+                leaves.append(self.shared_dev[r][si])
+                si += 1
+        self._assembled_group[r] = -1
+        self._assembled[r] = jax.tree.unflatten(self.treedef, leaves)
+        self._assembled_group[r] = group
+        return self._assembled[r]
+
+
 class Engine:
     """Single-host engine (tests/examples); the pod path uses the same step
     functions via launch/serve.py with the production mesh."""
@@ -240,7 +403,8 @@ class Engine:
                  backend: Optional[str] = None,
                  plan: Optional[RP.ExecutionPlan] = None,
                  weight_dram_budget_bytes: Optional[int] = None,
-                 weight_ring_groups: int = 2):
+                 weight_ring_groups: int = 2,
+                 expert_streaming: bool = True):
         self.cfg = cfg
         # the ExecutionPlan is built ONCE per model (paper §5.1): weights
         # repacked into the kernel-native layout, tiles solved per matmul
@@ -280,9 +444,11 @@ class Engine:
         # per-layer packed slices and dropped from the DRAM param tree;
         # EngineLoop runs them group-by-group through a DRAM ring.
         self.weight_policy = self.plan.weight_placement(
-            cfg, weight_dram_budget_bytes, ring_groups=weight_ring_groups)
+            cfg, weight_dram_budget_bytes, ring_groups=weight_ring_groups,
+            expert_granular=expert_streaming)
         self.weight_store: Optional[HS.WeightGroupStore] = None
         self._stream_skel: Dict[int, tuple] = {}
+        self._expert_flags: Dict[int, list] = {}
         if self.weight_policy.active:
             self._export_streamed_stacks()
         self.stats.dram_weight_bytes = self.weight_policy.resident_bytes
@@ -291,18 +457,34 @@ class Engine:
         """Persist each streamed stack's per-layer weight slices to Flash
         (leading stacked axis sliced one layer-group at a time) and drop
         the DRAM copies — after this the streamed stacks live only on
-        Flash + the EngineLoop's DRAM ring."""
+        Flash + the EngineLoop's DRAM ring.
+
+        Expert-granular stacks split further: a group's shared leaves
+        (router, norms, attention) go into the usual group blob, and each
+        expert's slice of the expert tables becomes its own blob — the
+        serving loop then fetches only the experts the router selects."""
         self.weight_store = HS.WeightGroupStore(self.flash)
         stacks = list(self.params["stacks"])
         for sp in self.weight_policy.streamed:
             si = sp.stack
-            leaves, treedef = jax.tree.flatten(stacks[si])
+            pleaves, treedef = jax.tree_util.tree_flatten_with_path(
+                stacks[si])
+            leaves = [l for _p, l in pleaves]
+            flags = ([RP.is_expert_path(p) for p, _l in pleaves]
+                     if sp.experts else [False] * len(pleaves))
             for g in range(sp.count):
                 self.weight_store.put_group(
-                    si, g, [np.asarray(leaf[g:g + 1]) for leaf in leaves])
+                    si, g, [np.asarray(leaf[g:g + 1])
+                            for leaf, f in zip(leaves, flags) if not f])
+                for e in range(sp.experts):
+                    self.weight_store.put_expert_group(
+                        si, g, e,
+                        [np.asarray(leaf[g:g + 1, e:e + 1])
+                         for leaf, f in zip(leaves, flags) if f])
             self._stream_skel[si] = (treedef, [
                 jax.ShapeDtypeStruct((1, *l.shape[1:]), l.dtype)
                 for l in leaves])
+            self._expert_flags[si] = flags
             stacks[si] = None
         self.params = dict(self.params, stacks=tuple(stacks))
         self.plan.params = self.params
@@ -585,6 +767,15 @@ class EngineLoop:
         # shape only (bucketed streaming is a recorded follow-on).
         self.wpolicy = engine.weight_policy
         self._wstreams: Dict[int, WeightRing] = {}
+        # expert-granular streamed MoE stacks (PR 9): per-expert rings,
+        # their plans, and the router-history prediction — per (stack,
+        # group), the union of the experts the last two decode visits
+        # actually selected (initialized to every expert, so the first
+        # visits install everything and prediction only ever narrows)
+        self._expert_rings: Dict[int, ExpertWeightRing] = {}
+        self._espl: Dict[int, RP.StreamedStackPlan] = {}
+        self._expert_pred: Dict[tuple, set] = {}
+        self._expert_last: Dict[tuple, set] = {}
         self._stack_dec: Dict[int, Any] = {}
         self._grp_dec: Dict[int, Any] = {}
         self._stack_pf: Dict[int, Any] = {}
@@ -596,9 +787,20 @@ class EngineLoop:
             store = engine.weight_store
             for spl in self.wpolicy.streamed:
                 treedef, skel = engine._stream_skel[spl.stack]
-                self._wstreams[spl.stack] = WeightRing(
-                    store, spl.stack, spl.count, spl.ring_groups,
-                    treedef, skel)
+                if spl.experts:
+                    self._expert_rings[spl.stack] = ExpertWeightRing(
+                        store, spl.stack, spl.count, spl.ring_groups,
+                        spl.experts, treedef, skel,
+                        engine._expert_flags[spl.stack])
+                    self._espl[spl.stack] = spl
+                    for g in range(spl.count):
+                        allE = set(range(spl.experts))
+                        self._expert_pred[(spl.stack, g)] = set(allE)
+                        self._expert_last[(spl.stack, g)] = set(allE)
+                else:
+                    self._wstreams[spl.stack] = WeightRing(
+                        store, spl.stack, spl.count, spl.ring_groups,
+                        treedef, skel)
             # the layer-ahead prefetch chain walks the global group
             # sequence in execution order; the last group wraps to the
             # first so the next step's leading fetch is already in
@@ -614,7 +816,17 @@ class EngineLoop:
                 "final_norm": engine.params["final_norm"],
                 "lm_head": engine.params["lm_head"]}
             for si in range(len(cfg.layer_plan())):
-                if si in self._wstreams:
+                if si in self._expert_rings:
+                    # MoE group graphs additionally return the router
+                    # top-k ids — the loop's router-aware streaming and
+                    # its cold-miss re-run key off them
+                    self._grp_dec[si] = jax.jit(functools.partial(
+                        self._group_moe_impl, cfg, engine._ctx, si,
+                        "decode"))
+                    self._grp_pf[si] = jax.jit(functools.partial(
+                        self._group_moe_impl, cfg, engine._ctx, si,
+                        "prefill_paged"))
+                elif si in self._wstreams:
                     self._grp_dec[si] = jax.jit(functools.partial(
                         self._group_impl, cfg, engine._ctx, si, "decode"))
                     self._grp_pf[si] = jax.jit(functools.partial(
@@ -631,8 +843,7 @@ class EngineLoop:
             self._post_pf = jax.jit(functools.partial(
                 self._post_chunk_impl, cfg, engine._ctx))
             # prime the chain: the very first obtain must already be a hit
-            si0, g0 = self._stream_seq[0]
-            self._wstreams[si0].prefetch(g0)
+            self._prefetch_sg(*self._stream_seq[0])
         self.buckets = engine.plan.decode_buckets(
             max_slots, uniform=self._bucketed)
         self._decode_b = jax.jit(
@@ -688,6 +899,22 @@ class EngineLoop:
         return x, nsc
 
     @staticmethod
+    def _group_moe_impl(cfg, ctx, si, mode, gp, x, scache, gidx, pos,
+                        table, positions, slot, lora):
+        """Like ``_group_impl`` but also returns the group's router top-k
+        expert ids ``[n_moe, B, T, K]`` — the host reads them to track
+        which experts this step actually needed (pure function of the
+        inputs, so re-running it after a cold-expert install reproduces
+        the exact all-weights-resident result)."""
+        if lora is not None:
+            ctx = dataclasses.replace(ctx, lora=lora)
+        collect: dict = {}
+        x, nsc, _ = T.run_stack_group(gp, cfg, si, mode, x, positions,
+                                      scache, gidx, pos, table, ctx,
+                                      slot=slot, collect=collect)
+        return x, nsc, collect["moe_ids"]
+
+    @staticmethod
     def _post_decode_impl(cfg, ctx, head, x, pos, active):
         logits = T._logits(x, head, cfg, ctx.dispatch)[:, -1]
         return logits, jnp.where(active, pos + 1, pos)
@@ -698,32 +925,113 @@ class EngineLoop:
             x, jnp.asarray(last_idx, jnp.int32), 1, axis=1)
         return T._logits(last, head, cfg, ctx.dispatch)[:, 0]
 
+    def _prefetch_sg(self, si: int, g: int) -> None:
+        """Queue the chain successor's Flash reads on whichever ring kind
+        owns it (expert rings prefetch the shared slab + the predicted
+        experts' slices)."""
+        ring = self._wstreams.get(si)
+        if ring is not None:
+            ring.prefetch(g)
+            return
+        self._expert_rings[si].prefetch(g, self._expert_pred[(si, g)])
+
+    def _run_expert_group(self, fn, ering, spl, si, g, mode, x, scache,
+                          pos, table, positions, slot, lora, active):
+        """One expert-granular group: install the shared slab + the
+        router-history-predicted experts, run the group, then compare the
+        router's ACTUAL selection against what was installed.  A cold
+        expert (routed but not installed) re-runs the group — the graph
+        is a pure function of (params, activations), so the re-run with
+        the fresh slices is bitwise what an all-resident step computes;
+        the discarded first pass only ever touched experts whose outputs
+        the combine would have dropped anyway.  Prefill installs every
+        expert up front (capacity dispatch multiplies all slabs) and is
+        excluded from the hit/byte accounting."""
+        gi = jnp.asarray(g, jnp.int32)
+        if mode != "decode":
+            ering.ensure(g, range(spl.experts))
+            nx, nsc, _ = fn(ering.obtain(g), x, scache, gi, pos, table,
+                            positions, slot, lora)
+            return nx, nsc
+        stats = self.eng.stats
+        pred = self._expert_pred[(si, g)]
+        n_new, shared_new = ering.ensure(g, pred)
+        installed = ering.installed(g)
+        nx, nsc, ids = fn(ering.obtain(g), x, scache, gi, pos, table,
+                          positions, slot, lora)
+        act = None if active is None else np.asarray(active, bool)
+        if act is None or not act.any():
+            # warmup / all-masked step: nothing the router chose is real
+            # — no accounting, no prediction update (the install above
+            # still pre-populates the ring)
+            return nx, nsc
+        actual = {int(e) for e in np.unique(np.asarray(ids)[:, act])}
+        stats.expert_prefetch_hits += len(actual & installed)
+        stats.expert_prefetch_misses += len(actual - installed)
+        # cold-expert fallback: install what the router actually picked
+        # and re-run until the selection is fully resident.  More than
+        # one pass only happens in multi-MoE groups, where a later
+        # router's input depends on an earlier layer's (stale) experts.
+        for _ in range(spl.experts):
+            missing = actual - ering.installed(g)
+            if not missing:
+                break
+            ne2, sn2 = ering.ensure(g, missing)
+            n_new += ne2
+            nx, nsc, ids = fn(ering.obtain(g), x, scache, gi, pos, table,
+                              positions, slot, lora)
+            actual = {int(e) for e in np.unique(np.asarray(ids)[:, act])}
+        fetched = ((spl.shared_bytes if shared_new else 0)
+                   + n_new * spl.expert_bytes)
+        stats.expert_bytes_fetched += fetched
+        # baseline: whole-group streaming refetches the full group slab
+        # whenever the slot was stale; when it wasn't, neither scheme
+        # moves bytes and the visit contributes zero savings
+        stats.expert_bytes_baseline += (
+            spl.shared_bytes + spl.experts * spl.expert_bytes
+            if shared_new else fetched)
+        self._expert_pred[(si, g)] = actual | self._expert_last[(si, g)]
+        self._expert_last[(si, g)] = actual
+        return nx, nsc
+
     def _stream_stacks(self, mode, x, cache, pos, table, positions, slot,
-                       lora):
+                       lora, active=None):
         """Run every stack for one step in the split streamed mode —
         resident stacks scan, streamed stacks run group-by-group out of
         their DRAM ring, prefetching the chain successor before each
-        obtain so Flash reads overlap the group that is computing."""
+        obtain so Flash reads overlap the group that is computing.
+        Expert-granular MoE stacks route through ``_run_expert_group``
+        (``active`` marks the decode rows whose routing is real)."""
         eng = self.eng
         new_stacks = []
         for si in range(len(self.cfg.layer_plan())):
             scache = cache["stacks"][si]
             ring = self._wstreams.get(si)
-            if ring is None:
+            ering = self._expert_rings.get(si)
+            if ring is None and ering is None:
                 fn = (self._stack_dec if mode == "decode"
                       else self._stack_pf)[si]
                 x, nsc = fn(eng.params["stacks"][si], x, scache, pos,
                             table, positions, slot, lora)
-            else:
+            elif ring is not None:
                 fn = (self._grp_dec if mode == "decode"
                       else self._grp_pf)[si]
                 nsc = scache
                 for g in range(ring.count):
-                    nsi, ng = self._stream_next[(si, g)]
-                    self._wstreams[nsi].prefetch(ng)
+                    self._prefetch_sg(*self._stream_next[(si, g)])
                     gp = ring.obtain(g)
                     x, nsc = fn(gp, x, nsc, jnp.asarray(g, jnp.int32),
                                 pos, table, positions, slot, lora)
+            else:
+                fn = (self._grp_dec if mode == "decode"
+                      else self._grp_pf)[si]
+                spl = self._espl[si]
+                nsc = scache
+                for g in range(ering.count):
+                    self._prefetch_sg(*self._stream_next[(si, g)])
+                    x, nsc = self._run_expert_group(
+                        fn, ering, spl, si, g, mode, x, nsc, pos, table,
+                        positions, slot, lora, active)
             new_stacks.append(nsc)
         return x, tuple(new_stacks)
 
@@ -738,7 +1046,7 @@ class EngineLoop:
         positions = pos[:, None] + jnp.arange(1, dtype=jnp.int32)[None]
         x, new_stacks = self._stream_stacks(
             "decode", x, cache, pos, cache.get("table"), positions, None,
-            lora)
+            lora, active=active)
         logits, npos = self._post_dec(self._head_params, x, pos,
                                       jnp.asarray(active))
         new_cache = dict(cache)
@@ -832,7 +1140,7 @@ class EngineLoop:
             self.geom.trash_page, jnp.int32)
         d = cfg.d_model
         outs = []
-        if self._wstreams:
+        if self.wpolicy.active:
             # streamed split step: one decode graph per stack (or per
             # streamed group shape) + one prefill graph per stack per
             # chunk size, plus the two small post graphs
@@ -1287,7 +1595,7 @@ class EngineLoop:
                 embeds = self.eng.embed(ids)
                 last_idx = (t - 1 - st["next"]
                             if st["next"] + c >= t else c - 1)
-                if self._wstreams:
+                if self.wpolicy.active:
                     logits1, self.cache = self._chunk_streamed(
                         embeds, slot, st["next"], last_idx,
                         self._row_lora(req))
@@ -1469,12 +1777,14 @@ class EngineLoop:
             if self.warmed:
                 self.eng.stats.recompiles_after_warmup = \
                     ev - self._warmup_graphs
-            if self._wstreams:
+            if self.wpolicy.active:
                 store = self.eng.weight_store
                 self.eng.stats.weight_group_hits = store.prefetch_hits
                 self.eng.stats.weight_group_misses = store.prefetch_misses
-                self.eng.stats.weight_stall_s = sum(
-                    r.stall_s for r in self._wstreams.values())
+                self.eng.stats.weight_stall_s = (
+                    sum(r.stall_s for r in self._wstreams.values())
+                    + sum(r.stall_s
+                          for r in self._expert_rings.values()))
                 # resident_bytes already counts the rings' slots
                 self.eng.stats.dram_weight_bytes = \
                     self.wpolicy.resident_bytes
@@ -1635,7 +1945,7 @@ class EngineLoop:
             wmask = np.zeros((self.max_slots,), bool)
             wmask[wave] = True
             am = jnp.asarray(wmask)
-            if self._wstreams:
+            if self.wpolicy.active:
                 logits_w, self.cache = self._decode_streamed(
                     embeds, wmask, self._slot_lora())
             else:
@@ -1727,7 +2037,8 @@ def build_engine(cfg: ModelConfig, key: Optional[jax.Array] = None,
                  flash_dir: Optional[str] = None,
                  backend: Optional[str] = None,
                  weight_dram_budget_bytes: Optional[int] = None,
-                 weight_ring_groups: int = 2) -> Engine:
+                 weight_ring_groups: int = 2,
+                 expert_streaming: bool = True) -> Engine:
     """Random-weights engine for examples/tests: quantized serving params
     built directly in the kernel-native packed layout + a bf16 embedding
     table exported to Flash (the paper's conversion flow).  ``backend``
@@ -1741,4 +2052,5 @@ def build_engine(cfg: ModelConfig, key: Optional[jax.Array] = None,
     return Engine(cfg, params, emb, max_seq=max_seq, flash_dir=flash_dir,
                   backend=backend,
                   weight_dram_budget_bytes=weight_dram_budget_bytes,
-                  weight_ring_groups=weight_ring_groups)
+                  weight_ring_groups=weight_ring_groups,
+                  expert_streaming=expert_streaming)

@@ -264,6 +264,15 @@ class EngineService:
                 "hit_rate": round(s.weight_stream_hit_rate, 6),
                 "stall_s": round(s.weight_stall_s, 6),
             })
+        if any(p.experts for p in pol.streamed):
+            # router-aware per-expert streaming (PR 9)
+            out.update({
+                "expert_stacks": sum(1 for p in pol.streamed if p.experts),
+                "expert_prefetch_hit_rate":
+                    round(s.expert_prefetch_hit_rate, 6),
+                "expert_bytes_saved_frac":
+                    round(s.expert_bytes_saved_frac, 6),
+            })
         return out
 
 

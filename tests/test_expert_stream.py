@@ -1,0 +1,207 @@
+"""PR 9 tentpole part 2: router-aware per-expert weight streaming.
+
+Acceptance: an expert-granular streamed MoE stack decodes BITWISE EQUAL
+(greedy) to the all-DRAM run and to whole-group streaming, with
+``recompiles_after_warmup == 0`` and ``expert_bytes_saved_frac > 0`` —
+the per-expert rings fetch only the shared slab plus the experts the
+router history predicts, and a cold expert (routed but not installed)
+falls back to an install + re-run of the same pure group graph instead
+of deadlocking or corrupting the step.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import hybrid_storage as HS
+from repro.models import transformer as T
+from repro.runtime import plan as RP
+from repro.serving import engine as E
+from repro.serving import sampling as SM
+from repro.serving.scheduler import Request
+
+CFG = registry.get("dbrx-132b@tiny-moe")
+GREEDY = SM.SamplingParams(temperature=0.0, max_new_tokens=8)
+
+
+def _zero_router(params):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: (jnp.zeros_like(l)
+                      if any(getattr(k, "key", None) == "router" for k in p)
+                      else l), params)
+
+
+def _nbytes(tree) -> int:
+    return sum(int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(tree))
+
+
+def _stream_budget() -> int:
+    """A weight budget that forces the MoE stack to stream: the resident
+    head plus a third of the stack (abstract params — no allocation)."""
+    params = T.init_params(CFG, mode="abstract", quantized=True, pack=True)
+    head = _nbytes(params["final_norm"]) + _nbytes(params["lm_head"])
+    stack = sum(_nbytes(s) for s in params["stacks"])
+    return head + stack // 3
+
+
+def _engine(tmp_path, budget, expert_streaming=True, sticky=False):
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    params = T.init_params(CFG, key=k1, quantized=True, pack=True)
+    if sticky:
+        # a zeroed router ties every logit; top-k then always picks the
+        # lowest expert ids — perfectly predictable routing
+        params = _zero_router(params)
+    emb = np.asarray(
+        jax.random.normal(k2, (CFG.padded_vocab_size, CFG.d_model)) * 0.02,
+        np.float32)
+    return E.Engine(CFG, params, emb, max_seq=64, flash_dir=str(tmp_path),
+                    weight_dram_budget_bytes=budget,
+                    expert_streaming=expert_streaming)
+
+
+def _trace(n=6, start=1):
+    return [Request(uid=i, prompt_tokens=list(range(start + i, start + i + 8)),
+                    max_new_tokens=8) for i in range(n)]
+
+
+def _run(eng, n=6):
+    loop = E.EngineLoop(eng, max_slots=4, prefill_chunk=16)
+    loop.warmup()
+    reqs = _trace(n)
+    for r in reqs:
+        r.sampling = GREEDY
+    loop.run(reqs)
+    return loop, [tuple(r.generated) for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# policy + registry + store
+# ---------------------------------------------------------------------------
+
+def test_policy_marks_expert_granular(tmp_path):
+    eng = _engine(tmp_path / "a", _stream_budget())
+    (spl,) = eng.weight_policy.streamed
+    assert spl.experts == CFG.num_experts
+    assert spl.expert_bytes > 0 and spl.shared_bytes > 0
+    # the expert tables dominate a MoE group's bytes
+    assert spl.experts * spl.expert_bytes > spl.shared_bytes
+    eng2 = _engine(tmp_path / "b", _stream_budget(), expert_streaming=False)
+    (spl2,) = eng2.weight_policy.streamed
+    assert spl2.experts == 0 and spl2.expert_bytes == 0
+
+
+def test_registry_tiny_moe_variant():
+    assert "tiny-moe" in registry.VARIANTS
+    assert CFG.num_experts == 8 and CFG.experts_per_tok == 2
+    (_patterns, count), = CFG.layer_plan()
+    assert count >= 6, "a streaming ring must be a strict stack subset"
+    with pytest.raises(KeyError):
+        registry.get("qwen2-7b@tiny-moe")   # dense model: no MoE layers
+
+
+def test_store_expert_blobs_coexist(tmp_path):
+    flash = HS.FlashStore(str(tmp_path), HS.FlashSpec(simulate=False))
+    store = HS.WeightGroupStore(flash)
+    shared = [np.arange(6, dtype=np.float32).reshape(1, 6)]
+    store.put_group(0, 0, shared)
+    for e in range(3):
+        store.put_expert_group(0, 0, e,
+                               [np.full((1, 1, 4), e, np.float32)])
+    np.testing.assert_array_equal(store.fetch_group(0, 0)[0], shared[0])
+    for e in range(3):
+        np.testing.assert_array_equal(store.fetch_expert(0, 0, e)[0],
+                                      np.full((1, 1, 4), e, np.float32))
+    assert store.expert_nbytes(0, 0, 1) == 16
+    assert store.stack_nbytes(0) == 24 + 3 * 16   # 2- and 3-tuple keys
+    store.prefetch_expert(0, 0, 2)
+    np.testing.assert_array_equal(store.fetch_expert(0, 0, 2)[0],
+                                  np.full((1, 1, 4), 2, np.float32))
+    store.close()
+
+
+def test_flash_read_view_zero_copy(tmp_path):
+    flash = HS.FlashStore(str(tmp_path), HS.FlashSpec(simulate=False))
+    arr = np.arange(32, dtype=np.float32)
+    flash.put("blob", arr)
+    before = flash.bytes_read
+    view = flash.read_view("blob")
+    assert isinstance(view, np.memmap)          # no host copy
+    np.testing.assert_array_equal(np.asarray(view), arr)
+    assert flash.bytes_read == before + arr.nbytes
+
+
+# ---------------------------------------------------------------------------
+# serving-path acceptance
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_expert_streamed_bitwise_equal_trace(tmp_path):
+    """24-request greedy trace: expert-streamed decode emits exactly the
+    all-DRAM tokens, never recompiles after warmup, and moves fewer Flash
+    bytes than the install-every-expert baseline."""
+    budget = _stream_budget()
+    eng_s = _engine(tmp_path / "stream", budget)
+    loop, toks_s = _run(eng_s, n=24)
+    assert loop._expert_rings, "the MoE stack must use the expert ring"
+    eng_d = _engine(tmp_path / "dram", None)
+    _, toks_d = _run(eng_d, n=24)
+    assert toks_s == toks_d
+    eng_g = _engine(tmp_path / "group", budget, expert_streaming=False)
+    loop_g, toks_g = _run(eng_g, n=24)
+    assert not loop_g._expert_rings and loop_g._wstreams
+    assert toks_s == toks_g
+    s = eng_s.stats
+    assert s.recompiles_after_warmup == 0
+    assert s.expert_prefetch_hits > 0
+    assert s.expert_bytes_saved_frac > 0, s.expert_bytes_saved_frac
+    assert s.expert_bytes_fetched < s.expert_bytes_baseline
+
+
+@pytest.mark.slow
+def test_sticky_routing_hit_rate(tmp_path):
+    """Perfectly predictable routing (zeroed router: top-k always picks
+    the lowest expert ids) — the last-two-visit union prediction converges
+    and the hit rate clears the CI gate's 0.8 with bytes saved close to
+    the unrouted-expert fraction."""
+    eng = _engine(tmp_path, _stream_budget(), sticky=True)
+    _loop, toks = _run(eng, n=8)
+    assert toks, "trace must decode"
+    s = eng.stats
+    assert s.expert_prefetch_hit_rate >= 0.8, s.expert_prefetch_hit_rate
+    # 2 of 8 experts routed; prediction starts at all-8 and narrows, so
+    # savings approach (but can't exceed) the 6/8 expert-byte fraction
+    assert s.expert_bytes_saved_frac > 0.3, s.expert_bytes_saved_frac
+    assert s.recompiles_after_warmup == 0
+
+
+@pytest.mark.slow
+def test_cold_expert_miss_reruns_without_deadlock(tmp_path):
+    """Emptying the router-history prediction mid-trace forces every
+    subsequent group visit to take the cold-miss path (install the actual
+    selection, re-run the group graph) — the loop must neither deadlock
+    nor diverge from the all-DRAM tokens, and never recompile."""
+    budget = _stream_budget()
+    eng = _engine(tmp_path / "cold", budget)
+    loop = E.EngineLoop(eng, max_slots=4, prefill_chunk=16)
+    loop.warmup()
+    reqs = _trace(6)
+    for r in reqs:
+        r.sampling = GREEDY
+        loop.submit(r)
+    for i in range(200):
+        if i == 3:   # after a few steps, poison the prediction
+            for k in loop._expert_pred:
+                loop._expert_pred[k] = set()
+        loop.step()
+        if not loop.scheduler.has_work():
+            break
+    assert not loop.scheduler.has_work(), "loop failed to drain"
+    toks = [tuple(r.generated) for r in reqs]
+    eng_d = _engine(tmp_path / "dram", None)
+    _, toks_d = _run(eng_d, n=6)
+    assert toks == toks_d
+    assert eng.stats.expert_prefetch_misses > 0
+    assert eng.stats.recompiles_after_warmup == 0

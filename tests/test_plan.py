@@ -81,17 +81,32 @@ def test_plan_repacks_per_layer_linears():
                                       np.asarray(o.data))
 
 
-def test_plan_keeps_expert_tables():
-    """MoE expert weights ([L, E, K, N]) keep the QuantizedTensor layout."""
+def test_plan_packs_expert_tables():
+    """MoE expert weights ([L, E, K, N]) repack to PackedExpertLinear (the
+    grouped kernel's per-expert padded layout) with an exact round-trip."""
     cfg = registry.reduced(registry.get("dbrx-132b"))
     params = T.init_params(cfg, key=jax.random.PRNGKey(1), quantized=True)
     plan = RP.build_plan(cfg, params)
     leaves = jax.tree.leaves(
         plan.params,
         is_leaf=lambda x: isinstance(x, (RP.PackedLinear, q.QuantizedTensor)))
-    experts = [x for x in leaves
-               if isinstance(x, q.QuantizedTensor) and x.data.ndim >= 4]
-    assert experts, "expert tables should stay unpacked"
+    experts = [x for x in leaves if isinstance(x, RP.PackedExpertLinear)]
+    assert experts, "expert tables should pack to PackedExpertLinear"
+    assert all(x.data.ndim == 4 for x in experts)   # [L, E, Kp, Np]
+    stale = [x for x in leaves
+             if isinstance(x, q.QuantizedTensor) and x.data.ndim >= 4]
+    assert not stale, "no expert table should stay on the raw QT layout"
+
+
+def test_pack_expert_linear_roundtrip():
+    w = jax.random.normal(jax.random.PRNGKey(3), (3, 100, 130), jnp.float32)
+    qt = q.quantize(w, 4)
+    pel = RP.pack_expert_linear(qt)
+    assert isinstance(pel, RP.PackedExpertLinear) and pel.experts == 3
+    rt = RP.unpack_expert_linear(pel)
+    np.testing.assert_array_equal(np.asarray(rt.data), np.asarray(qt.data))
+    np.testing.assert_array_equal(np.asarray(rt.scale), np.asarray(qt.scale))
+    np.testing.assert_array_equal(np.asarray(rt.zero), np.asarray(qt.zero))
 
 
 def test_matmul_plan_blocks_divide():
