@@ -19,6 +19,9 @@ Each emits ``name,us_per_call,derived`` CSV rows:
   bench_moe                  — grouped expert matmul kernel vs reference +
                                router-aware per-expert streaming: hit
                                rate, bytes saved, bitwise gate
+  bench_recurrent_prefill    — chunked vs whole-prompt prefill on a
+                               hybrid recurrent model: TTFT, peak
+                               transient bytes, bitwise gate
 
 Flags:
   --smoke        reduced configurations (CI benchmark-smoke job)
@@ -53,6 +56,7 @@ MODULES = [
     # perturb the throughput numbers above
     "benchmarks.bench_weight_stream",
     "benchmarks.bench_moe",
+    "benchmarks.bench_recurrent_prefill",
     "benchmarks.bench_kv_flash",
 ]
 
@@ -94,9 +98,9 @@ def main() -> None:
               f"({len(common.FALLBACKS)} dispatch fallbacks) to {args.json}",
               file=sys.stderr)
         # repo-root trajectory artifact: headline numbers per PR
-        bench_path = os.path.join(_ROOT, "BENCH_pr9.json")
+        bench_path = os.path.join(_ROOT, "BENCH_pr10.json")
         with open(bench_path, "w") as f:
-            json.dump({"suite": "mnn-llm-repro", "pr": 9,
+            json.dump({"suite": "mnn-llm-repro", "pr": 10,
                        "smoke": args.smoke, "host": host,
                        "summary": common.SUMMARY,
                        "fallbacks": common.FALLBACKS}, f, indent=2)

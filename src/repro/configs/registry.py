@@ -98,10 +98,24 @@ def tiny(cfg: ModelConfig) -> ModelConfig:
     subset (>= 6 groups), plus the big config's plan *shape* — MoE
     routing and GQA (kv heads < q heads) survive at smoke dimensions."""
     sections = (8, 12, 12) if cfg.rope_kind == "mrope" else cfg.mrope_sections
+    num_layers = max(6, 3 * len(cfg.period))
+    period = cfg.period
+    if cfg.name.startswith("jamba"):
+        # 3 full periods + a 2-layer tail (attn + mamba-moe): two stacks,
+        # BOTH holding recurrent patterns — the chunked-prefill bitwise
+        # acceptance runs need per-stack state threading exercised across
+        # stack boundaries, not just inside one scan
+        num_layers = 3 * len(cfg.period) + 2
+    if cfg.name.startswith("rwkv6"):
+        # double the 1-layer period and leave a 1-layer tail so the plan
+        # splits into two recurrent stacks ((rwkv, rwkv) x 3 + (rwkv,))
+        period = cfg.period * 2
+        num_layers = 7
     return dataclasses.replace(
         cfg,
         name=cfg.name + "-tiny",
-        num_layers=max(6, 3 * len(cfg.period)),
+        period=period,
+        num_layers=num_layers,
         encoder_layers=2 if cfg.encoder_layers else 0,
         d_model=256,
         num_heads=4,

@@ -277,10 +277,15 @@ def ring_view(pool: PagedLayerKV, pos: Array, batch: int
 
 def append_paged_prompt(pool: PagedLayerKV, k_new: Array, v_new: Array,
                         pos0: Array, table_row: Optional[Array] = None,
-                        slot: Optional[Array] = None) -> PagedLayerKV:
+                        slot: Optional[Array] = None,
+                        valid_len: Optional[Array] = None) -> PagedLayerKV:
     """Append a C-token prompt chunk for ONE row at positions
     [pos0, pos0 + C) — prompt KV goes straight into pages, no dense
-    transient.  k_new/v_new: [1, C, H, D].
+    transient.  k_new/v_new: [1, C, H, D].  ``valid_len``: real tokens in
+    a padded final chunk — windowed rings MUST clamp to it (a padded
+    position wraps onto the ring page holding a real earlier key; the
+    full-attention path needs no clamp because padded positions land in
+    the trash page or causally-dead offsets).
 
     Full-attention pools scatter through ``table_row`` [pages_per_row]
     (positions past the table land in the trash page, so a padded final
@@ -302,7 +307,8 @@ def append_paged_prompt(pool: PagedLayerKV, k_new: Array, v_new: Array,
     positions = pos0 + jnp.arange(C, dtype=jnp.int32)
     if pool.window:
         ppw = pool.ppw
-        cur = jnp.maximum(pos0 + C - 1, 0) // ps
+        vl = C if valid_len is None else jnp.asarray(valid_len, jnp.int32)
+        cur = jnp.maximum(pos0 + vl - 1, 0) // ps
         fields = {"k_q": (pool.k_q, kq[0]), "k_scale": (pool.k_scale, ks[0]),
                   "k_zero": (pool.k_zero, kz[0]), "v": (pool.v, v_cast[0])}
         out = {}
@@ -313,7 +319,7 @@ def append_paged_prompt(pool: PagedLayerKV, k_new: Array, v_new: Array,
                 # are masked by the ring view's logical-page bounds)
                 g = cur - jnp.mod(cur - r, ppw)
                 qpos = g * ps + jnp.arange(ps)
-                valid = (qpos >= pos0) & (qpos < pos0 + C)
+                valid = (qpos >= pos0) & (qpos < pos0 + vl)
                 idx = jnp.clip(qpos - pos0, 0, C - 1)
                 page = jnp.asarray(slot, jnp.int32) * ppw + r
                 vals = chunk[idx]
@@ -363,6 +369,62 @@ def paged_prefill_attention_ref(qh: Array, pool: PagedLayerKV, table: Array,
                             bits=pool.key_bits)
     return flash_attention(qh, k, v.astype(policy.compute_dtype),
                            causal=True, q_offset=jnp.asarray(pos0, jnp.int32),
+                           policy=policy)
+
+
+def paged_prefill_window_ref(qh: Array, pool: PagedLayerKV, slot: Array,
+                             pos0: Array, valid_len: Array, window: int,
+                             n_pages: int,
+                             policy: PrecisionPolicy = DEFAULT_POLICY
+                             ) -> Array:
+    """Chunk prefill attention over a windowed per-row ring (pure-JAX
+    reference) — the chunked counterpart of the roundtripped whole-prompt
+    path.  qh: [1, C, H, D] pre-scaled queries at absolute positions
+    [pos0, pos0 + C); ``valid_len``: real tokens in the (possibly padded)
+    chunk; the chunk's K/V must already be appended to the ring;
+    ``n_pages``: the row's logical page capacity (sizes the static
+    position-ordered view).
+
+    Scatters each live ring slot back to its *logical* page offset —
+    position p lands at view index p, exactly the dense layout — and runs
+    the SAME blockwise ``flash_attention`` the dense prefill path uses,
+    with the chunk's query offset.  Never-written and recycled logical
+    pages stay zero; every position a chunk query can reach is still in
+    the ring PROVIDED every chunk is at most one page (the ring
+    guarantees M >= window + page_size, so a <=page_size chunk never
+    recycles an in-window key; runtime/plan.prefill_chunk_schedule
+    enforces the cap), and all other view positions are causally dead or
+    out of window — exact no-ops to the online softmax.  Because the
+    ring quantizes per (position, head), the dequantized view holds the
+    same bytes however the prompt was partitioned, so any chunk
+    partition is bitwise-identical to the whole-prompt pass AND to the
+    dense reference's roundtripped-KV attention."""
+    from repro.models.attention import flash_attention   # lazy: they import us
+    ppw, ps = pool.ppw, pool.page_size
+    table = (jnp.asarray(slot, jnp.int32) * ppw + jnp.arange(ppw))[None]
+    kq, ks, kz, v = gather_pages(pool, table)            # [1, M, Hkv, ...]
+    pos0 = jnp.asarray(pos0, jnp.int32)
+    end = pos0 + jnp.asarray(valid_len, jnp.int32)
+    cur = jnp.maximum(end - 1, 0) // ps                  # newest logical page
+
+    def to_logical(ring):
+        """[1, M, ...] ring-lane order -> [1, n_pages*ps, ...] absolute
+        position order (zeros where no live page maps)."""
+        out = jnp.zeros((n_pages * ps,) + ring.shape[2:], ring.dtype)
+        for r in range(ppw):
+            g = cur - jnp.mod(cur - r, ppw)              # slot r's group
+            start = jnp.maximum(g, 0) * ps
+            prev = jax.lax.dynamic_slice_in_dim(out, start, ps, axis=0)
+            vals = jnp.where(g >= 0, ring[0, r * ps:(r + 1) * ps], prev)
+            out = jax.lax.dynamic_update_slice_in_dim(out, vals, start,
+                                                      axis=0)
+        return out[None]
+
+    k = kvc.dequantize_keys(to_logical(kq), to_logical(ks), to_logical(kz),
+                            policy.compute_dtype, bits=pool.key_bits)
+    return flash_attention(qh, k,
+                           to_logical(v).astype(policy.compute_dtype),
+                           causal=True, window=window, q_offset=pos0,
                            policy=policy)
 
 

@@ -281,8 +281,8 @@ def attention_prefill_paged(x: Array, p: dict, cfg: ModelConfig,
                             table_row: Array, slot: Array, positions: Array,
                             policy: PrecisionPolicy = DEFAULT_POLICY,
                             lora: 'Optional[dict]' = None,
-                            dispatch: Optional[D.Dispatcher] = None
-                            ) -> Tuple[Array, KP.PagedLayerKV]:
+                            dispatch: Optional[D.Dispatcher] = None,
+                            valid_len=None) -> Tuple[Array, KP.PagedLayerKV]:
     """One prompt chunk for decode row ``slot``, straight into the paged
     pool: quantize + append the chunk's K/V into pages (no dense
     transient), then attend the chunk's queries over the stored history
@@ -290,24 +290,27 @@ def attention_prefill_paged(x: Array, p: dict, cfg: ModelConfig,
 
     Full-attention layers go through the ``paged_prefill_attention``
     dispatch op (prefix pages adopted from other requests are read
-    exactly like pages this row wrote).  Windowed layers attend over the
-    roundtripped chunk directly — they always receive the whole prompt as
-    one chunk (the engine disables multi-chunk when windowed layers
-    exist), so no ring history is needed."""
+    exactly like pages this row wrote).  Windowed layers append into the
+    row's recycling ring (clamped to ``valid_len`` so a padded tail never
+    overwrites a live key) and attend over the ring via
+    ``paged_prefill_window_ref`` — earlier chunks' keys inside the window
+    are read back from the ring, so chunked windowed prefill matches the
+    whole-prompt pass bit for bit (see the ref's docstring for the
+    chunk <= page_size requirement the engine's schedule enforces)."""
     B, C = x.shape[:2]
     qh, kh, vh = _project_qkv(x, p, cfg, lora=lora, dispatch=dispatch)
     qh = L.positional(qh, cfg, positions)
     kh = L.positional(kh, cfg, positions)
     pos0 = positions[0, 0]
+    vl = C if valid_len is None else valid_len
     pool = KP.append_paged_prompt(pool, kh, vh, pos0,
-                                  table_row=table_row, slot=slot)
+                                  table_row=table_row, slot=slot,
+                                  valid_len=vl)
     qh = _prescale(qh, cfg.resolved_head_dim, policy)
     if pool.window:
-        k_rt, v_rt = kvc.roundtrip_kv(kh, vh, key_bits=pool.key_bits,
-                                      v_dtype=pool.v.dtype,
-                                      dtype=policy.compute_dtype)
-        out = D.resolve(dispatch).prefill_attention(
-            qh, k_rt, v_rt, causal=True, window=pat.window, policy=policy)
+        out = KP.paged_prefill_window_ref(qh, pool, slot, pos0, vl,
+                                          pat.window, table_row.shape[0],
+                                          policy)
     else:
         out = D.resolve(dispatch).paged_prefill_attention(
             qh, pool, table_row[None], pos0, policy)

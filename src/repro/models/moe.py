@@ -80,7 +80,8 @@ def _expert_matmul(xe: Array, wp: dict, qcfg: q.QuantConfig,
 
 
 def _dispatch_moe(xg: Array, p: dict, cfg: ModelConfig,
-                  dispatch: Optional[D.Dispatcher] = None
+                  dispatch: Optional[D.Dispatcher] = None,
+                  full_capacity: bool = False
                   ) -> Tuple[Array, Array, Array]:
     """Grouped dispatch over xg: [G, Tg, d] — G data-local groups.
 
@@ -104,8 +105,16 @@ def _dispatch_moe(xg: Array, p: dict, cfg: ModelConfig,
     topk_p, topk_i = jax.lax.top_k(probs, K)                     # [G, Tg, K]
     topk_p = topk_p / jnp.maximum(topk_p.sum(-1, keepdims=True), 1e-9)
 
-    C = int(max(1, round(Tg * K / E * cfg.moe_capacity_factor)))
-    C = min(C, Tg)
+    if full_capacity:
+        # Inference: capacity covers the worst case (an expert can receive
+        # at most Tg tokens — top-k ids are distinct per token), so no
+        # token ever drops.  A Tg-dependent capacity makes token-drop
+        # patterns depend on the prefill chunk length, which would break
+        # the engine's bitwise chunk-partition invariance.
+        C = Tg
+    else:
+        C = int(max(1, round(Tg * K / E * cfg.moe_capacity_factor)))
+        C = min(C, Tg)
     TK = Tg * K
     flat_e = topk_i.reshape(G, TK)                               # [G, TK]
     flat_t = jnp.broadcast_to(
@@ -208,8 +217,14 @@ def _num_groups(batch: int, mesh_data: int = 16) -> int:
 
 def apply_moe(x: Array, p: dict, cfg: ModelConfig, *,
               dispatch: Optional[D.Dispatcher] = None,
-              collect: Optional[dict] = None) -> Tuple[Array, Array]:
+              collect: Optional[dict] = None,
+              full_capacity: bool = False) -> Tuple[Array, Array]:
     """x: [B, T, d] -> (y, aux[2]).
+
+    ``full_capacity`` (inference) sizes expert capacity to the worst case
+    so no token drops — routing becomes independent of the chunk length,
+    which the chunked-prefill bitwise guarantee requires.  Training keeps
+    ``cfg.moe_capacity_factor`` drops.
 
     Tokens are regrouped into G = gcd(B, 16) data-local groups (the
     GShard-style 'G' dim, mapped onto the "data" mesh axis) and long
@@ -232,7 +247,7 @@ def apply_moe(x: Array, p: dict, cfg: ModelConfig, *,
         xc = xc.reshape(nc, G, bg * ct, d)
 
         def body(_, xi):
-            y, aux, ids = _dispatch_moe(xi, p, cfg, dispatch)
+            y, aux, ids = _dispatch_moe(xi, p, cfg, dispatch, full_capacity)
             return None, (y, aux, ids)
 
         _, (ys, auxs, idss) = jax.lax.scan(body, None, xc)
@@ -255,7 +270,7 @@ def apply_moe(x: Array, p: dict, cfg: ModelConfig, *,
                                          dispatch)
     else:
         y, aux, ids = _dispatch_moe(x.reshape(G, bg * T, d), p, cfg,
-                                    dispatch)
+                                    dispatch, full_capacity)
     if collect is not None:
         collect["moe_ids"] = ids.reshape(B, T, ids.shape[-1])
     return y.reshape(B, T, d), aux

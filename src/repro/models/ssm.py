@@ -5,14 +5,27 @@ Both are attention-free: no KV cache; the recurrent state is the "cache"
 §Arch-applicability — but weight quantization + Flash embedding apply).
 
 Mamba: selective SSM  h_t = exp(A dt_t) h_{t-1} + dt_t B_t x_t,
-y_t = C_t h_t + D x_t.  Prefill uses chunked ``associative_scan`` (parallel,
-FLOP-countable); decode is the O(1) single-step update.
+y_t = C_t h_t + D x_t.  Prefill uses a blockwise ``associative_scan``
+(parallel within fixed ``SCAN_BLOCK`` sub-blocks, sequential fold across
+them); decode is the same path at T==1.
 
 RWKV6: data-dependent per-channel decay w_t = exp(-exp(w0 + lora(x_t))):
     S_t = diag(w_t) S_{t-1} + k_t v_t^T
     y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
 Prefill scans over time in fp32 (numerically exact; the chunked-parallel
 form is a recorded perf iteration); decode is one state update.
+
+Chunk invariance: every forward here takes an entry state and returns the
+exit state, and is *bitwise chunk-invariant* — running a prompt as any
+partition of chunks whose boundaries fall on ``SCAN_BLOCK`` multiples
+produces the same outputs and exit state as one whole-prompt pass.  For
+mamba this requires that the associative-scan combine tree never spans a
+chunk boundary: the scan runs inside fixed ``SCAN_BLOCK``-sized sub-blocks
+(same tree shape regardless of T) and a sequential left-fold carries the
+state across blocks — the identical reduction order whether the blocks
+arrive in one call or many.  ``valid_len`` masks padded tail positions to
+exact scan identities (a=1, b=0 / a state-update no-op), so padded chunks
+leave the exit state bit-identical to an unpadded pass.
 """
 from __future__ import annotations
 
@@ -29,6 +42,14 @@ Array = jax.Array
 
 MAMBA_CHUNK = 512
 RWKV_CHUNK = 256
+
+# Fixed sub-block width of the mamba associative scan.  The combine tree
+# inside a block depends only on this constant (never on T), so any chunk
+# partition whose boundaries are SCAN_BLOCK-aligned reduces in the exact
+# same order as a whole-prompt pass — the root of the engine's bitwise
+# chunked-prefill guarantee.  runtime/plan.py aligns every prefill chunk
+# size to this (see ``prefill_chunk_schedule``).
+SCAN_BLOCK = 8
 
 
 # ===========================================================================
@@ -76,18 +97,32 @@ def abstract_mamba_state(batch: int, cfg: ModelConfig) -> dict:
 
 
 def _mamba_inner(xz: Array, p: dict, cfg: ModelConfig, conv_in: Array,
-                 ssm_in: Array) -> Tuple[Array, Array, Array]:
+                 ssm_in: Array, valid=None) -> Tuple[Array, Array, Array]:
     """Shared prefill/decode math over a [B, T, .] block.
 
     conv_in: [B, d_conv-1, d_inner] left context for the causal conv.
     ssm_in:  [B, d_inner, d_state] entry state.
+    valid:   number of real tokens (None => T).  Positions >= valid are
+             masked to exact scan identities so a padded chunk's exit
+             state matches an unpadded pass bit for bit; their y values
+             are garbage the callers never read.
     Returns (y [B,T,d_inner], conv_out, ssm_out)."""
     d_inner, dt_rank, d_state = mamba_dims(cfg)
     x, z = jnp.split(xz, 2, axis=-1)                        # [B,T,d_inner]
     B_, T = x.shape[:2]
     # causal depthwise conv along T
     xc = jnp.concatenate([conv_in.astype(x.dtype), x], axis=1)
-    conv_out = xc[:, -(cfg.mamba_d_conv - 1):] if cfg.mamba_d_conv > 1 else conv_in
+    if cfg.mamba_d_conv > 1:
+        if valid is None:
+            conv_out = xc[:, -(cfg.mamba_d_conv - 1):]
+        else:
+            # tokens [valid - (d_conv-1), valid) live at xc indices
+            # [valid, valid + d_conv - 1); valid == 0 yields conv_in
+            conv_out = jax.lax.dynamic_slice_in_dim(
+                xc, jnp.asarray(valid, jnp.int32), cfg.mamba_d_conv - 1,
+                axis=1)
+    else:
+        conv_out = conv_in
     w = p["conv_w"]                                          # [d_conv, d_inner]
     xconv = sum(xc[:, i:i + T] * w[i][None, None] for i in range(cfg.mamba_d_conv))
     xconv = jax.nn.silu((xconv + p["conv_b"][None, None]).astype(jnp.float32))
@@ -102,46 +137,93 @@ def _mamba_inner(xz: Array, p: dict, cfg: ModelConfig, conv_in: Array,
     # discretize: a_t = exp(A dt), b_t = dt * B_t * x_t
     a = jnp.exp(dt[..., None] * A[None, None])               # [B,T,d_inner,S]
     bx = dt[..., None] * Bm[:, :, None, :] * xconv[..., None]
-    # parallel scan over T:  h_t = a_t h_{t-1} + b_t
+    if valid is not None:
+        live = (jnp.arange(T) < valid)[None, :, None, None]
+        a = jnp.where(live, a, 1.0)
+        bx = jnp.where(live, bx, 0.0)
+    # blockwise parallel scan over T:  h_t = a_t h_{t-1} + b_t.  The
+    # associative scan runs inside fixed SCAN_BLOCK sub-blocks (combine
+    # tree independent of T) and a sequential fold carries the entry
+    # state across blocks — the reduction order is identical whether the
+    # blocks arrive in one call or split over many chunks, which is what
+    # makes chunked prefill bitwise-equal to a whole-prompt pass.
     def combine(e1, e2):
         a1, b1 = e1
         a2, b2 = e2
         return a2 * a1, a2 * b1 + b2
-    # fold the entry state into the first step
-    bx = bx.at[:, 0].add(a[:, 0] * ssm_in)
-    aa, hh = jax.lax.associative_scan(combine, (a, bx), axis=1)
-    ssm_out = hh[:, -1]                                      # [B,d_inner,S]
-    y = jnp.einsum("btds,bts->btd", hh, Cm,
+    nb = -(-T // SCAN_BLOCK)
+    Tp = nb * SCAN_BLOCK
+    if Tp != T:                      # pad with scan identities (a=1, b=0)
+        pad = ((0, 0), (0, Tp - T), (0, 0), (0, 0))
+        a = jnp.pad(a, pad, constant_values=1.0)
+        bx = jnp.pad(bx, pad)
+    a_b = a.reshape(B_, nb, SCAN_BLOCK, d_inner, d_state)
+    bx_b = bx.reshape(B_, nb, SCAN_BLOCK, d_inner, d_state)
+    aa, hh = jax.lax.associative_scan(combine, (a_b, bx_b), axis=2)
+
+    def fold(s, blk):                # s: [B,d,S] entry state of the block
+        aa_k, hh_k = blk             # [B,SCAN_BLOCK,d,S] within-block scan
+        hf = aa_k * s[:, None] + hh_k
+        return hf[:, -1], hf
+
+    _, hs = jax.lax.scan(fold, ssm_in,
+                         (jnp.moveaxis(aa, 1, 0), jnp.moveaxis(hh, 1, 0)))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B_, Tp, d_inner, d_state)[:, :T]
+    if valid is None:
+        ssm_out = h[:, T - 1]                                # [B,d_inner,S]
+    else:
+        # the exit state is h at the last *real* token — never a padded
+        # position, whose a=1/b=0 identity fold could still flip the sign
+        # of zero-valued state lanes
+        vi = jnp.asarray(valid, jnp.int32)
+        ssm_out = jnp.where(
+            vi > 0,
+            jax.lax.dynamic_index_in_dim(h, jnp.maximum(vi - 1, 0),
+                                         axis=1, keepdims=False),
+            ssm_in)
+    y = jnp.einsum("btds,bts->btd", h, Cm,
                    preferred_element_type=jnp.float32)
     y = y + p["D"][None, None] * xconv
     y = y * jax.nn.silu(z.astype(jnp.float32))
     return y.astype(jnp.bfloat16), conv_out, ssm_out
 
 
-def mamba_forward(x: Array, p: dict, cfg: ModelConfig, state: dict
-                  ) -> Tuple[Array, dict]:
-    """Full-sequence (train/prefill) forward, chunked over T."""
+def mamba_forward(x: Array, p: dict, cfg: ModelConfig, state: dict,
+                  valid_len=None) -> Tuple[Array, dict]:
+    """Full-sequence (train/prefill) forward, chunked over T.
+
+    ``state`` is the entry recurrent state; the returned dict is the exit
+    state, so chaining calls over a chunked prompt is bitwise-equal to
+    one whole-prompt call (chunk boundaries on SCAN_BLOCK multiples).
+    ``valid_len`` (None => T) masks padded tail positions out of the
+    state — their y rows are garbage the caller must ignore."""
     B, T, _ = x.shape
     xz = L.apply_linear(x, p["in_proj"], cfg.quant)
     if T > MAMBA_CHUNK and T % MAMBA_CHUNK == 0:
         nc = T // MAMBA_CHUNK
         xzc = xz.reshape(B, nc, MAMBA_CHUNK, -1)
+        vl = jnp.asarray(T if valid_len is None else valid_len, jnp.int32)
+        offs = jnp.arange(nc, dtype=jnp.int32) * MAMBA_CHUNK
 
         # checkpointed per chunk: the associative-scan internals are
         # recomputed in backward instead of saved for every chunk at once
         # (a single unchunked 4k-seq mamba backward costs ~50 GiB/chip)
         @jax.checkpoint
-        def body(carry, xt):
+        def body(carry, inp):
+            xt, off = inp
             conv_c, ssm_c = carry
-            y, conv_c, ssm_c = _mamba_inner(xt, p, cfg, conv_c, ssm_c)
+            y, conv_c, ssm_c = _mamba_inner(
+                xt, p, cfg, conv_c, ssm_c,
+                valid=jnp.clip(vl - off, 0, MAMBA_CHUNK))
             return (conv_c, ssm_c), y
 
         (conv_c, ssm_c), ys = jax.lax.scan(
             body, (state["conv"], state["ssm"]),
-            jnp.moveaxis(xzc, 1, 0))
+            (jnp.moveaxis(xzc, 1, 0), offs))
         y = jnp.moveaxis(ys, 0, 1).reshape(B, T, -1)
     else:
-        y, conv_c, ssm_c = _mamba_inner(xz, p, cfg, state["conv"], state["ssm"])
+        y, conv_c, ssm_c = _mamba_inner(xz, p, cfg, state["conv"],
+                                        state["ssm"], valid=valid_len)
     out = L.apply_linear(y, p["out_proj"], cfg.quant)
     return out, {"conv": conv_c, "ssm": ssm_c}
 
@@ -212,8 +294,21 @@ def _token_shift(x: Array, x_prev: Array) -> Array:
     return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
 
 
-def rwkv_time_mix(x: Array, p: dict, cfg: ModelConfig, state: dict
-                  ) -> Tuple[Array, dict]:
+def _shift_exit(x: Array, valid_len) -> Array:
+    """Exit token-shift state: the last *real* token's activations
+    (x[:, valid_len-1]; x[:, -1] when unpadded)."""
+    if valid_len is None:
+        return x[:, -1]
+    vi = jnp.maximum(jnp.asarray(valid_len, jnp.int32) - 1, 0)
+    return jax.lax.dynamic_index_in_dim(x, vi, axis=1, keepdims=False)
+
+
+def rwkv_time_mix(x: Array, p: dict, cfg: ModelConfig, state: dict,
+                  valid_len=None) -> Tuple[Array, dict]:
+    """``state`` in, exit state out — chaining chunked calls is bitwise
+    equal to one whole-prompt call (the wkv scan is sequential, so any
+    chunk boundary preserves the fold order; padded positions >= a
+    ``valid_len`` are exact state no-ops)."""
     B, T, d = x.shape
     H, dh = rwkv_dims(cfg)
     xs = _token_shift(x, state["x_tm"])
@@ -237,17 +332,22 @@ def rwkv_time_mix(x: Array, p: dict, cfg: ModelConfig, state: dict
     u = p["u"]                                                # [H,dh]
 
     def step(S, inp):
-        r_t, k_t, v_t, w_t = inp                              # [B,H,dh] each
+        r_t, k_t, v_t, w_t, l_t = inp                         # [B,H,dh] each
         kv = k_t[..., :, None] * v_t[..., None, :]            # [B,H,dh,dh]
         y = jnp.einsum("bhi,bhij->bhj", r_t,
                        S + u[None, :, :, None] * kv)
-        S = w_t[..., None] * S + kv
+        # padded steps (l_t False) leave S bit-identical — a masked
+        # arithmetic update (w=1, kv=0) could still flip zero signs
+        S = jnp.where(l_t, w_t[..., None] * S + kv, S)
         return S, y
 
+    live = jnp.ones((T,), bool) if valid_len is None \
+        else jnp.arange(T) < valid_len
     rs = jnp.moveaxis(r.astype(jnp.float32), 1, 0)
     ks = jnp.moveaxis(k.astype(jnp.float32), 1, 0)
     vs = jnp.moveaxis(v.astype(jnp.float32), 1, 0)
     ws = jnp.moveaxis(w, 1, 0)
+    ls = live.reshape(T, 1, 1, 1, 1)
     if T > RWKV_CHUNK and T % RWKV_CHUNK == 0:
         # chunked + per-chunk checkpoint: the scan's backward otherwise
         # saves the [B,H,dh,dh] state for every timestep (T x 16 MB/chip)
@@ -258,11 +358,11 @@ def rwkv_time_mix(x: Array, p: dict, cfg: ModelConfig, state: dict
             return jax.lax.scan(step, S, inp_chunk)
 
         chunked = tuple(x.reshape(nc, RWKV_CHUNK, *x.shape[1:])
-                        for x in (rs, ks, vs, ws))
+                        for x in (rs, ks, vs, ws, ls))
         S, ys = jax.lax.scan(chunk, state["wkv"], chunked)
         ys = ys.reshape(T, B, H, dh)
     else:
-        S, ys = jax.lax.scan(step, state["wkv"], (rs, ks, vs, ws))
+        S, ys = jax.lax.scan(step, state["wkv"], (rs, ks, vs, ws, ls))
     y = jnp.moveaxis(ys, 0, 1).reshape(B, T, d)               # [B,T,d]
     # per-head group norm, then gate
     y = y.reshape(B, T, H, dh)
@@ -272,13 +372,14 @@ def rwkv_time_mix(x: Array, p: dict, cfg: ModelConfig, state: dict
     y = y * jax.nn.silu(g.astype(jnp.float32)).astype(y.dtype)
     out = L.apply_linear(y, p["wo"], cfg.quant)
     new_state = dict(state)
-    new_state["x_tm"] = x[:, -1]
+    new_state["x_tm"] = _shift_exit(x, valid_len)
     new_state["wkv"] = S
     return out, new_state
 
 
-def rwkv_channel_mix(x: Array, p: dict, cfg: ModelConfig, state: dict
-                     ) -> Tuple[Array, dict]:
+def rwkv_channel_mix(x: Array, p: dict, cfg: ModelConfig, state: dict,
+                     valid_len=None) -> Tuple[Array, dict]:
+    """Entry/exit-state channel mix (see ``rwkv_time_mix``)."""
     xs = _token_shift(x, state["x_cm"])
     dx = xs - x
     mu = p["cm_mu"]
@@ -290,5 +391,5 @@ def rwkv_channel_mix(x: Array, p: dict, cfg: ModelConfig, state: dict
     r = L.apply_linear(xr, p["cm_r"], cfg.quant, out_dtype=jnp.float32)
     out = jax.nn.sigmoid(r).astype(kv.dtype) * kv
     new_state = dict(state)
-    new_state["x_cm"] = x[:, -1]
+    new_state["x_cm"] = _shift_exit(x, valid_len)
     return out, new_state

@@ -252,6 +252,73 @@ def free_slots(cache: dict, rows: Array) -> dict:
     return new
 
 
+def reset_row_recurrent(cache: dict, cfg: ModelConfig, slot: int) -> dict:
+    """Zero one row's recurrent (SSM/RWKV) state across every stack.
+
+    The engine calls this when a fresh request is admitted into a decode
+    slot so the first prefill chunk enters with the clean initial state —
+    state-passing chunked prefill then threads the carried state through
+    every later chunk.  Attention pools are untouched (page allocation and
+    per-row masks already isolate rows).  Leaves are [count, B, ...]."""
+    new_stacks = []
+    for si, (patterns, _count) in enumerate(cfg.layer_plan()):
+        row = []
+        for pi, pat in enumerate(patterns):
+            entry = cache["stacks"][si][pi]
+            if pat.kind == "attn":
+                row.append(entry)
+            else:
+                row.append(jax.tree.map(
+                    lambda a: a.at[:, slot].set(jnp.zeros((), a.dtype)),
+                    entry))
+        new_stacks.append(tuple(row))
+    out = dict(cache)
+    out["stacks"] = tuple(new_stacks)
+    return out
+
+
+def freeze_inactive_rows(cfg: ModelConfig, old_stacks, new_stacks,
+                         active: Array):
+    """Roll inactive rows' per-row sequence state back to its pre-step
+    value after a decode step.
+
+    Inactive rows (empty slots, rows mid-prefill under proactive staging)
+    still flow through the fixed-shape batch, but nothing of theirs may
+    advance: recurrent (SSM/RWKV) states are batch-row addressed and
+    windowed rings write pages derived from the frozen ``pos`` — both
+    would absorb garbage from the dummy row.  Full-attention pools are
+    already safe (inactive rows' page tables point at the trash page) and
+    pass through untouched, as do dense LayerKVCaches (per-row length
+    masks).  ``active``: [B] bool.  Returns the repaired stacks tuple."""
+    out = []
+    for si, (patterns, _count) in enumerate(cfg.layer_plan()):
+        row = []
+        for pi, pat in enumerate(patterns):
+            old, new = old_stacks[si][pi], new_stacks[si][pi]
+            if isinstance(new, KP.PagedLayerKV):
+                if new.window:
+                    # leaves [L, B*ppw, page, ...]: page p belongs to row
+                    # p // ppw — keep only active rows' ring writes
+                    pa = jnp.repeat(active, new.ppw)
+
+                    def sel(o, n, _pa=pa):
+                        m = _pa.reshape((1, -1) + (1,) * (n.ndim - 2))
+                        return jnp.where(m, n, o)
+                    row.append(jax.tree.map(sel, old, new))
+                else:
+                    row.append(new)
+            elif isinstance(new, kvc.LayerKVCache):
+                row.append(new)
+            else:
+                # SSM/RWKV state dict, leaves [count, B, ...]
+                def selb(o, n):
+                    m = active.reshape((1, -1) + (1,) * (n.ndim - 2))
+                    return jnp.where(m, n, o)
+                row.append(jax.tree.map(selb, old, new))
+        out.append(tuple(row))
+    return tuple(out)
+
+
 # ===========================================================================
 # Forward passes
 # ===========================================================================
@@ -298,14 +365,21 @@ def _put_row_state(state: Any, row: Any, slot: Array) -> Any:
 def _apply_pattern(x: Array, pp: dict, cfg: ModelConfig, pat: LayerPattern,
                    mode: str, positions, cache, cross_cache, pos, table,
                    ctx: StepCtx, slot=None,
-                   collect: Optional[dict] = None) -> Tuple[Array, Any, Array]:
+                   collect: Optional[dict] = None,
+                   valid_len=None) -> Tuple[Array, Any, Array]:
     """One layer. Returns (x, new_cache, moe_aux).  ``table``: the shared
     page table when the decode cache is paged (kv_pool), else None; in
     ``prefill_paged`` mode it is the single row's table and ``slot`` the
     decode row receiving the prompt chunk.  ``collect``: trace-time dict the
-    MoE layer stores its router top-k ids into (expert-streaming signal)."""
+    MoE layer stores its router top-k ids into (expert-streaming signal).
+    ``valid_len``: real-token count of a padded prefill chunk — recurrent
+    layers mask padded positions out of their carried state, windowed
+    attention clamps ring writes/reads to it."""
     aux = jnp.zeros((2,), jnp.float32)
     dsp = ctx.dispatch
+    # expert capacity at inference covers every routed token — token drops
+    # would make outputs depend on the prefill chunk partition
+    full_cap = mode != "train"
     h = L.rms_norm(x, pp["ln1"], cfg.rms_eps, dispatch=dsp)
     if pat.kind == "attn":
         if mode == "train":
@@ -319,7 +393,8 @@ def _apply_pattern(x: Array, pp: dict, cfg: ModelConfig, pat: LayerPattern,
         elif mode == "prefill_paged":
             att, new_cache = A.attention_prefill_paged(
                 h, pp["attn"], cfg, pat, cache, table, slot, positions,
-                ctx.policy, lora=ctx.lora, dispatch=dsp)
+                ctx.policy, lora=ctx.lora, dispatch=dsp,
+                valid_len=valid_len)
         elif isinstance(cache, KP.PagedLayerKV):
             att, new_cache = A.attention_decode_paged(
                 h, pp["attn"], cfg, pat, cache, table, pos, positions,
@@ -336,7 +411,7 @@ def _apply_pattern(x: Array, pp: dict, cfg: ModelConfig, pat: LayerPattern,
         h2 = L.rms_norm(x, pp["ln2"], cfg.rms_eps, dispatch=dsp)
         if pat.moe:
             y, aux = M.apply_moe(h2, pp["moe"], cfg, dispatch=dsp,
-                                 collect=collect)
+                                 collect=collect, full_capacity=full_cap)
         else:
             y = L.apply_ffn(h2, pp["ffn"], cfg, dispatch=dsp)
         x = x + y
@@ -346,19 +421,22 @@ def _apply_pattern(x: Array, pp: dict, cfg: ModelConfig, pat: LayerPattern,
             y, _ = S.mamba_forward(h, pp["mamba"], cfg, st)
             new_cache = cache          # None in train mode
         elif mode == "prefill_paged":
-            # one chunk == the whole prompt (the engine disables
-            # multi-chunk for SSM stacks), so the row starts from a fresh
-            # state — exactly the dense prefill's initial condition
+            # state-passing chunked prefill: the chunk enters with the
+            # row's carried state (zeroed by the engine at admission) and
+            # leaves its exit state behind — any chunk partition is
+            # bitwise-equal to one whole-prompt pass
             y, st1 = S.mamba_forward(h, pp["mamba"], cfg,
-                                     S.init_mamba_state(1, cfg))
+                                     _row_state(cache, slot),
+                                     valid_len=valid_len)
             new_cache = _put_row_state(cache, st1, slot)
         else:
-            y, new_cache = S.mamba_forward(h, pp["mamba"], cfg, cache)
+            y, new_cache = S.mamba_forward(h, pp["mamba"], cfg, cache,
+                                           valid_len=valid_len)
         x = x + y
         h2 = L.rms_norm(x, pp["ln2"], cfg.rms_eps, dispatch=dsp)
         if pat.moe:
             y2, aux = M.apply_moe(h2, pp["moe"], cfg, dispatch=dsp,
-                                  collect=collect)
+                                  collect=collect, full_capacity=full_cap)
         else:
             y2 = L.apply_ffn(h2, pp["ffn"], cfg, dispatch=dsp)
         x = x + y2
@@ -366,13 +444,14 @@ def _apply_pattern(x: Array, pp: dict, cfg: ModelConfig, pat: LayerPattern,
         if mode == "train":
             st = S.init_rwkv_state(x.shape[0], cfg)
         elif mode == "prefill_paged":
-            st = S.init_rwkv_state(1, cfg)     # whole prompt in one chunk
+            st = _row_state(cache, slot)       # carried chunk state
         else:
             st = cache
-        y, st = S.rwkv_time_mix(h, pp["tm"], cfg, st)
+        y, st = S.rwkv_time_mix(h, pp["tm"], cfg, st, valid_len=valid_len)
         x = x + y
         h2 = L.rms_norm(x, pp["ln2"], cfg.rms_eps, dispatch=dsp)
-        y2, st = S.rwkv_channel_mix(h2, pp["tm"], cfg, st)
+        y2, st = S.rwkv_channel_mix(h2, pp["tm"], cfg, st,
+                                    valid_len=valid_len)
         x = x + y2
         if mode == "train":
             new_cache = cache
@@ -387,8 +466,8 @@ def _apply_pattern(x: Array, pp: dict, cfg: ModelConfig, pat: LayerPattern,
 
 def run_stack(sp, cfg: ModelConfig, stack_idx: int, mode: str, x: Array,
               positions, scache, cross, pos, table, ctx: StepCtx,
-              slot=None, aux0: Optional[Array] = None
-              ) -> Tuple[Array, Any, Array]:
+              slot=None, aux0: Optional[Array] = None,
+              valid_len=None) -> Tuple[Array, Any, Array]:
     """Scan ONE stack's layer groups over its fully-resident stacked
     params ``sp`` ([count, ...] leaves).  Returns (x, new_scache, aux).
     ``aux0`` continues a running moe-aux accumulator across stacks (the
@@ -406,7 +485,7 @@ def run_stack(sp, cfg: ModelConfig, stack_idx: int, mode: str, x: Array,
             cr = None if crslice is None else crslice[pi]
             xx, nc, aux = _apply_pattern(
                 xx, pslice[pi], cfg, pat, mode, positions, cc, cr, pos,
-                table, ctx, slot=slot)
+                table, ctx, slot=slot, valid_len=valid_len)
             new_cs.append(nc)
             auxc = auxc + aux
         return (xx, auxc), tuple(new_cs)
@@ -422,8 +501,8 @@ def run_stack(sp, cfg: ModelConfig, stack_idx: int, mode: str, x: Array,
 def run_stack_group(gp, cfg: ModelConfig, stack_idx: int, mode: str,
                     x: Array, positions, scache, gidx, pos, table,
                     ctx: StepCtx, slot=None,
-                    collect: Optional[dict] = None
-                    ) -> Tuple[Array, Any, Array]:
+                    collect: Optional[dict] = None,
+                    valid_len=None) -> Tuple[Array, Any, Array]:
     """ONE layer group of one stack — the streamed execution mode.  ``gp``
     is the group's weight slice ([1, ...] leaves, installed in a DRAM ring
     slot by the engine's weight-streaming tier), NOT indexed from resident
@@ -454,7 +533,7 @@ def run_stack_group(gp, cfg: ModelConfig, stack_idx: int, mode: str,
         sub = None if collect is None else {}
         x, nc, a = _apply_pattern(x, pslice[pi], cfg, pat, mode, positions,
                                   cc, None, pos, table, ctx, slot=slot,
-                                  collect=sub)
+                                  collect=sub, valid_len=valid_len)
         if sub is not None and "moe_ids" in sub:
             ids_list.append(sub["moe_ids"])
         new_cs.append(nc)
@@ -472,9 +551,12 @@ def run_stack_group(gp, cfg: ModelConfig, stack_idx: int, mode: str,
 
 def _run_stacks(x: Array, params: dict, cfg: ModelConfig, mode: str,
                 positions, cache: Optional[dict], ctx: StepCtx,
-                slot=None) -> Tuple[Array, Optional[dict], Array]:
+                slot=None, valid_len=None
+                ) -> Tuple[Array, Optional[dict], Array]:
     """Scan every stack; returns (x, new_cache, moe_aux_sum).  ``slot``:
-    the decode row a ``prefill_paged`` chunk targets."""
+    the decode row a ``prefill_paged`` chunk targets.  ``valid_len``:
+    real-token count of a padded chunk (recurrent state / windowed ring
+    hygiene; see _apply_pattern)."""
     new_stacks = []
     aux_total = jnp.zeros((2,), jnp.float32)
     pos = None if cache is None else cache["pos"]
@@ -489,7 +571,7 @@ def _run_stacks(x: Array, params: dict, cfg: ModelConfig, mode: str,
             cross = cache["cross"][si]
         x, new_scache, aux_total = run_stack(
             sp, cfg, si, mode, x, positions, scache, cross, pos, table,
-            ctx, slot=slot, aux0=aux_total)
+            ctx, slot=slot, aux0=aux_total, valid_len=valid_len)
         new_stacks.append(new_scache)
     new_cache = None
     if cache is not None:
@@ -640,9 +722,10 @@ def prefill(params: dict, cfg: ModelConfig, embeds: Array, max_seq: int,
 
     valid_len (scalar int32): true prompt length when ``embeds`` is padded
     to a jit bucket — logits are taken at valid_len-1 and the cache position
-    is set to valid_len, so the padded tail stays masked.  Only valid for
-    causal full-cache models (padding would corrupt ring buffers / SSM
-    state).
+    is set to valid_len, so the padded tail stays masked.  Recurrent (SSM /
+    RWKV) states exclude the padded tail too.  Only windowed dense ring
+    caches still require an exact-length prompt (padding would wrap the
+    ring past real keys).
     """
     ctx = ctx or StepCtx(cfg)
     if lora is not None:
@@ -660,7 +743,8 @@ def prefill(params: dict, cfg: ModelConfig, embeds: Array, max_seq: int,
         enc_out = encode(params, cfg, src_embeds, spos, ctx)
         cache["cross"] = build_cross_caches(params, cfg, enc_out,
                                             dispatch=ctx.dispatch)
-    x, cache, _ = _run_stacks(x, params, cfg, "prefill", positions, cache, ctx)
+    x, cache, _ = _run_stacks(x, params, cfg, "prefill", positions, cache,
+                              ctx, valid_len=valid_len)
     if valid_len is None:
         cache["pos"] = jnp.asarray(T, jnp.int32)
         last = x[:, -1:]
@@ -682,10 +766,11 @@ def prefill_chunk_paged(params: dict, cfg: ModelConfig, embeds: Array,
     no scatter).  embeds: [1, C, d] at absolute positions [pos0, pos0+C);
     ``pos0`` > 0 either continues an earlier chunk or skips a prefix
     adopted from the page index.  ``last_idx``: chunk-local index of the
-    prompt's final token (its logits are returned; mid-prompt chunks just
-    ignore them).  The final chunk may be padded past the prompt — padded
-    keys land in causally-dead positions and padded queries' outputs are
-    never read.
+    chunk's final real token (its logits are returned; mid-prompt chunks
+    just ignore them).  The final chunk may be padded past the prompt —
+    padded keys land in causally-dead positions, padded queries' outputs
+    are never read, and recurrent (SSM/RWKV) states stop advancing at
+    ``last_idx`` so the carried chunk state is partition-invariant.
 
     ``slot``/``pos0``/``last_idx`` are traced: one compilation per chunk
     *size* serves every row, offset and allocation.  The engine advances
@@ -698,8 +783,9 @@ def prefill_chunk_paged(params: dict, cfg: ModelConfig, embeds: Array,
     assert B == 1, "prompt chunks are per-row"
     positions = (jnp.asarray(pos0, jnp.int32)
                  + jnp.arange(C, dtype=jnp.int32))[None]
+    vlen = jnp.asarray(last_idx, jnp.int32) + 1
     x, cache, _ = _run_stacks(x, params, cfg, "prefill_paged", positions,
-                              cache, ctx, slot=slot)
+                              cache, ctx, slot=slot, valid_len=vlen)
     last = jax.lax.dynamic_slice_in_dim(x, jnp.asarray(last_idx, jnp.int32),
                                         1, axis=1)
     logits = _logits(last, params, cfg, ctx.dispatch)[:, 0]
@@ -763,10 +849,11 @@ def decode_step(params: dict, cfg: ModelConfig, embeds: Array, cache: dict,
     tables + per-request adapter ids (C7).
 
     With a per-row cache (``pos`` of shape [B]) each row decodes at its own
-    offset — continuous batching.  ``active`` ([B] bool) freezes the
-    positions of empty slots: their rows still flow through the batch (cheap
-    on a fixed-shape step) but write only to masked scratch space and never
-    advance."""
+    offset — continuous batching.  ``active`` ([B] bool) freezes inactive
+    slots entirely: their rows still flow through the batch (cheap on a
+    fixed-shape step) but their positions, recurrent states and windowed
+    ring pages are rolled back, so a slot mid-prefill keeps its carried
+    chunk state intact while co-resident rows decode."""
     ctx = ctx or StepCtx(cfg)
     if lora is not None:
         ctx = dataclasses.replace(ctx, lora=lora)
@@ -778,9 +865,12 @@ def decode_step(params: dict, cfg: ModelConfig, embeds: Array, cache: dict,
             positions = pos[:, None] + jnp.arange(T)[None]
         else:
             positions = jnp.broadcast_to(pos[None, None], (B, T))
+    old_stacks = cache["stacks"]
     x, cache, _ = _run_stacks(x, params, cfg, "decode", positions, cache, ctx)
     if active is not None:
         cache["pos"] = jnp.where(active, pos + T, pos)
+        cache["stacks"] = freeze_inactive_rows(cfg, old_stacks,
+                                               cache["stacks"], active)
     else:
         cache["pos"] = pos + T
     logits = _logits(x, params, cfg, ctx.dispatch)[:, -1]

@@ -472,6 +472,35 @@ def kv_page_size(max_seq: int) -> int:
     return ps
 
 
+def prefill_chunk_schedule(cfg, prefill_chunk: int, page_size: int) -> int:
+    """Resolve the engine's prefill chunk cap for this stack geometry.
+
+    State-passing chunked prefill is bitwise partition-invariant only when
+    chunk boundaries respect two alignments:
+
+    * recurrent (SSM) scans block their associative scan in fixed
+      ``ssm.SCAN_BLOCK``-token sub-blocks, so the cap is floored to a
+      multiple of 8 (kept equal to ``models.ssm.SCAN_BLOCK`` — asserted
+      in tests rather than imported, to keep runtime/ model-free);
+    * windowed-attention rings recycle pages, so a chunk may not exceed
+      one page (``kv_pool.paged_prefill_window_ref`` relies on
+      M >= window + page_size) — those stacks round the cap down to the
+      largest power of two <= min(cap, page_size).
+
+    Every geometry — full-attention, windowed, recurrent, hybrid — chunks
+    through this one schedule; there is no whole-prompt special case."""
+    cap = max(8, (int(prefill_chunk) // 8) * 8)
+    windowed = any(pat.kind == "attn" and pat.window > 0
+                   for pats, _count in cfg.layer_plan() for pat in pats)
+    if windowed:
+        assert page_size >= 8, "windowed chunking needs >= one 8-aligned page"
+        b = 8
+        while b * 2 <= min(cap, page_size):
+            b *= 2
+        cap = b
+    return cap
+
+
 def kv_page_bytes(cfg, page_size: int) -> int:
     """DRAM bytes one pool page costs across every full-attention layer
     (int8/int4 keys + two fp32 scale planes + fp8/bf16 values).  Windowed

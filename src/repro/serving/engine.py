@@ -146,6 +146,12 @@ class EngineStats:
     expert_prefetch_misses: int = 0
     expert_bytes_fetched: int = 0
     expert_bytes_baseline: int = 0
+    # feature gates the loop resolved OFF at construction: feature name
+    # -> human-readable reason.  Empty means every requested feature is
+    # live.  Surfaced verbatim through /v1/stats so a deployment can see
+    # why a knob it set is not in effect instead of silently losing it.
+    disabled_features: Dict[str, str] = dataclasses.field(
+        default_factory=dict)
     # continuous batching: per-request TTFT/TPOT records
     requests: List[RequestStats] = dataclasses.field(default_factory=list)
 
@@ -671,20 +677,17 @@ class EngineLoop:
         self.eng = engine
         self.cfg = cfg
         self.max_slots = max_slots
-        # multi-chunk prefill (and the pow2 chunk grid with its padded
-        # final chunk) is only sound for full-cache attention stacks:
-        # ring pages could recycle history a later chunk still needs, and
-        # SSM prefill scans are not chunk-invariant.  Other stacks take
-        # the same paged path with one exact whole-prompt chunk.
-        self._uniform = all(pat.kind == "attn" and pat.window == 0
-                            for pats, _ in cfg.layer_plan() for pat in pats)
-        # proactive spill runs the decode in staging waves; recurrent
-        # (SSM/RWKV) state would advance once per wave, so those stacks
-        # keep the preempt-only spill tier (windowed ring appends are
-        # last-write-wins and masked, so attention-only stacks are safe)
-        self.proactive = proactive_spill and all(
-            pat.kind == "attn"
-            for pats, _ in cfg.layer_plan() for pat in pats)
+        # prefix sharing adopts whole KV pages by token hash — only
+        # meaningful when every layer keeps full-cache attention (windowed
+        # rings recycle pages and recurrent stacks carry state outside the
+        # pool, so an adopted page would not reproduce the row's state)
+        self._full_attn = all(pat.kind == "attn" and pat.window == 0
+                              for pats, _ in cfg.layer_plan()
+                              for pat in pats)
+        # proactive spill runs the decode in staging waves; inactive rows'
+        # recurrent state and windowed ring pages are frozen per wave
+        # (freeze_inactive_rows), so every stack mix takes this tier
+        self.proactive = proactive_spill
         self.geom = engine.plan.kv_pool_geometry(
             cfg, engine.max_seq, max_slots,
             dram_budget_bytes=dram_budget_bytes,
@@ -692,13 +695,18 @@ class EngineLoop:
         self.spill_policy = engine.plan.kv_spill_policy(
             cfg, self.geom, max_slots,
             flash_budget_bytes=flash_budget_bytes)
-        self.prefill_chunk = prefill_chunk if self._uniform else None
+        # chunked prefill runs for EVERY stack mix: recurrent stacks pass
+        # entry/exit state between chunks (chunk-invariant scans) and
+        # windowed rings bound the chunk to one page, so the schedule only
+        # aligns the cap — never collapses to whole-prompt
+        self.prefill_chunk = RP.prefill_chunk_schedule(
+            cfg, prefill_chunk, self.geom.page_size)
         self.prefill_token_budget = (prefill_token_budget
                                      if prefill_token_budget is not None
                                      else max(prefill_chunk, 64))
         self.pool = KP.KVPoolManager(
             self.geom, max_slots,
-            prefix_sharing=prefix_sharing and self._uniform)
+            prefix_sharing=prefix_sharing and self._full_attn)
         self.spill = HS.PageSpillStore(engine.flash)
         self.scheduler = ContinuousScheduler(
             max_slots, engine.max_seq, token_budget=token_budget,
@@ -746,15 +754,15 @@ class EngineLoop:
         # batch-size bucketing (flashinfer-style pre-planned step graphs):
         # the plan derives the ladder; dispatch gathers the active slots
         # into the smallest covering bucket so low-concurrency decode runs
-        # at bucket shape, not max_slots.  Gated like multi-chunk prefill
-        # on uniform full-attention stacks (windowed rings and SSM states
-        # are batch-row addressed — a gathered row order would read the
-        # wrong state) and additionally on MoE-free ones (expert capacity
-        # couples tokens across the batch, so a bucketed MoE step would
-        # not be bitwise-equal to the full-batch step).
+        # at bucket shape, not max_slots.  Gated on full-attention stacks
+        # (windowed rings and SSM states are batch-row addressed — a
+        # gathered row order would read the wrong state; follow-on: route
+        # ring/SSM rows through their true slot ids) and on MoE-free ones
+        # (expert capacity couples tokens across the batch, so a bucketed
+        # MoE step would not be bitwise-equal to the full-batch step).
         no_moe = not any(pat.moe for pats, _ in cfg.layer_plan()
                          for pat in pats)
-        self._bucketed = (bucketing and self._uniform and no_moe
+        self._bucketed = (bucketing and self._full_attn and no_moe
                           and max_slots > 1)
         # --- weight streaming (PR 8) -----------------------------------
         # When the plan streams stacks, the monolithic whole-model step
@@ -846,6 +854,29 @@ class EngineLoop:
             self._prefetch_sg(*self._stream_seq[0])
         self.buckets = engine.plan.decode_buckets(
             max_slots, uniform=self._bucketed)
+        # every gate that silently narrowed a requested feature records
+        # itself here (name -> reason); mirrored into EngineStats so
+        # /v1/stats shows WHY a knob is not in effect
+        self.disabled_features: Dict[str, str] = {}
+        if prefix_sharing and not self._full_attn:
+            self.disabled_features["prefix_sharing"] = (
+                "windowed/recurrent stacks: an adopted KV page cannot "
+                "reproduce ring contents or recurrent state")
+        if bucketing and not self._bucketed:
+            if self.wpolicy.active:
+                reason = ("weight streaming: the split step runs at "
+                          "max_slots shape only")
+            elif not self._full_attn:
+                reason = ("windowed/recurrent stacks: a gathered row "
+                          "order would read the wrong batch-addressed "
+                          "ring/recurrent state")
+            elif not no_moe:
+                reason = ("MoE: expert capacity couples tokens across "
+                          "the batch")
+            else:
+                reason = "max_slots == 1: nothing to bucket"
+            self.disabled_features["decode_bucketing"] = reason
+        engine.stats.disabled_features = dict(self.disabled_features)
         self._decode_b = jax.jit(
             functools.partial(self._decode_bucket_impl, cfg, engine._ctx))
         # warmup() pre-traces every bucket/chunk graph it can need; the
@@ -881,26 +912,27 @@ class EngineLoop:
     # --- weight-streamed split step (PR 8) ---------------------------------
     @staticmethod
     def _stack_impl(cfg, ctx, si, mode, sp, x, scache, pos, table,
-                    positions, slot, lora):
+                    positions, slot, lora, vlen):
         if lora is not None:
             ctx = dataclasses.replace(ctx, lora=lora)
         x, nsc, _ = T.run_stack(sp, cfg, si, mode, x, positions, scache,
-                                None, pos, table, ctx, slot=slot)
+                                None, pos, table, ctx, slot=slot,
+                                valid_len=vlen)
         return x, nsc
 
     @staticmethod
     def _group_impl(cfg, ctx, si, mode, gp, x, scache, gidx, pos, table,
-                    positions, slot, lora):
+                    positions, slot, lora, vlen):
         if lora is not None:
             ctx = dataclasses.replace(ctx, lora=lora)
         x, nsc, _ = T.run_stack_group(gp, cfg, si, mode, x, positions,
                                       scache, gidx, pos, table, ctx,
-                                      slot=slot)
+                                      slot=slot, valid_len=vlen)
         return x, nsc
 
     @staticmethod
     def _group_moe_impl(cfg, ctx, si, mode, gp, x, scache, gidx, pos,
-                        table, positions, slot, lora):
+                        table, positions, slot, lora, vlen):
         """Like ``_group_impl`` but also returns the group's router top-k
         expert ids ``[n_moe, B, T, K]`` — the host reads them to track
         which experts this step actually needed (pure function of the
@@ -911,7 +943,8 @@ class EngineLoop:
         collect: dict = {}
         x, nsc, _ = T.run_stack_group(gp, cfg, si, mode, x, positions,
                                       scache, gidx, pos, table, ctx,
-                                      slot=slot, collect=collect)
+                                      slot=slot, collect=collect,
+                                      valid_len=vlen)
         return x, nsc, collect["moe_ids"]
 
     @staticmethod
@@ -936,7 +969,8 @@ class EngineLoop:
         self._expert_rings[si].prefetch(g, self._expert_pred[(si, g)])
 
     def _run_expert_group(self, fn, ering, spl, si, g, mode, x, scache,
-                          pos, table, positions, slot, lora, active):
+                          pos, table, positions, slot, lora, vlen,
+                          active):
         """One expert-granular group: install the shared slab + the
         router-history-predicted experts, run the group, then compare the
         router's ACTUAL selection against what was installed.  A cold
@@ -951,14 +985,14 @@ class EngineLoop:
         if mode != "decode":
             ering.ensure(g, range(spl.experts))
             nx, nsc, _ = fn(ering.obtain(g), x, scache, gi, pos, table,
-                            positions, slot, lora)
+                            positions, slot, lora, vlen)
             return nx, nsc
         stats = self.eng.stats
         pred = self._expert_pred[(si, g)]
         n_new, shared_new = ering.ensure(g, pred)
         installed = ering.installed(g)
         nx, nsc, ids = fn(ering.obtain(g), x, scache, gi, pos, table,
-                          positions, slot, lora)
+                          positions, slot, lora, vlen)
         act = None if active is None else np.asarray(active, bool)
         if act is None or not act.any():
             # warmup / all-masked step: nothing the router chose is real
@@ -979,7 +1013,7 @@ class EngineLoop:
             ne2, sn2 = ering.ensure(g, missing)
             n_new += ne2
             nx, nsc, ids = fn(ering.obtain(g), x, scache, gi, pos, table,
-                              positions, slot, lora)
+                              positions, slot, lora, vlen)
             actual = {int(e) for e in np.unique(np.asarray(ids)[:, act])}
         fetched = ((spl.shared_bytes if shared_new else 0)
                    + n_new * spl.expert_bytes)
@@ -995,7 +1029,7 @@ class EngineLoop:
         return nx, nsc
 
     def _stream_stacks(self, mode, x, cache, pos, table, positions, slot,
-                       lora, active=None):
+                       lora, vlen=None, active=None):
         """Run every stack for one step in the split streamed mode —
         resident stacks scan, streamed stacks run group-by-group out of
         their DRAM ring, prefetching the chain successor before each
@@ -1012,7 +1046,7 @@ class EngineLoop:
                 fn = (self._stack_dec if mode == "decode"
                       else self._stack_pf)[si]
                 x, nsc = fn(eng.params["stacks"][si], x, scache, pos,
-                            table, positions, slot, lora)
+                            table, positions, slot, lora, vlen)
             elif ring is not None:
                 fn = (self._grp_dec if mode == "decode"
                       else self._grp_pf)[si]
@@ -1021,7 +1055,7 @@ class EngineLoop:
                     self._prefetch_sg(*self._stream_next[(si, g)])
                     gp = ring.obtain(g)
                     x, nsc = fn(gp, x, nsc, jnp.asarray(g, jnp.int32),
-                                pos, table, positions, slot, lora)
+                                pos, table, positions, slot, lora, vlen)
             else:
                 fn = (self._grp_dec if mode == "decode"
                       else self._grp_pf)[si]
@@ -1031,7 +1065,7 @@ class EngineLoop:
                     self._prefetch_sg(*self._stream_next[(si, g)])
                     x, nsc = self._run_expert_group(
                         fn, ering, spl, si, g, mode, x, nsc, pos, table,
-                        positions, slot, lora, active)
+                        positions, slot, lora, vlen, active)
             new_stacks.append(nsc)
         return x, tuple(new_stacks)
 
@@ -1047,6 +1081,12 @@ class EngineLoop:
         x, new_stacks = self._stream_stacks(
             "decode", x, cache, pos, cache.get("table"), positions, None,
             lora, active=active)
+        # inactive rows (mid-prefill neighbours, staged-out wave rows)
+        # must not have their recurrent state advanced or their windowed
+        # ring pages appended to by this step's ride-along lanes
+        new_stacks = T.freeze_inactive_rows(self.cfg, cache["stacks"],
+                                            new_stacks,
+                                            jnp.asarray(active))
         logits, npos = self._post_dec(self._head_params, x, pos,
                                       jnp.asarray(active))
         new_cache = dict(cache)
@@ -1066,9 +1106,10 @@ class EngineLoop:
                      + jnp.arange(C, dtype=jnp.int32))[None]
         slot_t = jnp.asarray(slot, jnp.int32)
         table = cache["table"][slot_t]
+        vlen = jnp.asarray(last_idx, jnp.int32) + 1
         x, new_stacks = self._stream_stacks(
             "prefill_paged", x, cache, cache["pos"], table, positions,
-            slot_t, lora)
+            slot_t, lora, vlen=vlen)
         logits = self._post_pf(self._head_params, x,
                                jnp.asarray(last_idx, jnp.int32))
         new_cache = dict(cache)
@@ -1079,10 +1120,10 @@ class EngineLoop:
     def _next_chunk(self, remaining: int) -> int:
         """Chunk-size schedule: full ``prefill_chunk`` slabs, then one
         pow2 final chunk (padded; min 8) — one jit compilation per size.
-        Non-uniform stacks take the whole prompt as one exact chunk."""
+        Every stack mix chunks: recurrent stacks hand their entry/exit
+        state between chunks, so the schedule never needs a whole-prompt
+        special case."""
         cap = self.prefill_chunk
-        if cap is None:
-            return remaining
         if remaining >= cap:
             return cap
         c = 8
@@ -1093,10 +1134,7 @@ class EngineLoop:
     def _chunk_sizes(self) -> tuple:
         """Every chunk size ``_next_chunk`` can emit (full slabs + the
         pow2 final-chunk grid) — the prefill graphs warmup() pre-traces,
-        one compilation per size.  Empty for non-uniform stacks: their
-        single exact whole-prompt chunk has no enumerable size."""
-        if self.prefill_chunk is None:
-            return ()
+        one compilation per size."""
         return tuple(sorted({self._next_chunk(r)
                              for r in range(1, self.prefill_chunk + 1)}))
 
@@ -1288,9 +1326,15 @@ class EngineLoop:
         hold the slot one step to replay a pending token through decode."""
         n_kv = rec["n_kv"]
         flash_idxs = rec["flash_idxs"]
-        ok = self.pool.alloc_row(slot, n_kv, flash_idxs=flash_idxs)
+        # a mid-prefill victim resumes chunking, so the row needs pages
+        # for the WHOLE prompt again (further chunks write past the
+        # snapshot); only the first pages_for(n_kv) get bytes restored
+        pf = rec.get("prefill")
+        alloc_tokens = pf["t"] if pf is not None else n_kv
+        ok = self.pool.alloc_row(slot, alloc_tokens, flash_idxs=flash_idxs)
         while not ok and self._spill_one_cold(exclude={slot}):
-            ok = self.pool.alloc_row(slot, n_kv, flash_idxs=flash_idxs)
+            ok = self.pool.alloc_row(slot, alloc_tokens,
+                                     flash_idxs=flash_idxs)
         assert ok, "admission checked the pages were free/spillable"
         req.spilled_flash_pages = 0
         self.pool.spilled_pages -= self.pool.pages_for(n_kv)
@@ -1332,12 +1376,21 @@ class EngineLoop:
                 gi += 1
         self.cache = dict(self.cache,
                           stacks=tuple(tuple(r) for r in new_stacks))
-        self.cache["pos"] = self.cache["pos"].at[slot].set(n_kv)
-        self.pool.row_pos[slot] = n_kv
         # the row snapshot is consumed; page-granular cold blobs stay on
         # Flash (the row's Flash-resident pages stage on demand)
         self.spill.drop_groups(req.uid, groups)
         self.eng.stats.restored_pages += len(rec["dram_idxs"])
+        if pf is not None:
+            # resume chunked prefill from the last chunk boundary: the
+            # restored recurrent state / KV pages carry every chunk
+            # already run, and — exactly like a fresh admission — pos and
+            # row_pos stay 0 until the whole prompt is in
+            req.resume_prefill = False
+            self._prefilling[slot] = {"req": req, "tokens": pf["tokens"],
+                                      "t": pf["t"], "next": n_kv}
+            return
+        self.cache["pos"] = self.cache["pos"].at[slot].set(n_kv)
+        self.pool.row_pos[slot] = n_kv
         if rec["pending"]:
             self._hold.add(slot)
         else:
@@ -1550,6 +1603,10 @@ class EngineLoop:
                                      token_ids=toks if sharing else None,
                                      salt=req.adapter or "")
         assert ok, "admission checked the pages were free/spillable"
+        # state-passing chunked prefill reads the row's recurrent state at
+        # chunk 0 — a fresh prompt must enter with the clean initial state,
+        # not the previous occupant's exit state
+        self.cache = T.reset_row_recurrent(self.cache, self.cfg, slot)
         shared = int(self.pool.row_shared[slot])
         self.eng.stats.shared_prompt_tokens += shared
         # prompt KV goes straight into the allocated pages, chunk by
@@ -1587,9 +1644,15 @@ class EngineLoop:
                     break
                 st = self._prefilling[slot]
                 req, toks, t = st["req"], st["tokens"], st["t"]
-                self._prefill_rr = slot + 1
                 c = self._next_chunk(t - st["next"])
                 valid = min(c, t - st["next"])
+                if ran and valid > budget:
+                    # hard per-step budget: only the step's FIRST chunk
+                    # may overshoot (so a budget set below one chunk
+                    # still guarantees progress); every later chunk must
+                    # fit what is left
+                    continue
+                self._prefill_rr = slot + 1
                 ids = np.zeros((1, c), np.int64)
                 ids[0, :valid] = np.asarray(toks[st["next"]:st["next"] + valid])
                 embeds = self.eng.embed(ids)
@@ -1624,20 +1687,58 @@ class EngineLoop:
             jax.block_until_ready(self.logits)
             self.eng.stats.prefill_s += time.perf_counter() - t0
 
-    def _restart_prefilling_row(self, victim: Request) -> None:
-        """Evict a mid-prefill row under page pressure: free its pages and
-        requeue the request (no spill — a partial prompt is cheaper to
-        recompute than to round-trip through Flash).  The adoption stats
-        recorded at admission are retracted so a restart never inflates
-        the prefix-cache numbers."""
+    def _spill_prefilling_row(self, victim: Request) -> None:
+        """Evict a mid-prefill row under page pressure.  A row with at
+        least one finished chunk spills its written pages AND its
+        recurrent chunk-boundary state (SSM/conv/shift/wkv leaves ride
+        the same spill record as windowed ring slices) — on re-admission
+        it resumes from the last chunk boundary, bitwise-identical to an
+        uninterrupted prefill.  A row with no finished chunk just frees
+        and requeues: there is nothing worth round-tripping, and the
+        adoption stats recorded at admission are retracted so the restart
+        never inflates the prefix-cache numbers."""
         vslot = victim.slot
         st = self._prefilling[vslot]
-        self.eng.stats.shared_prompt_tokens -= int(self.pool.row_shared[vslot])
-        self.pool.retract_prompt_stats(vslot, st["t"])
+        done = st["next"]
+        if done <= 0:
+            self.eng.stats.shared_prompt_tokens -= int(
+                self.pool.row_shared[vslot])
+            self.pool.retract_prompt_stats(vslot, st["t"])
+            self.scheduler.evict(victim)
+            del self._prefilling[vslot]
+            self.pool.free_row(vslot)
+            self.cache = T.free_slots(self.cache,
+                                      jnp.asarray([vslot], jnp.int32))
+            return
+        n_pages = self.pool.pages_for(done)
+        held = self.pool.row_pages[vslot]
+        dram_idxs = list(range(n_pages))
+        assert all(held[i] >= 0 for i in dram_idxs), \
+            "prefilling rows are excluded from the proactive spill tier"
+        phys = np.asarray([held[i] for i in dram_idxs], np.int64)
+        groups = []
+        for gi, (group, _leaf, arrays) in enumerate(
+                self._row_groups(vslot, phys)):
+            self.spill.put(victim.uid, group, arrays,
+                           pages=n_pages if gi == 0 else 0)
+            groups.append(group)
+        self._spilled[victim.uid] = {
+            "n_kv": done, "pending": False, "groups": groups,
+            "dram_idxs": dram_idxs, "flash_idxs": [], "logits": None,
+            "prefill": {"t": st["t"], "tokens": st["tokens"]}}
+        # admission must charge the resume the full prompt's pages: the
+        # restore adopts nothing (bytes come back from Flash), so the
+        # fresh-prompt adoption discount would under-reserve
+        victim.resume_prefill = True
         self.scheduler.evict(victim)
         del self._prefilling[vslot]
+        # NO stats retraction: the adopted/computed tokens round-trip
+        # through Flash byte-exact — nothing is ever recomputed
         self.pool.free_row(vslot)
-        self.cache = T.free_slots(self.cache, jnp.asarray([vslot], jnp.int32))
+        self.eng.stats.spilled_pages += n_pages
+        self.pool.spilled_pages += n_pages
+        self.cache = T.free_slots(self.cache,
+                                  jnp.asarray([vslot], jnp.int32))
 
     def _pick_page_victim(self, exclude: set) -> Optional[Request]:
         """Page pressure: evict the row holding the most DRAM pool pages
@@ -1870,9 +1971,10 @@ class EngineLoop:
         # evicted first).  When the pool still runs dry, cold pages of
         # running rows spill FIRST (the row keeps decoding through the
         # staging reserve — no token of progress is lost), then the
-        # biggest page-holder is preempted wholesale, and only then do
-        # mid-prefill rows restart (cheaper than a Flash round trip,
-        # but it does forfeit their partial prompt work)
+        # biggest page-holder is preempted wholesale, and only then are
+        # mid-prefill rows spilled — they resume from their last chunk
+        # boundary (state-passing chunked prefill), so no prompt work
+        # is ever forfeited
         for slot, req in enumerate(sched.running):
             if req is None or slot in self._prefilling:
                 continue
@@ -1886,7 +1988,7 @@ class EngineLoop:
                             and r.slot in self._prefilling]
                     assert pref, \
                         "pool cannot hold a single request (geometry bug)"
-                    self._restart_prefilling_row(max(
+                    self._spill_prefilling_row(max(
                         pref, key=lambda r: self.pool.pages_held(r.slot)))
                     continue
                 vslot = victim.slot

@@ -243,6 +243,9 @@ class EngineService:
                 # weight residency (PR 8): which stacks stream from Flash
                 # through the DRAM ring, and how well prefetch hides it
                 "weight_streaming": self._weight_stats(),
+                # feature gates the loop resolved OFF at construction —
+                # name -> why (empty when everything requested is live)
+                "disabled_features": dict(s.disabled_features),
             }
 
     def _weight_stats(self) -> dict:

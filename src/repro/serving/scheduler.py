@@ -71,6 +71,11 @@ class Request:
     # DRAM only for the rest (cold pages stay on Flash and are staged on
     # demand), so admission must not charge them
     spilled_flash_pages: int = 0
+    # mid-prefill spill victim awaiting resume: its restore reloads every
+    # page byte-exact from Flash and adopts NOTHING from the prefix
+    # index, so admission must charge the full prompt (no adoption
+    # discount) or two same-step admissions could oversubscribe the pool
+    resume_prefill: bool = False
     # per-request latency stats (wall-clock, filled by EngineLoop)
     arrival_t: float = 0.0
     first_token_t: float = 0.0
@@ -230,8 +235,9 @@ class ContinuousScheduler:
         only for the rest."""
         need = self.pool.pages_for(len(req.context_tokens) + 1)
         if not req.generated:
-            need -= self.pool.probe_admission_discount(
-                req.prompt_tokens, salt=req.adapter or "")
+            if not req.resume_prefill:
+                need -= self.pool.probe_admission_discount(
+                    req.prompt_tokens, salt=req.adapter or "")
         else:
             need -= req.spilled_flash_pages
         return max(need, 0)

@@ -1,0 +1,306 @@
+"""State-passing chunked recurrent prefill.
+
+Acceptance for the chunk-variance fix: a prompt run as ANY 8-aligned
+partition of chunks is bitwise-identical to the whole-prompt pass — at
+the raw mamba/rwkv layer level (entry state in, exit state out) and end
+to end through the paged engine on hybrid (``jamba@tiny``) and
+pure-recurrent (``rwkv6@tiny``) variants; the per-step prefill token
+budget is a hard bound for recurrent stacks; and mid-prefill page-
+pressure victims resume from their last chunk boundary.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import registry
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.runtime import plan as RP
+from repro.serving import engine as E
+from repro.serving import sampling as SM
+from repro.serving.scheduler import Request
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_chunk_schedule_alignment_matches_scan_block():
+    """The engine's chunk schedule and the SSM kernel's fixed sub-block
+    must agree (plan.py keeps no model import, so the constant is
+    duplicated there): every emitted chunk size is SCAN_BLOCK-aligned."""
+    assert S.SCAN_BLOCK == 8
+    cfg = registry.get("jamba-1.5-large-398b@tiny")
+    for req in (8, 13, 64, 100):
+        cap = RP.prefill_chunk_schedule(cfg, req, page_size=16)
+        assert cap % S.SCAN_BLOCK == 0 and cap >= S.SCAN_BLOCK
+    wcfg = registry.reduced(registry.get("gemma3-27b"))
+    # windowed rings additionally bound the chunk to one page
+    assert RP.prefill_chunk_schedule(wcfg, 64, page_size=16) <= 16
+
+
+# ---------------------------------------------------------------------------
+# layer-level partition invariance (property)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _mamba_setup():
+    cfg = registry.reduced(registry.get("jamba-1.5-large-398b"))
+    cfg = dataclasses.replace(cfg, quant=dataclasses.replace(
+        cfg.quant, weight_bits=16, act_bits=16))
+    b = L.ParamBuilder("init", key=KEY, qcfg=cfg.quant)
+    return cfg, S.mamba_params(b, cfg)
+
+
+@functools.lru_cache(maxsize=None)
+def _rwkv_setup():
+    cfg = registry.reduced(registry.get("rwkv6-7b"))
+    cfg = dataclasses.replace(cfg, quant=dataclasses.replace(
+        cfg.quant, weight_bits=16, act_bits=16))
+    b = L.ParamBuilder("init", key=KEY, qcfg=cfg.quant)
+    return cfg, S.rwkv_params(b, cfg)
+
+
+def _partition(rng, T, block=8):
+    """Random chunk sizes: multiples of ``block``, ragged final chunk —
+    exactly the shapes the engine's chunk schedule can emit."""
+    parts, t = [], 0
+    while t < T:
+        c = block * int(rng.integers(1, 4))
+        parts.append(min(c, T - t))
+        t += c
+    return parts
+
+
+def _run_chunked(fn, x, state, parts, block=8):
+    """Feed ``x`` through ``fn`` chunk by chunk, padding each chunk to a
+    ``block`` multiple and threading the carried state — the engine's
+    prefill loop in miniature.  Returns (y, exit_state)."""
+    ys, t = [], 0
+    for c in parts:
+        pad = -c % block
+        xc = x[:, t:t + c]
+        if pad:
+            xc = jnp.concatenate(
+                [xc, jnp.zeros((x.shape[0], pad, x.shape[2]), x.dtype)],
+                axis=1)
+        yc, state = fn(xc, state, c)
+        ys.append(yc[:, :c])
+        t += c
+    return jnp.concatenate(ys, axis=1), state
+
+
+def _assert_state_equal(a, b, label):
+    for k in a:
+        assert np.array_equal(np.asarray(a[k]), np.asarray(b[k])), \
+            (label, k)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_mamba_partition_bitwise_invariant(seed):
+    cfg, p = _mamba_setup()
+    rng = np.random.default_rng(seed)
+    T = 8 * int(rng.integers(2, 7)) + int(rng.integers(0, 8))
+    x = jnp.asarray(rng.normal(size=(2, T, cfg.d_model)), jnp.bfloat16)
+    st0 = S.init_mamba_state(2, cfg)
+    fn = lambda xc, s, c: S.mamba_forward(xc, p, cfg, s, valid_len=c)
+    y_ref, s_ref = _run_chunked(fn, x, st0, [T])       # trivial partition
+    y_plain, _ = S.mamba_forward(x, p, cfg, st0)       # no-pad whole pass
+    assert np.array_equal(np.asarray(y_ref), np.asarray(y_plain))
+    y, s_end = _run_chunked(fn, x, st0, _partition(rng, T))
+    assert np.array_equal(np.asarray(y), np.asarray(y_ref))
+    _assert_state_equal(s_ref, s_end, "mamba")
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_rwkv_partition_bitwise_invariant(seed):
+    cfg, p = _rwkv_setup()
+    rng = np.random.default_rng(seed)
+    T = 8 * int(rng.integers(2, 7)) + int(rng.integers(0, 8))
+    x = jnp.asarray(rng.normal(size=(2, T, cfg.d_model)), jnp.bfloat16)
+    st0 = S.init_rwkv_state(2, cfg)
+    tm = lambda xc, s, c: S.rwkv_time_mix(xc, p, cfg, s, valid_len=c)
+    cm = lambda xc, s, c: S.rwkv_channel_mix(xc, p, cfg, s, valid_len=c)
+    parts = _partition(rng, T)
+    for label, fn in (("time_mix", tm), ("channel_mix", cm)):
+        y_ref, s_ref = _run_chunked(fn, x, st0, [T])
+        y, s_end = _run_chunked(fn, x, st0, parts)
+        assert np.array_equal(np.asarray(y), np.asarray(y_ref)), label
+        _assert_state_equal(s_ref, s_end, label)
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end on recurrent tiny variants
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def jamba_engine(tmp_path_factory):
+    cfg = registry.get("jamba-1.5-large-398b@tiny")
+    return E.build_engine(cfg, max_seq=64,
+                          flash_dir=str(tmp_path_factory.mktemp("jflash")))
+
+
+@pytest.fixture(scope="module")
+def rwkv_engine(tmp_path_factory):
+    cfg = registry.get("rwkv6-7b@tiny")
+    return E.build_engine(cfg, max_seq=64,
+                          flash_dir=str(tmp_path_factory.mktemp("rflash")))
+
+
+def _reference(eng, req):
+    out = eng.generate(
+        [Request(uid=req.uid, prompt_tokens=list(req.prompt_tokens),
+                 max_new_tokens=req.max_new_tokens)],
+        SM.SamplingParams(temperature=0.0,
+                          max_new_tokens=req.max_new_tokens))
+    return out[0].generated
+
+
+def _mk_requests(rng, n, lo=4, hi=40, new=(2, 8)):
+    return [Request(uid=i,
+                    prompt_tokens=list(rng.integers(1, 400,
+                                                    int(rng.integers(lo, hi)))),
+                    max_new_tokens=int(rng.integers(*new)))
+            for i in range(n)]
+
+
+@pytest.mark.parametrize("fix", ["jamba_engine", "rwkv_engine"])
+def test_recurrent_chunked_prefill_bitwise_vs_whole_prompt(fix, request):
+    """The deleted whole-prompt special case, replayed as evidence: every
+    chunk/budget setting yields the same greedy tokens as the dense
+    whole-prompt reference — chunking is invisible to the output."""
+    eng = request.getfixturevalue(fix)
+    rng = np.random.default_rng(7)
+    base = _mk_requests(rng, 3)
+    want = [_reference(eng, r) for r in base]
+    for chunk, budget in ((64, 64), (16, 16), (8, 24)):
+        loop = E.EngineLoop(eng, max_slots=2, prefill_chunk=chunk,
+                            prefill_token_budget=budget)
+        out = loop.run([Request(uid=r.uid,
+                                prompt_tokens=list(r.prompt_tokens),
+                                max_new_tokens=r.max_new_tokens)
+                        for r in base],
+                       SM.SamplingParams(temperature=0.0))
+        loop.close()
+        for r, w in zip(sorted(out, key=lambda r: r.uid), want):
+            assert r.generated == w, (fix, chunk, budget, r.uid)
+
+
+def test_prefill_token_budget_is_hard_for_recurrent_stacks(jamba_engine):
+    """Satellite regression: a long-prompt jamba join advances by at most
+    ``prefill_token_budget`` tokens per engine step — the budget is a
+    hard bound, not a hint (only a budget below one chunk may overshoot,
+    and this one is two chunks)."""
+    budget = 16
+    loop = E.EngineLoop(jamba_engine, max_slots=2, prefill_chunk=8,
+                        prefill_token_budget=budget)
+    rng = np.random.default_rng(5)
+    req = Request(uid=0, prompt_tokens=list(rng.integers(1, 400, 56)),
+                  max_new_tokens=2,
+                  sampling=SM.SamplingParams(temperature=0.0))
+    loop.submit(req)
+    prev = jamba_engine.stats.prefill_tokens
+    steps = 0
+    while not req.done and steps < 200:
+        loop.step()
+        cur = jamba_engine.stats.prefill_tokens
+        assert cur - prev <= budget, "budget overshot on a recurrent stack"
+        prev = cur
+        steps += 1
+    assert req.done
+    loop.close()
+
+
+def test_recurrent_page_pressure_victim_resumes_from_chunk_boundary(
+        jamba_engine):
+    """Tentpole acceptance: a mid-prefill victim on a recurrent stack is
+    spilled (pages + chunk-boundary SSM state) and resumes bitwise —
+    the preempt path no longer restarts the prompt from token 0.  The
+    eviction is driven directly once the victim has a finished chunk, so
+    the resume path is exercised deterministically."""
+    loop = E.EngineLoop(jamba_engine, max_slots=2,
+                        prefill_chunk=8, prefill_token_budget=8)
+    rng = np.random.default_rng(13)
+    sp = SM.SamplingParams(temperature=0.0)
+    a = Request(uid=0, prompt_tokens=list(rng.integers(1, 400, 8)),
+                max_new_tokens=26, sampling=sp)
+    b = Request(uid=1, prompt_tokens=list(rng.integers(1, 400, 30)),
+                max_new_tokens=4, sampling=sp)
+    loop.submit(a)
+    loop.submit(b)
+    for _ in range(50):
+        loop.step()
+        st = next((s for s in loop._prefilling.values()
+                   if s["req"] is b), None)
+        if st is not None and st["next"] > 0:
+            break
+    else:
+        pytest.fail("b never reached a mid-prefill chunk boundary")
+    loop._spill_prefilling_row(b)
+    assert b.preemptions == 1
+    assert b.resume_prefill, "recurrent victims resume, not restart"
+    for _ in range(400):
+        if a.done and b.done:
+            break
+        loop.step()
+    assert a.done and b.done
+    assert not b.resume_prefill
+    for r in (a, b):
+        assert r.generated == _reference(jamba_engine, r), r.uid
+    loop.close()
+
+
+def test_disabled_features_surfaced(jamba_engine):
+    """Silently-resolved gates are named: on a hybrid model both
+    prefix sharing and decode bucketing resolve OFF, with reasons; the
+    chunked-prefill and proactive-spill gates the fix removed are NOT
+    listed (they no longer exist)."""
+    loop = E.EngineLoop(jamba_engine, max_slots=2)
+    feats = loop.disabled_features
+    assert "prefix_sharing" in feats and feats["prefix_sharing"]
+    assert "decode_bucketing" in feats and feats["decode_bucketing"]
+    assert "prefill_chunking" not in feats
+    assert "proactive_spill" not in feats
+    assert jamba_engine.stats.disabled_features == feats
+    assert loop.proactive          # the recurrent exclusion is gone
+    assert loop.prefill_chunk is not None
+    loop.close()
+
+
+@pytest.mark.parametrize("fix", ["jamba_engine", "rwkv_engine"])
+def test_no_recompiles_after_warmup_on_recurrent_variants(fix, request):
+    eng = request.getfixturevalue(fix)
+    loop = E.EngineLoop(eng, max_slots=2, prefill_chunk=16)
+    rep = loop.warmup()
+    assert rep["chunk_sizes"], "chunk grid must be enumerable (no None)"
+    rng = np.random.default_rng(11)
+    loop.run(_mk_requests(rng, 4, lo=3, hi=45),
+             SM.SamplingParams(temperature=0.0))
+    assert eng.stats.recompiles_after_warmup == 0
+    loop.close()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("fix", ["jamba_engine", "rwkv_engine"])
+def test_mixed_trace_24_requests_bitwise_on_recurrent_variants(fix,
+                                                               request):
+    """Acceptance: a mixed 24-request trace (staggered arrivals, slot
+    reuse, chunked joins under a tight budget) through the unified paged
+    step reproduces the dense whole-prompt reference token for token on
+    both recurrent tiny variants."""
+    eng = request.getfixturevalue(fix)
+    rng = np.random.default_rng(4)
+    reqs = _mk_requests(rng, 24, lo=2, hi=40)
+    loop = E.EngineLoop(eng, max_slots=4, prefill_chunk=16,
+                        prefill_token_budget=32)
+    arrivals = [int(a) for a in sorted(rng.integers(0, 30, 24))]
+    out = loop.run(reqs, SM.SamplingParams(temperature=0.0),
+                   arrivals=arrivals)
+    loop.close()
+    for r in out:
+        assert r.generated == _reference(eng, r), (fix, r.uid)

@@ -37,7 +37,7 @@ def test_mamba_chunked_matches_unchunked():
     try:
         S.MAMBA_CHUNK = 10_000
         y_full, s_full = S.mamba_forward(x, p, cfg, st)
-        S.MAMBA_CHUNK = 4
+        S.MAMBA_CHUNK = 8
         y_chunk, s_chunk = S.mamba_forward(x, p, cfg, st)
     finally:
         S.MAMBA_CHUNK = old
